@@ -1,0 +1,47 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, List, Sequence
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+GiB = 1024 ** 3
+MiB = 1024 ** 2
+KiB = 1024
+
+
+def save_json(name: str, payload) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=float))
+    return p
+
+
+def table(title: str, headers: Sequence[str], rows: List[Sequence]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    out = [f"== {title} =="]
+    out.append("  ".join(str(h).rjust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        out.append("  ".join(str(c).rjust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def heatmap(title: str, row_label: str, col_label: str,
+            row_vals, col_vals, grid) -> str:
+    headers = [f"{row_label}\\{col_label}"] + [str(c) for c in col_vals]
+    rows = [[str(r)] + [f"{grid[i][j]:.2f}" for j in range(len(col_vals))]
+            for i, r in enumerate(row_vals)]
+    return table(title, headers, rows)
+
+
+def gib(x: float) -> float:
+    return x / GiB
+
+
+def fmt_rate(bps: float) -> str:
+    return f"{bps / GiB:.2f} GiB/s"

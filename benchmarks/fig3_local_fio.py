@@ -1,0 +1,41 @@
+"""Paper Fig. 3: local FIO (io_uring) NVMe ceilings.
+
+Sweeps jobs x {1 MiB, 4 KiB} x 4 workloads x {1, 4} SSDs through the
+calibrated MVA model and prints the device-ceiling tables the later
+TCP/RDMA results are normalized against.
+"""
+from __future__ import annotations
+
+from benchmarks.common import GiB, KiB, MiB, save_json, table
+from repro.core.fio import WORKLOADS, local_fio
+
+JOBS = (1, 2, 4, 8, 16)
+
+
+def run(verbose: bool = True):
+    payload = {}
+    blocks = []
+    for n_dev in (1, 4):
+        rows_bw, rows_iops = [], []
+        for wl in WORKLOADS:
+            bw = [local_fio(n_dev, MiB, wl, j)[1] / GiB for j in JOBS]
+            io = [local_fio(n_dev, 4 * KiB, wl, j)[0] / 1e3 for j in JOBS]
+            rows_bw.append([wl] + [f"{x:.1f}" for x in bw])
+            rows_iops.append([wl] + [f"{x:.0f}" for x in io])
+            payload[f"{n_dev}ssd/{wl}/1MiB_GiBs"] = bw
+            payload[f"{n_dev}ssd/{wl}/4KiB_kIOPS"] = io
+        blocks.append(table(
+            f"Fig3: local {n_dev} SSD, 1 MiB throughput (GiB/s) vs jobs",
+            ["workload"] + [str(j) for j in JOBS], rows_bw))
+        blocks.append(table(
+            f"Fig3: local {n_dev} SSD, 4 KiB kIOPS vs jobs",
+            ["workload"] + [str(j) for j in JOBS], rows_iops))
+    out = "\n\n".join(blocks)
+    if verbose:
+        print(out)
+    save_json("fig3_local_fio", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

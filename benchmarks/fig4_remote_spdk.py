@@ -1,0 +1,51 @@
+"""Paper Fig. 4: remote SPDK NVMe-oF, TCP vs RDMA, client x server core
+sweep (heatmaps), 1 SSD.
+
+Reproduces the paper's findings: at 1 MiB the transports converge on the
+media/link ceiling; at 4 KiB RDMA delivers far higher IOPS and keeps
+scaling with cores while TCP plateaus on its serialized receive path.
+"""
+from __future__ import annotations
+
+from benchmarks.common import GiB, KiB, MiB, heatmap, save_json
+from repro.core.fio import remote_spdk
+
+CORES = (1, 2, 4, 8, 16)
+
+
+def grid(transport: str, io_size: int, workload: str, as_iops: bool):
+    g = []
+    for cc in CORES:
+        row = []
+        for sc in CORES:
+            ops, bps = remote_spdk(transport, io_size, workload, cc, sc)
+            row.append(ops / 1e3 if as_iops else bps / GiB)
+        g.append(row)
+    return g
+
+
+def run(verbose: bool = True):
+    payload = {}
+    blocks = []
+    for transport in ("tcp", "rdma"):
+        for wl in ("read", "randread", "write", "randwrite"):
+            g1 = grid(transport, MiB, wl, as_iops=False)
+            g4 = grid(transport, 4 * KiB, wl, as_iops=True)
+            payload[f"{transport}/{wl}/1MiB_GiBs"] = g1
+            payload[f"{transport}/{wl}/4KiB_kIOPS"] = g4
+            if wl in ("read", "randread"):
+                blocks.append(heatmap(
+                    f"Fig4: remote SPDK {transport.upper()} {wl} 1 MiB "
+                    f"(GiB/s)", "cli", "srv", CORES, CORES, g1))
+                blocks.append(heatmap(
+                    f"Fig4: remote SPDK {transport.upper()} {wl} 4 KiB "
+                    f"(kIOPS)", "cli", "srv", CORES, CORES, g4))
+    out = "\n\n".join(blocks)
+    if verbose:
+        print(out)
+    save_json("fig4_remote_spdk", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

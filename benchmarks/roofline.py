@@ -1,0 +1,94 @@
+"""Roofline table: per (arch x shape), single-pod 16x16 mesh.
+
+Joins the dry-run artifacts (results/dryrun/*.json — compiled memory
+analysis + parsed per-body collective structure) with the trip-count-aware
+analytic model (repro.roofline.analytic) into the §Roofline table:
+three terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO ratio, and a
+one-line "what would move the dominant term" note per cell.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import save_json, table
+from repro.common.config import SHAPE_BY_NAME, SHAPES, cell_is_runnable
+from repro.configs import ARCHS, get_config
+from repro.launch.dryrun import TRAIN_MICROBATCHES
+from repro.roofline.analytic import (MeshPlan, model_flops_per_step,
+                                     terms_for)
+
+DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+FIX = {
+    "compute": "raise arithmetic intensity (larger per-device microbatch, "
+               "less remat recompute)",
+    "memory": "cut streamed bytes: fuse/quantize optimizer state, widen "
+              "param sharding, batch cache reads",
+    "collective": "shrink wire bytes: overlap AR with compute, "
+                  "reduce-scatter instead of AR, compress grads",
+}
+
+
+def cell(arch: str, shape_name: str, plan: MeshPlan | None = None):
+    shape = SHAPE_BY_NAME[shape_name]
+    cfg = get_config(arch)
+    plan = plan or MeshPlan()
+    nmb = TRAIN_MICROBATCHES.get(arch, 8)
+    t = terms_for(cfg, shape, plan, nmb=nmb)
+    s = t.seconds()
+    mf = model_flops_per_step(cfg, shape)
+    hlo_total = t.flops_dev * plan.n_dev
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "compute_s": s["compute_s"], "memory_s": s["memory_s"],
+        "collective_s": s["collective_s"], "dominant": s["dominant"],
+        "roofline_frac": s["roofline_frac"],
+        "model_flops": mf, "useful_ratio": mf / max(hlo_total, 1.0),
+        "detail": t.detail,
+    }
+    dj = DRYRUN / f"{arch}__{shape_name}__16x16.json"
+    if dj.exists():
+        d = json.loads(dj.read_text())
+        if d.get("ok") and "memory" in d:
+            rec["peak_bytes_dev"] = d["memory"].get("peak_memory_in_bytes")
+            rec["hlo_collective_counts"] = d.get("collective_counts")
+            rec["compile_s"] = d.get("compile_s")
+    return rec
+
+
+def run(verbose: bool = True, multi_pod: bool = False):
+    plan = MeshPlan(dp=32, tp=16) if multi_pod else MeshPlan()
+    rows, payload = [], []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if not cell_is_runnable(arch, shape.name):
+                payload.append({"arch": arch, "shape": shape.name,
+                                "skipped": "full-attention; needs "
+                                           "sub-quadratic mixing"})
+                rows.append([arch, shape.name, "-", "-", "-",
+                             "skipped (quadratic)", "-"])
+                continue
+            r = cell(arch, shape.name, plan)
+            payload.append(r)
+            rows.append([
+                arch, shape.name,
+                f"{r['compute_s'] * 1e3:.2f}", f"{r['memory_s'] * 1e3:.2f}",
+                f"{r['collective_s'] * 1e3:.2f}", r["dominant"],
+                f"{r['roofline_frac']:.2f}",
+            ])
+    mesh_label = "2x16x16" if multi_pod else "16x16"
+    out = table(f"Roofline ({mesh_label}, per step, ms): compute / memory "
+                "/ collective", ["arch", "shape", "comp", "mem", "coll",
+                                 "dominant", "frac"], rows)
+    if verbose:
+        print(out)
+        print("\nfrac = compute_s / max(term): 1.0 means compute-bound "
+              "(at roofline); lower means the dominant term wastes the MXU.")
+    save_json("roofline_2x16x16" if multi_pod else "roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+    run(multi_pod="--multi-pod" in sys.argv)

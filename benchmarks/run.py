@@ -1,0 +1,53 @@
+"""Benchmark harness entrypoint: one benchmark per paper table/figure,
+plus the ingest model, the functional train-ingest run, and the roofline
+table. `PYTHONPATH=src python -m benchmarks.run` runs everything.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig5,ingest,train,roofline")
+    args = ap.parse_args(argv)
+    want = set(args.only.split(",")) if args.only else None
+
+    def sel(name):
+        return want is None or name in want
+
+    t0 = time.time()
+    if sel("fig3"):
+        from benchmarks import fig3_local_fio
+        fig3_local_fio.run()
+        print()
+    if sel("fig4"):
+        from benchmarks import fig4_remote_spdk
+        fig4_remote_spdk.run()
+        print()
+    if sel("fig5"):
+        from benchmarks import fig5_dfs_offload
+        fig5_dfs_offload.run()
+        print()
+    if sel("ingest"):
+        from benchmarks import ingest_model
+        ingest_model.run()
+        print()
+    if sel("train"):
+        from benchmarks import train_ingest
+        train_ingest.run()
+        print()
+    if sel("roofline"):
+        from benchmarks import roofline
+        roofline.run()
+        print()
+    print(f"[benchmarks] all done in {time.time() - t0:.1f}s "
+          f"(JSON in results/bench/)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""End-to-end *functional* ingest benchmark: a real (tiny) training loop
+fed by the real ROS2 loader, across the four (mode x transport) configs.
+
+Unlike figs 3-5 (calibrated model), this moves actual bytes through the
+object store, data plane and DPU rings on this container, and reports
+wall-clock tokens/s plus the loader's stall fraction — demonstrating that
+prefetch through the offloaded client keeps the accelerator fed (stall
+fraction ~0 with prefetch; the paper's design point).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, table
+from repro.common.config import TrainConfig
+from repro.configs import get_config
+from repro.core.client import ROS2Client
+from repro.data.pipeline import ROS2TokenLoader, write_token_shards
+from repro.launch.mesh import make_host_mesh_ctx
+from repro.models.api import ModelAPI
+from repro.models.params import init_params
+from repro.train.optimizer import init_adam
+from repro.train.trainer import make_train_step
+
+STEPS = 8
+BATCH = 4
+SEQ = 128
+
+
+def one_config(mode: str, transport: str, steps: int = STEPS):
+    cfg = get_config("tiny-granite-3-2b")
+    api = ModelAPI(cfg)
+    mctx = make_host_mesh_ctx(cfg)
+    client = ROS2Client(mode=mode, transport=transport)
+    n_tok = (steps + 2) * BATCH * (SEQ + 1) + SEQ + 1
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab, n_tok).astype(np.int32)
+    write_token_shards(client, "/data", toks, shard_tokens=1 << 16)
+    loader = ROS2TokenLoader(client, "/data", global_batch=BATCH,
+                             seq_len=SEQ, prefetch=2)
+    step_fn = jax.jit(make_train_step(api, TrainConfig(lr=1e-3), mctx))
+    params = init_params(api.param_defs(), jax.random.PRNGKey(0),
+                         jnp.dtype(cfg.param_dtype))
+    opt = init_adam(params)
+    # warm up compile outside the timed region
+    b0 = loader.next_batch()
+    params, opt, _ = step_fn(params, opt, b0)
+    loader.stall_s = 0.0
+    t0 = time.time()
+    for _ in range(steps):
+        batch = loader.next_batch()
+        params, opt, metrics = step_fn(params, opt, batch)
+    jax.block_until_ready(metrics["loss"])
+    wall = time.time() - t0
+    m = loader.metrics()
+    stats = client.io.stats
+    out = {
+        "tokens_per_s": steps * BATCH * SEQ / wall,
+        "stall_frac": m["stall_s"] / wall,
+        "wire_bytes": stats.bytes_moved,
+        "copies_per_byte": stats.copy_bytes / max(stats.bytes_moved, 1),
+        "dpu_ops": client.dpu.ops_processed if client.dpu else 0,
+    }
+    loader.close()
+    client.close()
+    return out
+
+
+def run(verbose: bool = True):
+    rows, payload = [], {}
+    for mode in ("host", "dpu"):
+        for transport in ("tcp", "rdma"):
+            r = one_config(mode, transport)
+            payload[f"{mode}/{transport}"] = r
+            rows.append([f"{mode}/{transport}",
+                         f"{r['tokens_per_s']:.0f}",
+                         f"{100 * r['stall_frac']:.1f}%",
+                         f"{r['copies_per_byte']:.2f}",
+                         str(r["dpu_ops"])])
+    out = table("Functional train-ingest (tiny model, real byte path)",
+                ["config", "tok/s", "stall", "copies/byte", "dpu ops"],
+                rows)
+    if verbose:
+        print(out)
+        print("\ncopies/byte: TCP stages through a kernel buffer (2.0); "
+              "RDMA is zero-copy (1.0 — the single NIC-DMA splice).")
+    save_json("train_ingest", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Quickstart: train a tiny LM whose data + checkpoints flow through the
+ROS2 RDMA-first, SmartNIC-offloaded object store.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Everything here is the public API: build a client (DPU-offloaded DFS over
+RDMA), write token shards into the replicated object store, stream batches
+through the data plane, train, checkpoint asynchronously, and print the
+transport counters that show the host stayed off the data path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import TrainConfig
+from repro.configs import get_config
+from repro.core.client import ROS2Client
+from repro.data.pipeline import ROS2TokenLoader, write_token_shards
+from repro.distributed.checkpoint import ROS2CheckpointManager
+from repro.launch.mesh import make_host_mesh_ctx
+from repro.models.api import ModelAPI
+from repro.models.params import init_params
+from repro.train.optimizer import init_adam
+from repro.train.trainer import make_train_step
+
+STEPS, BATCH, SEQ = 20, 4, 64
+
+
+def main():
+    # 1. the storage system: DFS client offloaded to the (simulated)
+    #    BlueField-3, RDMA data plane, 4-SSD replicated DAOS-style store
+    client = ROS2Client(mode="dpu", transport="rdma", n_devices=4)
+
+    # 2. model + data
+    cfg = get_config("tiny-gemma-7b")
+    api = ModelAPI(cfg)
+    mctx = make_host_mesh_ctx(cfg)
+    from repro.launch.train import synth_tokens   # learnable bigram corpus
+    corpus = synth_tokens(cfg.vocab, (STEPS + 2) * BATCH * (SEQ + 1))
+    write_token_shards(client, "/data", corpus)
+    loader = ROS2TokenLoader(client, "/data", global_batch=BATCH,
+                             seq_len=SEQ, prefetch=2)
+
+    # 3. train, checkpointing through the same object store
+    step = jax.jit(make_train_step(api, TrainConfig(lr=1e-3), mctx))
+    params = init_params(api.param_defs(), jax.random.PRNGKey(0))
+    opt = init_adam(params)
+    ckpt = ROS2CheckpointManager(client, "/ckpt")
+    first = last = None
+    for i in range(STEPS):
+        params, opt, m = step(params, opt, loader.next_batch())
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+        if (i + 1) % 10 == 0:
+            ckpt.save(i + 1, {"params": params, "opt": opt})
+            print(f"step {i + 1:3d}  loss {last:.4f}  (checkpoint async)")
+    ckpt.wait()
+
+    # 4. what the paper is about: the data path never touched the host CPU
+    print(f"\nloss: {first:.4f} -> {last:.4f}")
+    print(f"DPU ops processed on the SmartNIC: {client.dpu.ops_processed}")
+    s = client.io.stats
+    print(f"data plane: {s.bytes_moved / 1e6:.1f} MB moved, "
+          f"{s.copy_bytes / max(s.bytes_moved, 1):.2f} copies/byte "
+          f"(RDMA zero-copy), {s.rendezvous} rendezvous / {s.eager} eager")
+    print(f"control plane: {client.control.rpc_count} RPCs, "
+          f"{client.control.rpc_bytes / 1e3:.1f} kB (tiny, by design)")
+    print(f"restore works: step {ckpt.latest_step()} committed")
+    loader.close()
+    client.close()
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

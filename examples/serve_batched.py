@@ -1,0 +1,16 @@
+"""Batched serving example: prompts live in the object store, the engine
+prefills waves of requests and decodes with iteration-level batching.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "tiny-qwen3-14b", "--requests", "8",
+                "--batch", "4", "--prompt-len", "32", "--max-new", "12",
+                "--storage-mode", "dpu", "--transport", "rdma"])
+
+
+if __name__ == "__main__":
+    main()

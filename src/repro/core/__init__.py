@@ -1,0 +1,14 @@
+"""ROS2 core: the paper's contribution as a composable package.
+
+Control plane (sessions/namespace/rkeys), data plane (RDMA zero-copy vs
+TCP two-copy), DAOS-style object store + DFS, SmartNIC offload runtime,
+device-direct placement, and the calibrated MVA performance model.
+"""
+from repro.core.client import ROS2Client                    # noqa: F401
+from repro.core.control_plane import ControlPlane           # noqa: F401
+from repro.core.data_plane import (                         # noqa: F401
+    AccessError, MemoryRegistry, RDMATransport, TCPTransport)
+from repro.core.device_direct import DeviceDirectSink       # noqa: F401
+from repro.core.dfs import DFSClient, DFSMeta               # noqa: F401
+from repro.core.object_store import ObjectStore             # noqa: F401
+from repro.core.smartnic import DPURuntime, InlineCrypto    # noqa: F401

@@ -1,0 +1,263 @@
+"""ROS2Client: the assembled system.
+
+    client = ROS2Client(mode="dpu", transport="rdma", n_devices=4)
+    fd = client.open("/data/shard0", create=True)
+    client.pwrite(fd, payload, 0)
+    data = client.pread(fd, len(payload), 0)
+
+mode="host": the DFS client runs in-process (server-grade CPU).
+mode="dpu":  the DFS client runs on the SmartNIC worker pool; the host only
+             rings doorbells (ROS2Client.submit/poll or the sync wrappers).
+transport:   "rdma" (zero-copy, rkey-checked) or "tcp" (two-copy, segmented).
+
+Perf numbers for any workload come from `stations()` + core.sim.mva — the
+same calibrated model the paper-figure benchmarks use.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import transport_model as tm
+from repro.core.control_plane import ControlPlane
+from repro.core.data_plane import (MemoryRegion, MemoryRegistry,
+                                   RDMATransport, TCPTransport)
+from repro.core.dfs import AKEY, BLOCK, DFSClient, DFSMeta, split_blocks
+from repro.core.media import Device, make_nvme_array, striped_stations
+from repro.core.object_store import ObjectStore
+from repro.core.sim import Station, mva
+from repro.core.smartnic import DPURuntime, InlineCrypto
+
+
+class _ServerIO:
+    """Transport-aware server I/O adapter used by DFSClient."""
+
+    def __init__(self, engine_container, client_registry: MemoryRegistry,
+                 server_registry: MemoryRegistry, transport: str,
+                 tenant: str, control: ControlPlane,
+                 crypto: Optional[InlineCrypto] = None):
+        self.container = engine_container
+        self.creg = client_registry
+        self.sreg = server_registry
+        self.tenant = tenant
+        self.cp = control
+        self.crypto = crypto
+        self.transport_kind = transport
+        # server staging region (bounce buffer) for the engine side
+        self.staging = self.sreg.register(4 * BLOCK, tenant)
+        if transport == "rdma":
+            self.xport = RDMATransport(local=self.creg, remote=self.sreg)
+            # session-scoped capability exchange over the control plane
+            sid = control.rpc("connect", tenant=tenant,
+                              secret=control.tenants[tenant])["session_id"]
+            self._sid = sid
+            r = control.rpc("grant_rkey", session_id=sid,
+                            region_id=self.staging.region_id, perms="rw")
+            self.staging_rkey = r["rkey"]
+        else:
+            self.xport = TCPTransport(local=self.creg, remote=self.sreg)
+            self.staging_rkey = None
+        self._lock = threading.Lock()
+
+    @property
+    def stats(self):
+        return self.xport.stats
+
+    def write(self, oid: int, offset: int, data) -> None:
+        arr = np.frombuffer(bytes(data), np.uint8) if not isinstance(
+            data, np.ndarray) else data
+        obj = self.container.object(oid)
+        with self._lock:
+            pos = 0
+            for b, bo, ln in split_blocks(offset, arr.size):
+                chunk = arr[pos:pos + ln]
+                if self.crypto is not None:
+                    chunk = self.crypto.apply(chunk, nonce=oid * (1 << 20) + b)
+                src = self.creg.register(np.ascontiguousarray(chunk),
+                                         self.tenant)
+                try:
+                    if self.transport_kind == "rdma":
+                        self.xport.write(self.staging_rkey, self.tenant, 0,
+                                         src, 0, ln)
+                    else:
+                        self.xport.write(self.staging, 0, src, 0, ln)
+                    obj.update(str(b), AKEY, bo,
+                               self.staging.buf[:ln].tobytes())
+                finally:
+                    self.creg.deregister(src)
+                pos += ln
+
+    def read_into(self, oid: int, offset: int, size: int,
+                  dst_mr: MemoryRegion, dst_off: int = 0) -> int:
+        """Device-direct read: bytes land straight in the caller's
+        registered region (one splice per block — the 'NIC DMA'), with no
+        intermediate client-side staging copy. This is the GPUDirect-RDMA
+        analogue's transport leg (core.device_direct builds on it)."""
+        obj = self.container.object(oid)
+        with self._lock:
+            pos = 0
+            for b, bo, ln in split_blocks(offset, size):
+                data = obj.fetch(str(b), AKEY, bo, ln)
+                self.staging.buf[:ln] = np.frombuffer(data, np.uint8)
+                if self.crypto is not None:
+                    self.staging.buf[:ln] = self.crypto.apply(
+                        self.staging.buf[:ln], nonce=oid * (1 << 20) + b)
+                if self.transport_kind == "rdma":
+                    self.xport.read(self.staging_rkey, self.tenant, 0,
+                                    dst_mr, dst_off + pos, ln)
+                else:
+                    self.xport.read(self.staging, 0, dst_mr,
+                                    dst_off + pos, ln)
+                pos += ln
+        return size
+
+    def read(self, oid: int, offset: int, size: int) -> bytes:
+        obj = self.container.object(oid)
+        out = np.zeros(size, np.uint8)
+        with self._lock:
+            pos = 0
+            for b, bo, ln in split_blocks(offset, size):
+                data = obj.fetch(str(b), AKEY, bo, ln)
+                self.staging.buf[:ln] = np.frombuffer(data, np.uint8)
+                dst = self.creg.register(ln, self.tenant)
+                try:
+                    if self.transport_kind == "rdma":
+                        self.xport.read(self.staging_rkey, self.tenant, 0,
+                                        dst, 0, ln)
+                    else:
+                        self.xport.read(self.staging, 0, dst, 0, ln)
+                    chunk = dst.buf[:ln]
+                    if self.crypto is not None:
+                        chunk = self.crypto.apply(chunk,
+                                                  nonce=oid * (1 << 20) + b)
+                    out[pos:pos + ln] = chunk
+                finally:
+                    self.creg.deregister(dst)
+                pos += ln
+        return out.tobytes()
+
+
+class ROS2Client:
+    def __init__(self, mode: str = "host", transport: str = "rdma",
+                 n_devices: int = 4, tenant: str = "default",
+                 secret: str = "secret", inline_encryption: bool = False,
+                 replication: int = 2, n_dpu_cores: int = 16):
+        assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
+        self.mode, self.transport = mode, transport
+        # ---- storage server ----
+        self.devices = make_nvme_array(n_devices)
+        self.store = ObjectStore(self.devices)
+        pool = self.store.create_pool("pool0")
+        self.container = pool.create_container("cont0",
+                                               replication=replication)
+        self.server_registry = MemoryRegistry("server")
+        self.control = ControlPlane(self.store, self.server_registry,
+                                    tenants={tenant: secret})
+        self.meta = DFSMeta(self.store)
+        self.control.bind_dfs(self.meta)
+        # ---- client side (host or DPU) ----
+        self.client_registry = MemoryRegistry("dpu" if mode == "dpu"
+                                              else "host")
+        r = self.control.rpc("connect", tenant=tenant, secret=secret)
+        if not r["ok"]:
+            raise PermissionError(r["error"])
+        self.session_id = r["session_id"]
+        crypto = InlineCrypto(0xC0FFEE) if inline_encryption else None
+        self.io = _ServerIO(self.container, self.client_registry,
+                            self.server_registry, transport, tenant,
+                            self.control, crypto)
+        self.dfs = DFSClient(self.control, self.io, self.session_id)
+        self.dfs.mount()
+        self.tenant = tenant
+        self.dpu: Optional[DPURuntime] = None
+        if mode == "dpu":
+            self.dpu = DPURuntime(n_cores=n_dpu_cores)
+            self.dpu.register("read", self.dfs.pread)
+            self.dpu.register("write", self.dfs.pwrite)
+            self.dpu.register("open", self.dfs.open)
+            self.dpu.register("read_into", self.dfs.pread_into)
+            self.dpu.start()
+
+    # ---- POSIX-ish sync API (host launches; DPU executes in dpu mode) ----
+    def _dpu_call(self, op: str, _timeout: float = 120.0, **args):
+        """Doorbell + wait for OUR completion (tag-matched: safe under
+        concurrent callers like the prefetching loader + checkpoint writer;
+        generous timeout because bulk writes ahead of us in the queue may
+        legitimately take tens of seconds)."""
+        tag = self.dpu.submit(op, **args)
+        c = self.dpu.wait_tag(tag, timeout=_timeout)
+        if not c.ok:
+            raise IOError(c.error)
+        return c.result
+
+    def open(self, path: str, create: bool = False) -> int:
+        if self.dpu:
+            return self._dpu_call("open", path=path, create=create)
+        return self.dfs.open(path, create)
+
+    def pwrite(self, fd: int, data, offset: int) -> int:
+        if self.dpu:
+            return self._dpu_call("write", fd=fd, data=bytes(data),
+                                  offset=offset)
+        return self.dfs.pwrite(fd, data, offset)
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        if self.dpu:
+            return self._dpu_call("read", fd=fd, size=size, offset=offset)
+        return self.dfs.pread(fd, size, offset)
+
+    def pread_into(self, fd: int, size: int, offset: int,
+                   dst_mr, dst_off: int = 0) -> int:
+        """Device-direct read into a registered region (no staging copy)."""
+        if self.dpu:
+            return self._dpu_call("read_into", fd=fd, size=size,
+                                  offset=offset, dst_mr=dst_mr,
+                                  dst_off=dst_off)
+        return self.dfs.pread_into(fd, size, offset, dst_mr, dst_off)
+
+    def register_region(self, nbytes: int):
+        """Register a client-side memory region (loader rings, sinks)."""
+        return self.client_registry.register(nbytes, self.tenant)
+
+    # async fan-out (data-loader path)
+    def submit_read(self, fd: int, size: int, offset: int) -> int:
+        if self.dpu:
+            return self.dpu.submit("read", fd=fd, size=size, offset=offset)
+        raise RuntimeError("async API requires dpu mode")
+
+    def poll(self):
+        return self.dpu.poll()
+
+    def mkdir(self, path: str) -> None:
+        self.dfs.mkdir(path)
+
+    def close(self) -> None:
+        if self.dpu:
+            self.dpu.stop()
+
+    # ---- calibrated performance model ----
+    def stations(self, io_size: int, write: bool,
+                 client_cores: Optional[int] = None,
+                 server_cores: int = tm.SRV_CORES_DEFAULT) -> List[Station]:
+        plat = tm.DPU if self.mode == "dpu" else tm.HOST
+        cores = client_cores or plat.n_cores
+        return (tm.client_stations(plat, self.transport, io_size, write,
+                                   cores)
+                + tm.network_stations(io_size)
+                + tm.server_stations(self.transport, io_size, write,
+                                     server_cores)
+                + striped_stations(self.devices, io_size, write))
+
+    def model_throughput(self, io_size: int, write: bool, jobs: int,
+                         iodepth: int = 8, **kw) -> float:
+        """Modeled B/s for a FIO-like closed workload."""
+        x, _ = mva(self.stations(io_size, write, **kw), jobs * iodepth)
+        return x * io_size
+
+    def model_iops(self, io_size: int, write: bool, jobs: int,
+                   iodepth: int = 8, **kw) -> float:
+        x, _ = mva(self.stations(io_size, write, **kw), jobs * iodepth)
+        return x

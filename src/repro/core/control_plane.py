@@ -1,0 +1,123 @@
+"""Control plane: gRPC-style session/namespace/capability service.
+
+Small, latency-insensitive messages only: session setup, authentication,
+mount/open/close, directory ops, capability (rkey) exchange, QoS tokens.
+Bulk data NEVER flows here — tests assert control traffic stays tiny
+relative to the data plane (the paper's design point).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.core.data_plane import AccessError, MemoryRegistry
+from repro.core.object_store import ObjectStore
+
+
+@dataclass
+class Session:
+    session_id: int
+    tenant: str
+    qos_tokens: int = 1 << 20       # ops budget (QoS hook)
+    created_at: float = field(default_factory=time.monotonic)
+
+
+class ControlPlane:
+    """Server-side control-plane service. Call via `rpc(method, **payload)`
+    to mimic a gRPC channel; every call is counted."""
+
+    def __init__(self, store: ObjectStore, registry: MemoryRegistry,
+                 tenants: Optional[Dict[str, str]] = None):
+        self.store = store
+        self.registry = registry
+        self.tenants = tenants or {"default": "secret"}
+        self._sessions: Dict[int, Session] = {}
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self.rpc_count = 0
+        self.rpc_bytes = 0
+
+    # -- transport shim ------------------------------------------------------
+    def rpc(self, method: str, **payload) -> Dict[str, Any]:
+        with self._lock:
+            self.rpc_count += 1
+            self.rpc_bytes += 64 + sum(
+                len(str(v)) for v in payload.values())    # envelope estimate
+        fn = getattr(self, f"rpc_{method}", None)
+        if fn is None:
+            return {"ok": False, "error": f"no method {method}"}
+        try:
+            out = fn(**payload)
+            return {"ok": True, **(out or {})}
+        except (AccessError, KeyError, ValueError) as e:
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    def _session(self, session_id: int) -> Session:
+        s = self._sessions.get(session_id)
+        if s is None:
+            raise AccessError("invalid session")
+        return s
+
+    # -- session / auth --------------------------------------------------
+    def rpc_connect(self, tenant: str, secret: str):
+        if self.tenants.get(tenant) != secret:
+            raise AccessError("authentication failed")
+        s = Session(next(self._ids), tenant)
+        self._sessions[s.session_id] = s
+        return {"session_id": s.session_id}
+
+    def rpc_disconnect(self, session_id: int):
+        self._sessions.pop(session_id, None)
+        return {}
+
+    # -- capability exchange ----------------------------------------------
+    def rpc_grant_rkey(self, session_id: int, region_id: int,
+                       perms: str = "rw", ttl_s: float = 3600.0):
+        s = self._session(session_id)
+        mr = self.registry._regions.get(region_id)
+        if mr is None:
+            raise KeyError(f"no region {region_id}")
+        if mr.tenant != s.tenant:
+            raise AccessError("cannot grant rkey across protection domains")
+        rk = self.registry.grant(mr, perms, ttl_s)
+        return {"rkey": rk.token, "expires_in": ttl_s}
+
+    def rpc_revoke_rkey(self, session_id: int, rkey: str):
+        self._session(session_id)
+        self.registry.revoke(rkey)
+        return {}
+
+    # -- namespace (delegated to DFS metadata) ------------------------------
+    def bind_dfs(self, dfs_meta) -> None:
+        self._dfs = dfs_meta
+
+    def rpc_mount(self, session_id: int, pool: str, container: str):
+        self._session(session_id)
+        return {"mount_id": self._dfs.mount(pool, container)}
+
+    def rpc_lookup(self, session_id: int, path: str):
+        self._session(session_id)
+        return self._dfs.lookup(path)
+
+    def rpc_create(self, session_id: int, path: str, is_dir: bool = False):
+        self._session(session_id)
+        return self._dfs.create(path, is_dir)
+
+    def rpc_unlink(self, session_id: int, path: str):
+        self._session(session_id)
+        return self._dfs.unlink(path)
+
+    def rpc_readdir(self, session_id: int, path: str):
+        self._session(session_id)
+        return {"entries": self._dfs.readdir(path)}
+
+    def rpc_stat(self, session_id: int, path: str):
+        self._session(session_id)
+        return self._dfs.stat(path)
+
+    def rpc_set_size(self, session_id: int, path: str, size: int):
+        self._session(session_id)
+        return self._dfs.set_size(path, size)

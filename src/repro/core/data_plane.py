@@ -1,0 +1,199 @@
+"""Data plane: memory registration + TCP/RDMA transports.
+
+The functional semantics preserve exactly what distinguishes the two
+transports in the paper:
+
+  * RDMA: one-sided. The initiator must hold a valid, unexpired rkey scoped
+    to the target region and tenant (protection domain); bytes then move
+    with a SINGLE copy (memoryview splice — "NIC DMA"), eagerly for small
+    messages and via a rendezvous exchange (RTS/CTS control messages) for
+    bulk, without any target-CPU byte handling.
+  * TCP: two-sided, kernel-mediated. Bytes are segmented into MTU frames and
+    staged through a bounded kernel buffer: TWO copies per byte plus
+    per-segment processing on both ends.
+
+Counters (copies, segments, control messages, bytes) let tests assert these
+semantics; throughput numbers come from the MVA model (core/sim.py), not
+wall-clock.
+"""
+from __future__ import annotations
+
+import secrets
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+MTU = 9000
+EAGER_LIMIT = 16 * 1024
+KERNEL_BUF = 256 * 1024
+
+
+class AccessError(Exception):
+    pass
+
+
+@dataclass
+class MemoryRegion:
+    region_id: int
+    buf: np.ndarray                # uint8
+    tenant: str
+
+    @property
+    def size(self) -> int:
+        return self.buf.size
+
+
+@dataclass
+class RKey:
+    token: str
+    region_id: int
+    tenant: str                    # protection domain
+    perms: str                     # "r", "w", "rw"
+    expires_at: float              # monotonic deadline
+    revoked: bool = False
+
+
+class MemoryRegistry:
+    """Registered regions + scoped rkeys (one per side of the wire)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._regions: Dict[int, MemoryRegion] = {}
+        self._rkeys: Dict[str, RKey] = {}
+        self._next = 1
+        self._lock = threading.Lock()
+
+    def register(self, nbytes_or_buf, tenant: str) -> MemoryRegion:
+        with self._lock:
+            rid = self._next
+            self._next += 1
+        buf = (np.zeros(nbytes_or_buf, np.uint8)
+               if isinstance(nbytes_or_buf, int) else nbytes_or_buf)
+        mr = MemoryRegion(rid, buf, tenant)
+        self._regions[rid] = mr
+        return mr
+
+    def deregister(self, mr: MemoryRegion) -> None:
+        self._regions.pop(mr.region_id, None)
+
+    def grant(self, mr: MemoryRegion, perms: str = "rw",
+              ttl_s: float = 3600.0) -> RKey:
+        rk = RKey(secrets.token_hex(8), mr.region_id, mr.tenant, perms,
+                  time.monotonic() + ttl_s)
+        self._rkeys[rk.token] = rk
+        return rk
+
+    def revoke(self, token: str) -> None:
+        rk = self._rkeys.get(token)
+        if rk:
+            rk.revoked = True
+
+    def resolve(self, token: str, tenant: str, offset: int, size: int,
+                op: str) -> MemoryRegion:
+        rk = self._rkeys.get(token)
+        if rk is None:
+            raise AccessError("unknown rkey")
+        if rk.revoked:
+            raise AccessError("rkey revoked")
+        if time.monotonic() > rk.expires_at:
+            raise AccessError("rkey expired")
+        if rk.tenant != tenant:
+            raise AccessError(
+                f"protection-domain violation: {tenant} != {rk.tenant}")
+        if op not in rk.perms:
+            raise AccessError(f"rkey lacks '{op}' permission")
+        mr = self._regions[rk.region_id]
+        if offset < 0 or offset + size > mr.size:
+            raise AccessError("access outside registered region")
+        return mr
+
+
+@dataclass
+class TransportStats:
+    bytes_moved: int = 0
+    copies: int = 0                # byte-copies performed (per byte counted once)
+    copy_bytes: int = 0
+    segments: int = 0
+    control_msgs: int = 0
+    ops: int = 0
+    rendezvous: int = 0
+    eager: int = 0
+
+
+class RDMATransport:
+    """One-sided verbs-style transport between two registries."""
+
+    def __init__(self, local: MemoryRegistry, remote: MemoryRegistry):
+        self.local = local
+        self.remote = remote
+        self.stats = TransportStats()
+
+    def _splice(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
+                size: int) -> None:
+        dst[do:do + size] = src[so:so + size]     # single copy ("NIC DMA")
+        self.stats.copies += 1
+        self.stats.copy_bytes += size
+        self.stats.bytes_moved += size
+
+    def read(self, rkey: str, tenant: str, roff: int,
+             local_mr: MemoryRegion, loff: int, size: int) -> None:
+        mr = self.remote.resolve(rkey, tenant, roff, size, "r")
+        self.stats.ops += 1
+        if size > EAGER_LIMIT:
+            self.stats.rendezvous += 1
+            self.stats.control_msgs += 2          # RTS/CTS
+        else:
+            self.stats.eager += 1
+        self._splice(mr.buf, roff, local_mr.buf, loff, size)
+
+    def write(self, rkey: str, tenant: str, roff: int,
+              local_mr: MemoryRegion, loff: int, size: int) -> None:
+        mr = self.remote.resolve(rkey, tenant, roff, size, "w")
+        self.stats.ops += 1
+        if size > EAGER_LIMIT:
+            self.stats.rendezvous += 1
+            self.stats.control_msgs += 2
+        else:
+            self.stats.eager += 1
+        self._splice(local_mr.buf, loff, mr.buf, roff, size)
+
+
+class TCPTransport:
+    """Two-copy, segmented, kernel-buffered transport (no rkeys needed —
+    and no protection-domain enforcement either, which is the point)."""
+
+    def __init__(self, local: MemoryRegistry, remote: MemoryRegistry):
+        self.local = local
+        self.remote = remote
+        self.stats = TransportStats()
+        self._kernel_buf = np.zeros(KERNEL_BUF, np.uint8)
+
+    def _stream(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
+                size: int) -> None:
+        sent = 0
+        while sent < size:
+            seg = min(MTU, size - sent, KERNEL_BUF)
+            # copy 1: user -> kernel
+            self._kernel_buf[:seg] = src[so + sent:so + sent + seg]
+            # copy 2: kernel -> user
+            dst[do + sent:do + sent + seg] = self._kernel_buf[:seg]
+            self.stats.copies += 2
+            self.stats.copy_bytes += 2 * seg
+            self.stats.segments += 1
+            sent += seg
+        self.stats.bytes_moved += size
+
+    def read(self, region: MemoryRegion, roff: int, local_mr: MemoryRegion,
+             loff: int, size: int) -> None:
+        self.stats.ops += 1
+        self.stats.control_msgs += 1              # request message
+        self._stream(region.buf, roff, local_mr.buf, loff, size)
+
+    def write(self, region: MemoryRegion, roff: int, local_mr: MemoryRegion,
+              loff: int, size: int) -> None:
+        self.stats.ops += 1
+        self.stats.control_msgs += 1
+        self._stream(local_mr.buf, loff, region.buf, roff, size)

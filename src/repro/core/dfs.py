@@ -1,0 +1,210 @@
+"""DFS: POSIX-compatible file layer over the object store.
+
+Files and directories map to DAOS objects; file data is striped into
+aligned 1 MiB blocks (dkey = block index), directories are name->oid maps.
+Metadata ops travel over the control plane; bulk data over the data plane.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.object_store import Container, ObjectStore, StorageError
+
+BLOCK = 1 << 20                    # 1 MiB DFS striping unit
+AKEY = "data"
+
+
+class DFSError(Exception):
+    pass
+
+
+class DFSMeta:
+    """Server-side namespace service (bound to the control plane)."""
+
+    def __init__(self, store: ObjectStore):
+        self.store = store
+        self._mounts: Dict[int, Container] = {}
+        self._ids = itertools.count(1)
+        self._oids = itertools.count(100)
+        self._lock = threading.Lock()
+        # path metadata: path -> {oid, is_dir, size}
+        self._ns: Dict[str, Dict[str, Any]] = {"/": {"oid": 1, "is_dir": True,
+                                                     "size": 0}}
+        self.container: Optional[Container] = None
+
+    def mount(self, pool: str, container: str) -> int:
+        p = self.store.pools.get(pool) or self.store.create_pool(pool)
+        c = p.containers.get(container) or p.create_container(container)
+        with self._lock:
+            mid = next(self._ids)
+            self._mounts[mid] = c
+            self.container = c
+        return mid
+
+    def _norm(self, path: str) -> str:
+        if not path.startswith("/"):
+            path = "/" + path
+        return path.rstrip("/") or "/"
+
+    def _parent(self, path: str) -> str:
+        return path.rsplit("/", 1)[0] or "/"
+
+    def lookup(self, path: str) -> Dict[str, Any]:
+        path = self._norm(path)
+        with self._lock:
+            ent = self._ns.get(path)
+        if ent is None:
+            raise KeyError(f"ENOENT: {path}")
+        return dict(ent, path=path)
+
+    def create(self, path: str, is_dir: bool = False) -> Dict[str, Any]:
+        path = self._norm(path)
+        parent = self._parent(path)
+        with self._lock:
+            if parent not in self._ns or not self._ns[parent]["is_dir"]:
+                raise KeyError(f"ENOTDIR: {parent}")
+            if path in self._ns:
+                return dict(self._ns[path], path=path)
+            ent = {"oid": next(self._oids), "is_dir": is_dir, "size": 0}
+            self._ns[path] = ent
+        return dict(ent, path=path)
+
+    def unlink(self, path: str) -> Dict[str, Any]:
+        path = self._norm(path)
+        with self._lock:
+            if path not in self._ns:
+                raise KeyError(f"ENOENT: {path}")
+            if self._ns[path]["is_dir"] and any(
+                    p.startswith(path + "/") for p in self._ns):
+                raise ValueError(f"ENOTEMPTY: {path}")
+            self._ns.pop(path)
+        return {}
+
+    def readdir(self, path: str) -> List[str]:
+        path = self._norm(path)
+        pre = path if path != "/" else ""
+        with self._lock:
+            return sorted(p[len(pre) + 1:] for p in self._ns
+                          if p.startswith(pre + "/")
+                          and "/" not in p[len(pre) + 1:])
+
+    def stat(self, path: str) -> Dict[str, Any]:
+        return self.lookup(path)
+
+    def set_size(self, path: str, size: int) -> Dict[str, Any]:
+        path = self._norm(path)
+        with self._lock:
+            ent = self._ns.get(path)
+            if ent is None:
+                raise KeyError(f"ENOENT: {path}")
+            ent["size"] = max(ent["size"], size)
+        return dict(ent)
+
+
+@dataclass
+class FileHandle:
+    fd: int
+    path: str
+    oid: int
+
+
+class DFSClient:
+    """Client-side POSIX-like API. Lives on the host or on the DPU.
+
+    Data flows: client buffer <-> (transport) <-> server staging region <->
+    object store. Metadata flows over the control plane only.
+    """
+
+    def __init__(self, control, io_service, session_id: int):
+        self.cp = control
+        self.io = io_service            # server-side I/O engine adapter
+        self.session_id = session_id
+        self._fds = itertools.count(3)
+        self._open: Dict[int, FileHandle] = {}
+
+    # -- namespace -----------------------------------------------------------
+    def mount(self, pool: str = "pool0", container: str = "cont0") -> int:
+        r = self.cp.rpc("mount", session_id=self.session_id, pool=pool,
+                        container=container)
+        if not r["ok"]:
+            raise DFSError(r["error"])
+        return r["mount_id"]
+
+    def mkdir(self, path: str) -> None:
+        r = self.cp.rpc("create", session_id=self.session_id, path=path,
+                        is_dir=True)
+        if not r["ok"]:
+            raise DFSError(r["error"])
+
+    def open(self, path: str, create: bool = False) -> int:
+        method = "create" if create else "lookup"
+        r = self.cp.rpc(method, session_id=self.session_id, path=path)
+        if not r["ok"]:
+            raise DFSError(r["error"])
+        fd = next(self._fds)
+        self._open[fd] = FileHandle(fd, r["path"], r["oid"])
+        return fd
+
+    def close(self, fd: int) -> None:
+        self._open.pop(fd, None)
+
+    def unlink(self, path: str) -> None:
+        r = self.cp.rpc("unlink", session_id=self.session_id, path=path)
+        if not r["ok"]:
+            raise DFSError(r["error"])
+
+    def readdir(self, path: str) -> List[str]:
+        r = self.cp.rpc("readdir", session_id=self.session_id, path=path)
+        if not r["ok"]:
+            raise DFSError(r["error"])
+        return r["entries"]
+
+    def stat(self, path: str) -> Dict[str, Any]:
+        r = self.cp.rpc("stat", session_id=self.session_id, path=path)
+        if not r["ok"]:
+            raise DFSError(r["error"])
+        return r
+
+    # -- data ------------------------------------------------------------
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        h = self._open.get(fd)
+        if h is None:
+            raise DFSError("EBADF")
+        self.io.write(h.oid, offset, data)
+        self.cp.rpc("set_size", session_id=self.session_id, path=h.path,
+                    size=offset + len(data))
+        return len(data)
+
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        h = self._open.get(fd)
+        if h is None:
+            raise DFSError("EBADF")
+        return self.io.read(h.oid, offset, size)
+
+    def pread_into(self, fd: int, size: int, offset: int,
+                   dst_mr, dst_off: int = 0) -> int:
+        """Zero-copy read into a pre-registered memory region."""
+        h = self._open.get(fd)
+        if h is None:
+            raise DFSError("EBADF")
+        return self.io.read_into(h.oid, offset, size, dst_mr, dst_off)
+
+    def fsync(self, fd: int) -> None:
+        pass                             # updates are durable at extent write
+
+
+def split_blocks(offset: int, size: int) -> List[Tuple[int, int, int]]:
+    """(block_idx, in-block offset, length) covering [offset, offset+size)."""
+    out = []
+    pos = offset
+    end = offset + size
+    while pos < end:
+        b = pos // BLOCK
+        bo = pos - b * BLOCK
+        ln = min(BLOCK - bo, end - pos)
+        out.append((b, bo, ln))
+        pos += ln
+    return out

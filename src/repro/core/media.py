@@ -1,0 +1,114 @@
+"""Storage media: functional block devices + calibrated performance models.
+
+Functional side: an NVMe/SCM device stores real bytes (sparse extent dict)
+and is the backing store for the object store. Performance side: per-device
+service-demand constants calibrated to the paper's Fig. 3 local ceilings:
+
+    1 SSD, 1 MiB: seq/rand read ~5.0-5.6 GiB/s, write ~2.7 GiB/s
+    4 SSD, 1 MiB: read ~20-22 GiB/s, write ~10.6-10.7 GiB/s (linear)
+    4 KiB IOPS:   ~80 K @1 job -> ~600 K @16 jobs, drive-count insensitive
+                  (host submission path limit, not media)
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.sim import GiB, KiB, MiB, Station
+
+
+@dataclass
+class MediaPerf:
+    read_bw: float = 5.6 * GiB          # per-device large-block read B/s
+    write_bw: float = 2.7 * GiB         # per-device large-block write B/s
+    op_latency_s: float = 80e-6         # media access latency (delay station)
+    op_overhead_s: float = 1.0e-6       # per-op media controller cost
+    internal_parallelism: int = 16      # NAND channel concurrency
+
+
+SCM_PERF = MediaPerf(read_bw=30 * GiB, write_bw=20 * GiB,
+                     op_latency_s=2e-6, op_overhead_s=0.2e-6,
+                     internal_parallelism=8)
+
+
+class Device:
+    """A functional block device holding real bytes."""
+
+    def __init__(self, name: str, capacity: int, perf: MediaPerf,
+                 kind: str = "nvme"):
+        self.name = name
+        self.capacity = capacity
+        self.perf = perf
+        self.kind = kind
+        self._blocks: Dict[int, bytes] = {}
+        self._lock = threading.Lock()
+        self.alive = True
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def write(self, key: int, data: bytes) -> None:
+        if not self.alive:
+            raise IOError(f"device {self.name} failed")
+        with self._lock:
+            self._blocks[key] = bytes(data)
+            self.bytes_written += len(data)
+
+    def read(self, key: int) -> bytes:
+        if not self.alive:
+            raise IOError(f"device {self.name} failed")
+        with self._lock:
+            data = self._blocks.get(key)
+            if data is None:
+                raise KeyError(f"{self.name}: no block {key}")
+            self.bytes_read += len(data)
+            return data
+
+    def delete(self, key: int) -> None:
+        with self._lock:
+            self._blocks.pop(key, None)
+
+    def fail(self) -> None:
+        self.alive = False
+
+    def recover(self) -> None:
+        self.alive = True
+
+    def used_bytes(self) -> int:
+        with self._lock:
+            return sum(len(b) for b in self._blocks.values())
+
+    # -- performance model -------------------------------------------------
+    def stations(self, io_size: int, write: bool) -> List[Station]:
+        bw = self.perf.write_bw if write else self.perf.read_bw
+        return [
+            Station(f"{self.name}:xfer", io_size / bw, servers=1),
+            Station(f"{self.name}:ctrl", self.perf.op_overhead_s,
+                    servers=self.perf.internal_parallelism),
+            Station(f"{self.name}:lat", self.perf.op_latency_s, kind="delay"),
+        ]
+
+
+def make_nvme_array(n: int, capacity_per_dev: int = 1600 * GiB) -> List[Device]:
+    return [Device(f"nvme{i}", capacity_per_dev, MediaPerf()) for i in range(n)]
+
+
+def striped_stations(devices: List[Device], io_size: int,
+                     write: bool) -> List[Station]:
+    """I/O striped across an array: aggregate bandwidth, shared latency."""
+    n = max(1, len(devices))
+    p = devices[0].perf
+    bw = (p.write_bw if write else p.read_bw) * n
+    return [
+        Station("ssd:xfer", io_size / bw, servers=1),
+        Station("ssd:ctrl", p.op_overhead_s,
+                servers=p.internal_parallelism * n),
+        Station("ssd:lat", p.op_latency_s, kind="delay"),
+    ]
+
+
+def checksum(data) -> int:
+    """End-to-end extent checksum (DAOS-style). CRC32 on the wire format;
+    the Pallas kernel implements the TPU-side equivalent."""
+    return zlib.crc32(bytes(data)) & 0xFFFFFFFF

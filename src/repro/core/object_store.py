@@ -1,0 +1,208 @@
+"""DAOS-like object store: pools -> containers -> objects with versioned
+extents, end-to-end checksums, replication, failure handling and rebuild.
+
+This is the storage *engine* (server side). It runs entirely in "user
+space" — byte storage on Device objects (media.py), no kernel block layer —
+mirroring DAOS's SPDK/PMDK design. The DFS POSIX layer (dfs.py) maps files
+onto these objects; the client reaches it through the control plane
+(namespace/capability RPCs) and data plane (bulk transfers).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.media import Device, checksum
+
+
+class StorageError(Exception):
+    pass
+
+
+class ChecksumError(StorageError):
+    pass
+
+
+@dataclass
+class Extent:
+    offset: int
+    size: int
+    epoch: int
+    csum: int
+    block_keys: Dict[str, int]      # device_name -> block key (replicas)
+
+
+class DAOSObject:
+    """Key-array object: (dkey, akey) -> versioned extent list."""
+
+    def __init__(self, oid: int, container: "Container"):
+        self.oid = oid
+        self.container = container
+        self._extents: Dict[Tuple[str, str], List[Extent]] = {}
+        self._lock = threading.Lock()
+
+    # -- write ---------------------------------------------------------------
+    def update(self, dkey: str, akey: str, offset: int, data: bytes,
+               epoch: Optional[int] = None) -> int:
+        cont = self.container
+        epoch = cont.next_epoch() if epoch is None else epoch
+        targets = cont.placement(self.oid, dkey)
+        live = [t for t in targets if t.alive]
+        if len(live) < 1:
+            raise StorageError("no live targets for update")
+        csum = checksum(data)
+        keys: Dict[str, int] = {}
+        for dev in live[:cont.replication]:
+            key = cont.store.new_block_key()
+            dev.write(key, data)
+            keys[dev.name] = key
+        ext = Extent(offset, len(data), epoch, csum, keys)
+        with self._lock:
+            self._extents.setdefault((dkey, akey), []).append(ext)
+        return epoch
+
+    # -- read ----------------------------------------------------------------
+    def fetch(self, dkey: str, akey: str, offset: int, size: int,
+              epoch: Optional[int] = None, verify: bool = True) -> bytes:
+        with self._lock:
+            exts = list(self._extents.get((dkey, akey), ()))
+        buf = bytearray(size)
+        # apply extents oldest-epoch-first so newer writes win
+        for ext in sorted(exts, key=lambda e: e.epoch):
+            if epoch is not None and ext.epoch > epoch:
+                continue
+            lo = max(offset, ext.offset)
+            hi = min(offset + size, ext.offset + ext.size)
+            if lo >= hi:
+                continue
+            data = self._read_extent(ext, verify)
+            buf[lo - offset:hi - offset] = data[lo - ext.offset:hi - ext.offset]
+        return bytes(buf)
+
+    def _read_extent(self, ext: Extent, verify: bool) -> bytes:
+        cont = self.container
+        last_err: Optional[Exception] = None
+        for name, key in ext.block_keys.items():
+            dev = cont.store.device(name)
+            if dev is None or not dev.alive:
+                continue
+            try:
+                data = dev.read(key)
+            except Exception as e:     # degraded replica
+                last_err = e
+                continue
+            if verify and checksum(data) != ext.csum:
+                last_err = ChecksumError(f"extent csum mismatch on {name}")
+                continue                # silent-corruption -> next replica
+            return data
+        raise StorageError(f"extent unreadable from all replicas: {last_err}")
+
+    def rebuild(self, failed: str) -> int:
+        """Re-replicate extents that lived on a failed device."""
+        cont = self.container
+        moved = 0
+        with self._lock:
+            all_exts = [e for lst in self._extents.values() for e in lst]
+        for ext in all_exts:
+            if failed not in ext.block_keys:
+                continue
+            data = self._read_extent(ext, verify=True)
+            candidates = [d for d in cont.store.devices
+                          if d.alive and d.name not in ext.block_keys]
+            if not candidates:
+                raise StorageError("no spare target for rebuild")
+            dev = candidates[(ext.csum + moved) % len(candidates)]
+            key = cont.store.new_block_key()
+            dev.write(key, data)
+            ext.block_keys.pop(failed, None)
+            ext.block_keys[dev.name] = key
+            moved += 1
+        return moved
+
+
+class Container:
+    def __init__(self, name: str, pool: "Pool", replication: int = 2):
+        self.name = name
+        self.pool = pool
+        self.store = pool.store
+        self.replication = max(1, min(replication, len(self.store.devices)))
+        self._objects: Dict[int, DAOSObject] = {}
+        self._epoch = itertools.count(1)
+        self._epoch_now = 0
+        self._lock = threading.Lock()
+
+    def next_epoch(self) -> int:
+        with self._lock:
+            self._epoch_now = next(self._epoch)
+            return self._epoch_now
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch_now
+
+    def object(self, oid: int) -> DAOSObject:
+        with self._lock:
+            if oid not in self._objects:
+                self._objects[oid] = DAOSObject(oid, self)
+            return self._objects[oid]
+
+    def placement(self, oid: int, dkey: str) -> List[Device]:
+        """Consistent-hash-style placement over targets."""
+        devs = self.store.devices
+        start = hash((oid, dkey)) % len(devs)
+        return [devs[(start + i) % len(devs)] for i in range(len(devs))]
+
+    def rebuild(self, failed: str) -> int:
+        with self._lock:
+            objs = list(self._objects.values())
+        return sum(o.rebuild(failed) for o in objs)
+
+
+class Pool:
+    def __init__(self, name: str, store: "ObjectStore"):
+        self.name = name
+        self.store = store
+        self.containers: Dict[str, Container] = {}
+
+    def create_container(self, name: str, replication: int = 2) -> Container:
+        c = Container(name, self, replication)
+        self.containers[name] = c
+        return c
+
+
+class ObjectStore:
+    """The DAOS I/O engine's storage core (one per storage server)."""
+
+    def __init__(self, devices: List[Device]):
+        assert devices, "need at least one device"
+        self.devices = devices
+        self.pools: Dict[str, Pool] = {}
+        self._block_keys = itertools.count(1)
+
+    def create_pool(self, name: str) -> Pool:
+        p = Pool(name, self)
+        self.pools[name] = p
+        return p
+
+    def device(self, name: str) -> Optional[Device]:
+        for d in self.devices:
+            if d.name == name:
+                return d
+        return None
+
+    def new_block_key(self) -> int:
+        return next(self._block_keys)
+
+    def fail_device(self, name: str) -> None:
+        d = self.device(name)
+        if d:
+            d.fail()
+
+    def rebuild(self, failed: str) -> int:
+        moved = 0
+        for p in self.pools.values():
+            for c in p.containers.values():
+                moved += c.rebuild(failed)
+        return moved

@@ -1,0 +1,144 @@
+"""SmartNIC (BlueField-3) offload runtime.
+
+The DPU runs the entire DFS client stack on its Arm cores: the host only
+posts submission-queue entries (doorbells) and polls completion-queue
+entries — it never touches the data path (the paper's core design).
+
+Functional model: a pool of worker threads ("Arm cores", 16 by default)
+consumes SQEs from a bounded ring, executes DFS ops (including transport
+and optional inline services: per-tenant encryption + checksum close to the
+NIC), and posts CQEs. Host<->DPU interaction is only ring writes/reads.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+N_ARM_CORES = 16
+
+
+@dataclass
+class SQE:
+    tag: int
+    op: str                         # "read" | "write" | "open" | ...
+    args: Dict[str, Any]
+
+
+@dataclass
+class CQE:
+    tag: int
+    ok: bool
+    result: Any = None
+    error: str = ""
+
+
+class InlineCrypto:
+    """Chacha-like XOR keystream applied on the DPU data path (the Pallas
+    kernel `stream_cipher` is the TPU-side equivalent; this is the oracle)."""
+
+    def __init__(self, key: int):
+        self.key = np.uint64(key or 0x9E3779B97F4A7C15)
+
+    def keystream(self, n: int, nonce: int) -> np.ndarray:
+        # splitmix64 over block counters — vectorized, invertible-free PRF
+        idx = np.arange((n + 7) // 8, dtype=np.uint64)
+        x = (idx + np.uint64(nonce)) * np.uint64(0x9E3779B97F4A7C15) + self.key
+        with np.errstate(over="ignore"):
+            x ^= x >> np.uint64(30)
+            x *= np.uint64(0xBF58476D1CE4E5B9)
+            x ^= x >> np.uint64(27)
+            x *= np.uint64(0x94D049BB133111EB)
+            x ^= x >> np.uint64(31)
+        return x.view(np.uint8)[:n]
+
+    def apply(self, data: np.ndarray, nonce: int) -> np.ndarray:
+        return data ^ self.keystream(data.size, nonce)
+
+
+class DPURuntime:
+    """Worker pool + SQ/CQ rings."""
+
+    def __init__(self, n_cores: int = N_ARM_CORES, sq_depth: int = 1024):
+        self.n_cores = n_cores
+        self.sq: "queue.Queue[Optional[SQE]]" = queue.Queue(sq_depth)
+        self.cq: "queue.Queue[CQE]" = queue.Queue()
+        self._tags = itertools.count(1)
+        self._handlers: Dict[str, Callable[..., Any]] = {}
+        self._workers = []
+        self._started = False
+        self.ops_processed = 0
+        self._lock = threading.Lock()
+        self._claimed: Dict[int, CQE] = {}
+        self._claim_lock = threading.Lock()
+
+    def register(self, op: str, fn: Callable[..., Any]) -> None:
+        self._handlers[op] = fn
+
+    def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        for i in range(self.n_cores):
+            t = threading.Thread(target=self._worker, name=f"arm{i}",
+                                 daemon=True)
+            t.start()
+            self._workers.append(t)
+
+    def _worker(self) -> None:
+        while True:
+            sqe = self.sq.get()
+            if sqe is None:
+                return
+            try:
+                fn = self._handlers[sqe.op]
+                res = fn(**sqe.args)
+                self.cq.put(CQE(sqe.tag, True, res))
+            except Exception as e:   # noqa
+                self.cq.put(CQE(sqe.tag, False, None,
+                                f"{type(e).__name__}: {e}"))
+            with self._lock:
+                self.ops_processed += 1
+
+    # -- host-side API (doorbell + completion polling only) -----------------
+    def submit(self, op: str, **args) -> int:
+        tag = next(self._tags)
+        self.sq.put(SQE(tag, op, args))
+        return tag
+
+    def poll(self, timeout: float = 30.0) -> CQE:
+        return self.cq.get(timeout=timeout)
+
+    def wait_tag(self, tag: int, timeout: float = 30.0) -> CQE:
+        """Wait for a specific completion; safe for concurrent callers
+        (completions claimed for other tags are parked for their owners)."""
+        import time as _time
+        deadline = _time.monotonic() + timeout
+        while _time.monotonic() < deadline:
+            with self._claim_lock:
+                c = self._claimed.pop(tag, None)
+                if c is not None:
+                    return c
+                try:
+                    c = self.cq.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                if c.tag == tag:
+                    return c
+                self._claimed[c.tag] = c
+        raise TimeoutError(f"no completion for tag {tag}")
+
+    def drain(self, n: int, timeout: float = 30.0) -> Dict[int, CQE]:
+        return {c.tag: c for c in (self.poll(timeout) for _ in range(n))}
+
+    def stop(self) -> None:
+        for _ in self._workers:
+            self.sq.put(None)
+        for t in self._workers:
+            t.join(timeout=5)
+        self._workers.clear()
+        self._started = False

@@ -1,0 +1,299 @@
+"""Training data pipeline over the ROS2 client.
+
+This is where the paper's data path meets the training framework: token
+shards live as DFS files in the object store; each data-parallel rank
+streams its sample assignment through the RDMA data plane (optionally from
+the DPU-offloaded client), with
+
+  * background prefetch (bounded queue; overlap storage I/O with compute),
+  * hedged reads for straggler mitigation (duplicate the read against the
+    replicated object store if the primary exceeds a latency budget; first
+    completion wins — the 3FS/loader trick),
+  * deterministic epoch shuffling shared by all ranks (seeded permutation,
+    disjoint per-rank slices),
+  * elastic resharding: when the data-parallel world grows/shrinks, the
+    assignment is recomputed from the next step boundary with full
+    coverage and no duplication,
+  * stall accounting (time `next()` blocks) -> the ingest benchmark's
+    stall fraction.
+
+Sample i covers token range [i*(seq+1), (i+1)*(seq+1)); reads spanning
+shard-file boundaries are split across files.
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+TOKEN_DTYPE = np.int32
+TOKEN_BYTES = 4
+META_FILE = "meta.json"
+
+
+# ---------------------------------------------------------------------------
+# Shard writing (dataset preparation)
+
+
+def write_token_shards(client, root: str, tokens: np.ndarray,
+                       shard_tokens: int = 1 << 20) -> Dict:
+    """Write a token stream as DFS shard files + a meta.json manifest."""
+    tokens = np.ascontiguousarray(tokens, TOKEN_DTYPE)
+    client.mkdir(root)
+    n_shards = (tokens.size + shard_tokens - 1) // shard_tokens
+    for s in range(n_shards):
+        chunk = tokens[s * shard_tokens:(s + 1) * shard_tokens]
+        fd = client.open(f"{root}/shard-{s:05d}", create=True)
+        client.pwrite(fd, chunk.tobytes(), 0)
+    meta = {"total_tokens": int(tokens.size),
+            "shard_tokens": int(shard_tokens),
+            "n_shards": int(n_shards), "dtype": "int32"}
+    fd = client.open(f"{root}/{META_FILE}", create=True)
+    client.pwrite(fd, json.dumps(meta).encode(), 0)
+    return meta
+
+
+def read_meta(client, root: str) -> Dict:
+    fd = client.open(f"{root}/{META_FILE}")
+    size = client.dfs.stat(f"{root}/{META_FILE}")["size"]
+    return json.loads(client.pread(fd, size, 0).decode())
+
+
+# ---------------------------------------------------------------------------
+# Assignment: deterministic shuffle, disjoint rank slices, elastic
+
+
+@dataclass(frozen=True)
+class Assignment:
+    """Which global sample indices rank r reads at step t of an epoch."""
+    n_samples: int
+    global_batch: int
+    dp_rank: int
+    dp_size: int
+    seed: int
+    epoch: int
+
+    def steps_per_epoch(self) -> int:
+        return self.n_samples // self.global_batch
+
+    def local_batch(self) -> int:
+        assert self.global_batch % self.dp_size == 0, \
+            (self.global_batch, self.dp_size)
+        return self.global_batch // self.dp_size
+
+    def perm(self) -> np.ndarray:
+        return np.random.default_rng(
+            (self.seed, self.epoch)).permutation(self.n_samples)
+
+    def samples_for_step(self, step: int) -> np.ndarray:
+        b, lb = self.global_batch, self.local_batch()
+        sl = self.perm()[step * b:(step + 1) * b]
+        return sl[self.dp_rank * lb:(self.dp_rank + 1) * lb]
+
+
+# ---------------------------------------------------------------------------
+# Loader
+
+
+class ROS2TokenLoader:
+    def __init__(self, client, root: str, *, global_batch: int, seq_len: int,
+                 dp_rank: int = 0, dp_size: int = 1, seed: int = 0,
+                 prefetch: int = 2, hedge_timeout_s: Optional[float] = None,
+                 read_delay_hook=None):
+        self.client = client
+        self.root = root
+        self.meta = read_meta(client, root)
+        self.seq_len = seq_len
+        self.sample_tokens = seq_len + 1
+        self.n_samples = self.meta["total_tokens"] // self.sample_tokens
+        self.global_batch = global_batch
+        self.seed = seed
+        self.epoch = 0
+        self.step_in_epoch = 0
+        self.asg = Assignment(self.n_samples, global_batch, dp_rank,
+                              dp_size, seed, 0)
+        self._gen = 0                 # bumped on reshard; stale batches drop
+        self._fds = {
+            s: client.open(f"{root}/shard-{s:05d}")
+            for s in range(self.meta["n_shards"])}
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, prefetch))
+        self._stop = threading.Event()
+        self._reshard_lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=4,
+                                        thread_name_prefix="ros2-loader")
+        self.hedge_timeout_s = hedge_timeout_s
+        self.read_delay_hook = read_delay_hook    # tests: inject stragglers
+        # metrics
+        self.stall_s = 0.0
+        self.read_s = 0.0
+        self.bytes_read = 0
+        self.hedges_issued = 0
+        self.hedges_won = 0
+        self.batches_produced = 0
+        self.read_retries = 0
+        self.last_error = ""
+        self.failed = False
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    MAX_READ_RETRIES = 5
+
+    # -- byte-level read, possibly spanning shards, possibly hedged ---------
+    def _read_span(self, byte_off: int, size: int) -> bytes:
+        st = self.meta["shard_tokens"] * TOKEN_BYTES
+        out = bytearray(size)
+        pos = 0
+        while pos < size:
+            shard = (byte_off + pos) // st
+            so = (byte_off + pos) - shard * st
+            ln = min(st - so, size - pos)
+            out[pos:pos + ln] = self._read_one(shard, so, ln)
+            pos += ln
+        return bytes(out)
+
+    def _read_one(self, shard: int, off: int, ln: int) -> bytes:
+        def attempt(tag: int) -> bytes:
+            if self.read_delay_hook is not None:
+                self.read_delay_hook(shard, off, tag)
+            return self.client.pread(self._fds[shard], ln, off)
+
+        if self.hedge_timeout_s is None:
+            return attempt(0)
+        primary = self._pool.submit(attempt, 0)
+        done, _ = wait([primary], timeout=self.hedge_timeout_s,
+                       return_when=FIRST_COMPLETED)
+        if done:
+            return primary.result()
+        # straggler: hedge against a replica; first completion wins
+        self.hedges_issued += 1
+        backup = self._pool.submit(attempt, 1)
+        done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
+        winner = done.pop()
+        if winner is backup:
+            self.hedges_won += 1
+        return winner.result()
+
+    def _fetch_sample(self, idx: int) -> np.ndarray:
+        off = idx * self.sample_tokens * TOKEN_BYTES
+        size = self.sample_tokens * TOKEN_BYTES
+        t0 = time.monotonic()
+        raw = self._read_span(off, size)
+        self.read_s += time.monotonic() - t0
+        self.bytes_read += size
+        return np.frombuffer(raw, TOKEN_DTYPE)
+
+    # -- producer thread ------------------------------------------------------
+    def _producer(self) -> None:
+        while not self._stop.is_set():
+            with self._reshard_lock:
+                asg, step, gen = self.asg, self.step_in_epoch, self._gen
+                if step >= asg.steps_per_epoch():
+                    self.epoch += 1
+                    self.step_in_epoch = 0
+                    self.asg = Assignment(
+                        self.n_samples, self.global_batch, asg.dp_rank,
+                        asg.dp_size, self.seed, self.epoch)
+                    continue
+                self.step_in_epoch += 1
+            idxs = asg.samples_for_step(step)
+            batch = None
+            for attempt in range(self.MAX_READ_RETRIES):
+                try:
+                    arr = np.stack([self._fetch_sample(int(i))
+                                    for i in idxs])
+                    batch = {"tokens": arr[:, :-1].astype(TOKEN_DTYPE),
+                             "labels": arr[:, 1:].astype(TOKEN_DTYPE)}
+                    break
+                except Exception as e:   # transient storage stall: retry
+                    self.read_retries += 1
+                    self.last_error = repr(e)
+                    time.sleep(min(0.2 * 2 ** attempt, 2.0))
+            if batch is None:
+                # persistent failure — surface to the consumer and stop
+                self.failed = True
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put((gen, step, batch), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+
+    # -- consumer API ---------------------------------------------------------
+    def next_batch(self, timeout: float = 120.0) -> Dict[str, np.ndarray]:
+        t0 = time.monotonic()
+        deadline = t0 + timeout
+        while True:
+            if self.failed:
+                raise IOError(f"loader producer failed after "
+                              f"{self.read_retries} retries: "
+                              f"{self.last_error}")
+            try:
+                gen, step, batch = self._q.get(timeout=0.5)
+            except queue.Empty:
+                if time.monotonic() > deadline:
+                    raise
+                continue
+            if gen == self._gen:          # drop batches from pre-reshard gen
+                break
+        self.stall_s += time.monotonic() - t0
+        self.batches_produced += 1
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    # -- elastic resharding ----------------------------------------------------
+    def reshard(self, dp_rank: int, dp_size: int) -> None:
+        """Hosts joined/left: recompute this rank's assignment from the next
+        step. Global batch is unchanged; coverage stays exact because every
+        rank derives the same seeded permutation."""
+        with self._reshard_lock:
+            a = self.asg
+            self.asg = Assignment(a.n_samples, a.global_batch, dp_rank,
+                                  dp_size, a.seed, a.epoch)
+            self._gen += 1
+        # drop batches already prefetched under the old assignment (any
+        # batch still in flight carries a stale generation tag and is
+        # discarded by next_batch)
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+    def metrics(self) -> Dict[str, float]:
+        return {"stall_s": self.stall_s, "read_s": self.read_s,
+                "bytes_read": float(self.bytes_read),
+                "hedges_issued": float(self.hedges_issued),
+                "hedges_won": float(self.hedges_won),
+                "batches": float(self.batches_produced)}
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5)
+        self._pool.shutdown(wait=False)
+
+
+def coverage_check(n_samples: int, global_batch: int, dp_size: int,
+                   seed: int = 0, epoch: int = 0) -> bool:
+    """All ranks together read each step's global batch exactly once."""
+    per_step: List[np.ndarray] = []
+    asgs = [Assignment(n_samples, global_batch, r, dp_size, seed, epoch)
+            for r in range(dp_size)]
+    steps = asgs[0].steps_per_epoch()
+    seen = []
+    for t in range(steps):
+        got = np.concatenate([a.samples_for_step(t) for a in asgs])
+        if len(np.unique(got)) != global_batch:
+            return False
+        seen.append(got)
+    allseen = np.concatenate(seen)
+    return len(np.unique(allseen)) == steps * global_batch

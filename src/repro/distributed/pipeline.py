@@ -1,0 +1,107 @@
+"""GPipe-style pipeline parallelism over the "pod" mesh axis.
+
+DESIGN.md §4 promises an optional PP wrapper demonstrated on one arch
+(not in the default path): layers are sharded over the `pod` axis
+(n_stages = pod size), microbatches stream through the stages, and
+activations hand off with `lax.ppermute` — the paper-agnostic multi-pod
+schedule mapped onto jax-native collectives instead of NCCL send/recv.
+
+Scope: forward/loss for the dense family, TP disabled inside the pipeline
+(use pods for PP, `data` for DP; `model` stays 1 in the demo mesh). The
+GPipe schedule runs M + S - 1 ticks; stage s is active on tick t for
+microbatch m = t - s. Bubbles compute garbage that the activity mask
+discards — wasted FLOPs in exchange for a deterministic, scan-friendly
+schedule (the standard trade; interleaved 1F1B is the logged next step).
+
+Demonstrated + tested vs the sequential forward in
+tests/test_pipeline_parallel.py (subprocess with 4 host devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as TF
+
+
+def _stage_forward(blocks_local, x, cfg: ModelConfig, positions):
+    """Run this pod's contiguous slice of layers. blocks_local leaves have
+    a leading local stage dim of size 1: (1, per_stage, ...)."""
+    blocks = jax.tree.map(lambda a: a[0], blocks_local)
+
+    def body(h, bp):
+        h, _ = TF._block(h, bp, cfg, None, positions)
+        return h, None
+
+    x, _ = lax.scan(body, x, blocks)
+    return x
+
+
+def gpipe_forward(params, tokens, cfg: ModelConfig, mesh,
+                  n_micro: int) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V), layers pipelined over "pod"."""
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+    assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
+    per = cfg.n_layers // n_stages
+    B, S = tokens.shape
+    assert B % n_micro == 0, (B, n_micro)
+    positions = jnp.arange(S)
+
+    # stack layer params as (n_stages, per, ...) and shard stage dim on pod
+    def restage(a):
+        return a.reshape((n_stages, per) + a.shape[1:])
+
+    staged = jax.tree.map(restage, params["blocks"])
+    stage_spec = jax.tree.map(lambda _: P("pod"), staged)
+
+    def pipeline(staged_local, mbs):
+        """Inside shard_map over ("pod",): staged_local leaves
+        (1, per, ...); mbs (M, B/M, S, D) replicated."""
+        stage = lax.axis_index("pod")
+        M = mbs.shape[0]
+        fwd_pairs = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            buf, outs = carry
+            m = t - stage                      # microbatch index at stage
+            active = jnp.logical_and(m >= 0, m < M)
+            mc = jnp.clip(m, 0, M - 1)
+            x_in = jnp.where(stage == 0, mbs[mc], buf)
+            y = _stage_forward(staged_local, x_in, cfg, positions)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            buf_next = lax.ppermute(y, "pod", fwd_pairs)
+            is_last = stage == n_stages - 1
+            outs = jnp.where(jnp.logical_and(active, is_last),
+                             outs.at[mc].set(y), outs)
+            return (buf_next, outs), None
+
+        buf0 = jnp.zeros_like(mbs[0])
+        outs0 = jnp.zeros_like(mbs)
+        (_, outs), _ = lax.scan(tick, (buf0, outs0),
+                                jnp.arange(M + n_stages - 1))
+        # only the last stage holds real outputs; psum broadcasts them
+        outs = jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs))
+        return lax.psum(outs, "pod")
+
+    x = TF._embed_in(params, tokens, cfg)
+    mbs = x.reshape((n_micro, B // n_micro) + x.shape[1:])
+    fn = jax.shard_map(
+        pipeline, mesh=mesh,
+        in_specs=(stage_spec, P()), out_specs=P(),
+        check_vma=False)
+    h = fn(staged, mbs).reshape(B, S, -1).astype(x.dtype)
+    h = L.rms_norm(h, params["ln_f"], cfg.rms_eps)
+    return TF._unembed(params, h, cfg)
+
+
+def gpipe_loss(params, batch: Dict[str, Any], cfg: ModelConfig, mesh,
+               n_micro: int) -> jax.Array:
+    logits = gpipe_forward(params, batch["tokens"], cfg, mesh, n_micro)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Model-side (assigned-architecture compute):
+  flash_attention — online-softmax attention (causal/local-window/GQA)
+  rglru_scan      — RG-LRU linear recurrence (RecurrentGemma/Griffin)
+  rwkv6_scan      — RWKV6 chunked WKV with data-dependent decay
+
+Storage-side (the paper's DPU inline services, TPU-resident for
+device-direct placement):
+  fletcher        — wide end-to-end extent checksum
+  stream_cipher   — counter-mode inline encryption/decryption
+
+Each kernel directory carries kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper, auto-interpret off-TPU) and ref.py (the
+pure-jnp oracle the tests assert against).
+"""
+from repro.kernels.flash_attention.ops import flash_attention   # noqa: F401
+from repro.kernels.rglru_scan.ops import rglru_scan             # noqa: F401
+from repro.kernels.rwkv6_scan.ops import wkv6                   # noqa: F401
+from repro.kernels.fletcher.ops import fletcher_checksum        # noqa: F401
+from repro.kernels.stream_cipher.ops import stream_cipher       # noqa: F401

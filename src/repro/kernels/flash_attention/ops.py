@@ -1,0 +1,124 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+- pads T/S to block multiples (padding keys masked via seq_k),
+- auto-selects interpret mode on non-TPU backends,
+- differentiable: custom_vjp whose forward is the Pallas forward kernel
+  and whose backward runs the dedicated Pallas dq/dkv kernels
+  (kernel_bwd.py, recompute-from-lse). The softcap case falls back to a
+  jnp-vjp recompute (tanh derivative kept out of the kernels; only the
+  gemma-2 family would use it).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, scale, causal, window, softcap,
+           block_q, block_k, interpret):
+    out, _ = _flash_fwd_impl(q, k, v, scale, causal, window, softcap,
+                             block_q, block_k, interpret)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, window, softcap,
+                    block_q, block_k, interpret):
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    bq = min(block_q, max(8, T))
+    bk = min(block_k, max(8, S))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    out, lse = K.flash_attention_fwd(
+        qp, kp, vp, scale=scale, causal=causal, window=window,
+        softcap=softcap, seq_k=S, block_q=bq, block_k=bk,
+        interpret=interpret)
+    return out[:, :T], lse[:, :, :T]
+
+
+def _flash_vjp_fwd(q, k, v, scale, causal, window, softcap,
+                   block_q, block_k, interpret):
+    out, lse = _flash_fwd_impl(q, k, v, scale, causal, window, softcap,
+                               block_q, block_k, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(scale, causal, window, softcap, block_q, block_k,
+                   interpret, res, dout):
+    q, k, v, out, lse = res
+    if softcap is None:
+        # Pallas backward (dq / dkv kernels, recompute-from-lse)
+        from repro.kernels.flash_attention.kernel_bwd import (
+            flash_attention_bwd)
+        B, T, H, D = q.shape
+        S, KH = k.shape[1], k.shape[2]
+        bq = min(block_q, max(8, T))
+        bk = min(block_k, max(8, S))
+        qp, op, dop = (_pad_to(x, 1, bq) for x in (q, out, dout))
+        kp, vp = _pad_to(k, 1, bk), _pad_to(v, 1, bk)
+        lsep = _pad_to(lse, 2, bq)
+        dq, dk, dv = flash_attention_bwd(
+            qp, kp, vp, op, lsep, dop, scale=scale, causal=causal,
+            window=window, seq_k=S, block_q=bq, block_k=bk,
+            interpret=interpret)
+        dq = dq[:, :T]
+        G = H // KH
+        dk = dk[:, :S].reshape(B, S, KH, G, D).sum(3)    # reduce GQA group
+        dv = dv[:, :S].reshape(B, S, KH, G, D).sum(3)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+    # softcap: tanh derivative not in the kernel — jnp-vjp fallback
+    def f(q_, k_, v_):
+        return R.attention_ref(q_, k_, v_, scale=scale, causal=causal,
+                               window=window, softcap=softcap)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(dout)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: Optional[float] = None, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = K.DEFAULT_BLOCK_Q,
+                    block_k: int = K.DEFAULT_BLOCK_K,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Flash attention. q (B,T,H,D); k,v (B,S,KH,D), H % KH == 0.
+
+    Positions are absolute indices (q token t attends kv tokens <= t);
+    for decode-style q offsets use the jnp path (layers.attention), which
+    supports per-batch kv_len — documented in DESIGN.md.
+    """
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    if interpret is None:
+        interpret = _interpret_default()
+    return _flash(q, k, v, float(scale), bool(causal), window, softcap,
+                  int(block_q), int(block_k), bool(interpret))

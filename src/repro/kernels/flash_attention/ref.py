@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (T, S) score matrix — O(T*S) memory, fine at test
+sizes — and applies exactly the same masking semantics as the kernel:
+causal by absolute position, optional local window, optional logit
+softcap, kv positions >= seq_k masked (padding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: Optional[float] = None, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  seq_k: Optional[int] = None,
+                  return_lse: bool = False):
+    """q (B,T,H,D); k,v (B,S,KH,Dv). Returns (B,T,H,Dv) [, lse (B,H,T)]."""
+    B, T, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D) if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, T, KH, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, kf)          # (B,KH,G,T,S)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if seq_k is not None:
+        mask = mask & (kpos < seq_k)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgts,bskd->bkgtd", p / jnp.maximum(l, 1e-30), vf)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, -1).astype(q.dtype)
+    if return_lse:
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]  # (B,KH,G,T)
+        lse = lse.reshape(B, H, T)
+        return out, lse
+    return out

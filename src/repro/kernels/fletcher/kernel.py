@@ -1,0 +1,75 @@
+"""Fletcher-style wide end-to-end checksum Pallas TPU kernel.
+
+The DAOS-side extent checksums (media.checksum / CRC32 on the storage
+server) have a TPU-resident analogue for device-direct placement: when
+tensor data lands in device memory without host mediation, integrity
+verification must also run on-device. CRC's bit-serial polynomial division
+does not vectorize on the VPU, so we use the standard wide-word Fletcher
+construction over u32 words, which admits a closed-form block decomposition:
+
+    s1 = sum_i w_i                 (mod 2^32)
+    s2 = sum_i (N - i) * w_i       (mod 2^32)
+
+Both sums vectorize perfectly, and a block at base offset p contributes
+    s1 += sum_l w_l
+    s2 += sum_l (N - p - l) * w_l
+so the grid streams u32 blocks HBM->VMEM while two scalar accumulators
+live in scratch. uint32 wraparound gives the mod for free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 2048            # u32 words per grid step
+
+
+def _fletcher_kernel(x_ref, out_ref, acc_scr, *, n_total: int, block: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.uint32)
+
+    w = x_ref[0].astype(jnp.uint32)                       # (block,)
+    base = (i * block).astype(jnp.uint32) if hasattr(
+        i, "astype") else jnp.uint32(i * block)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0]
+    weight = jnp.uint32(n_total) - base - idx.astype(jnp.uint32)
+    # words beyond n_total are zero-padded by the caller; weight*0 = 0 so
+    # padding contributes nothing regardless of its (wrapped) weight.
+    s1 = jnp.sum(w, dtype=jnp.uint32)
+    s2 = jnp.sum(w * weight, dtype=jnp.uint32)
+    acc = acc_scr[...]
+    acc_scr[...] = acc.at[0, 0].add(s1).at[0, 1].add(s2)
+
+    @pl.when(i == n - 1)
+    def _final():
+        out_ref[...] = acc_scr[...]
+
+
+def fletcher_tiles(words: jax.Array, n_total: int, *,
+                   block: int = DEFAULT_BLOCK,
+                   interpret: bool = False) -> jax.Array:
+    """words: u32 (n_blocks, block), zero-padded. Returns (1, 2) u32:
+    [s1, s2] of the first n_total words."""
+    nb, blk = words.shape
+    kern = functools.partial(_fletcher_kernel, n_total=n_total, block=blk)
+    try:
+        params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+    except TypeError:
+        params = None
+    call = pl.pallas_call(
+        kern, grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((1, 2), jnp.uint32)],
+        interpret=interpret,
+        **({"compiler_params": params} if params is not None else {}))
+    return call(words)

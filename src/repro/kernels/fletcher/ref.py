@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Fletcher-wide checksum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fletcher_ref(words: jax.Array) -> jax.Array:
+    """words: u32 (N,). Returns (2,) u32 = [s1, s2] with
+    s1 = sum w_i mod 2^32, s2 = sum (N - i) w_i mod 2^32."""
+    w = words.astype(jnp.uint32)
+    n = w.shape[0]
+    weight = (jnp.uint32(n) - jnp.arange(n, dtype=jnp.uint32))
+    s1 = jnp.sum(w, dtype=jnp.uint32)
+    s2 = jnp.sum(w * weight, dtype=jnp.uint32)
+    return jnp.stack([s1, s2])
+
+
+def fletcher_np(data: bytes) -> int:
+    """numpy cross-check over raw bytes (pads to a u32 multiple); returns
+    the packed 64-bit checksum (s2 << 32) | s1."""
+    buf = np.frombuffer(data, np.uint8)
+    pad = (-buf.size) % 4
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, np.uint8)])
+    w = buf.view(np.uint32).astype(np.uint64)
+    n = w.size
+    s1 = int(w.sum() & 0xFFFFFFFF)
+    weight = (n - np.arange(n, dtype=np.uint64)) & 0xFFFFFFFF
+    s2 = int((w * weight).sum() & 0xFFFFFFFF)
+    return (s2 << 32) | s1

@@ -1,0 +1,100 @@
+"""jit'd public wrapper for the RG-LRU scan kernel.
+
+Pads T and R to block multiples (a=1, b=0 padding keeps the recurrence
+exact across padded rows; padded channels are sliced away), auto-selects
+interpret mode off-TPU, and exposes a differentiable op: the linear
+recurrence has the well-known reverse-mode adjoint
+
+    dh/db reverse scan:  g_t = dout_t + a_{t+1} * g_{t+1}
+    da_t = g_t * h_{t-1},  db_t = g_t,  dh0 = a_1 * g_1
+
+implemented with the same kernel run on the time-reversed sequence — the
+backward pass reuses the forward Pallas kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan import kernel as K
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(n: int, target: int) -> int:
+    for c in (target, 512, 256, 128, 64, 32, 16, 8):
+        if c <= target and n % c == 0 and c <= n:
+            return c
+    return n
+
+
+def _pad_tr(x, bt, br, pad_value):
+    B, T, R = x.shape
+    pt, pr = (-T) % bt, (-R) % br
+    if pt or pr:
+        x = jnp.pad(x, ((0, 0), (0, pt), (0, pr)),
+                    constant_values=pad_value)
+    return x
+
+
+def _scan_padded(a, b, h0, block_t, block_r, interpret):
+    B, T, R = a.shape
+    bt = _pick_block(T, block_t)
+    br = _pick_block(R, block_r)
+    if T % bt or R % br:
+        Tp, Rp = T + ((-T) % bt), R + ((-R) % br)
+        a = _pad_tr(a, bt, br, 1.0)[:, :Tp, :Rp]
+        b = _pad_tr(b, bt, br, 0.0)[:, :Tp, :Rp]
+        h0 = jnp.pad(h0, ((0, 0), (0, Rp - R)))
+    h = K.rglru_scan_tiles(a, b, h0, block_t=bt, block_r=br,
+                           interpret=interpret)
+    return h[:, :T, :R]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _rglru(a, b, h0, block_t, block_r, interpret):
+    return _scan_padded(a, b, h0, block_t, block_r, interpret)
+
+
+def _rglru_fwd(a, b, h0, block_t, block_r, interpret):
+    h = _scan_padded(a, b, h0, block_t, block_r, interpret)
+    return h, (a, h, h0)
+
+
+def _rglru_bwd(block_t, block_r, interpret, res, dout):
+    a, h, h0 = res
+    # reverse adjoint scan g_t = dout_t + a_{t+1} g_{t+1}, realized by the
+    # forward kernel on the time-reversed sequence:
+    #   g_rev_t = a_rev_t * g_rev_{t-1} + dout_rev_t, a_rev = reversed a_next
+    a_next = jnp.concatenate([a[:, 1:], jnp.ones_like(a[:, :1])], axis=1)
+    g = _scan_padded(a_next[:, ::-1], dout[:, ::-1].astype(jnp.float32),
+                     jnp.zeros_like(h0), block_t, block_r, interpret)[:, ::-1]
+    h_prev = jnp.concatenate(
+        [h0.astype(jnp.float32)[:, None], h[:, :-1]], axis=1)
+    da = g * h_prev
+    db = g
+    dh0 = a[:, 0] * g[:, 0]
+    return da.astype(a.dtype), db.astype(a.dtype), dh0.astype(h0.dtype)
+
+
+_rglru.defvjp(_rglru_fwd, _rglru_bwd)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array,
+               h0: Optional[jax.Array] = None, *,
+               block_t: int = K.DEFAULT_BLOCK_T,
+               block_r: int = K.DEFAULT_BLOCK_R,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1. a, b (B,T,R); h0 (B,R)|None."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[:1] + a.shape[2:], jnp.float32)
+    return _rglru(a.astype(jnp.float32), b.astype(jnp.float32),
+                  h0.astype(jnp.float32), int(block_t), int(block_r),
+                  bool(interpret))

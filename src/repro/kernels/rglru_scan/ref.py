@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel: associative scan over T.
+
+Identical math to repro.models.recurrent._lru_scan (the model-side
+implementation) — kept standalone so the kernel test depends only on jnp.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t. a, b (B,T,R) f32; h0 (B,R) or None."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h

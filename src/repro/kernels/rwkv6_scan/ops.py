@@ -1,0 +1,84 @@
+"""jit'd public wrapper for the RWKV6 WKV kernel.
+
+Pads T to a chunk multiple (w=1 padding leaves the state untouched: k=0
+contributes nothing and exp(log 1)=1 decays nothing), auto-selects
+interpret mode off-TPU. Differentiable via recompute through the jnp
+oracle (the sequential adjoint; a Pallas backward is a recorded hillclimb
+candidate).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import kernel as K
+from repro.kernels.rwkv6_scan import ref as R
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _run(r, k, v, w, u, s0, chunk, interpret):
+    B, T, H, hd = r.shape
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    pad = 0
+    if c < 8 and T > 8:                    # degenerate chunk; pad instead
+        c = chunk
+        pad = (-T) % c
+
+    if pad:
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zeros)
+        k = jnp.pad(k, zeros)
+        v = jnp.pad(v, zeros)
+        w = jnp.pad(w, zeros, constant_values=1.0)
+    y, s = K.wkv_chunked_tiles(r, k, v, w, u, s0, chunk=c,
+                               interpret=interpret)
+    return y[:, :T], s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _wkv(r, k, v, w, u, s0, chunk, interpret):
+    return _run(r, k, v, w, u, s0, chunk, interpret)
+
+
+def _wkv_fwd(r, k, v, w, u, s0, chunk, interpret):
+    out = _run(r, k, v, w, u, s0, chunk, interpret)
+    return out, (r, k, v, w, u, s0)
+
+
+def _wkv_bwd(chunk, interpret, res, grads):
+    r, k, v, w, u, s0 = res
+    dy, ds = grads
+
+    def f(r_, k_, v_, w_, u_, s0_):
+        return R.wkv_ref(r_, k_, v_, w_, u_, s0_)
+
+    _, vjp = jax.vjp(f, r, k, v, w, u, s0)
+    return vjp((dy, ds))
+
+
+_wkv.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: Optional[jax.Array] = None, *,
+         chunk: int = K.DEFAULT_CHUNK,
+         interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 time-mix. r,k,v,w (B,T,H,hd); u (H,hd); s0 (B,H,hd,hd)|None.
+    Returns (y (B,T,H,hd) f32, final state (B,H,hd,hd) f32)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    return _wkv(r.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), w.astype(jnp.float32),
+                u.astype(jnp.float32), s0.astype(jnp.float32),
+                int(chunk), bool(interpret))

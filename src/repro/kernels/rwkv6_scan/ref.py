@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel: sequential scan over T.
+
+Same math as repro.models.rwkv.wkv_sequential — kept standalone so the
+kernel test depends only on jnp.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u, s0: Optional[jax.Array] = None):
+    """r,k,v,w (B,T,H,hd); u (H,hd). Returns (y (B,T,H,hd) f32,
+    s_final (B,H,hd,hd) f32)."""
+    B, T, H, hd = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s_init = jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                                    # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]               # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, uf[None, :, :, None] * kv + s)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    s, ys = lax.scan(step, s_init, xs)
+    return ys.transpose(1, 0, 2, 3), s

@@ -1,0 +1,1 @@
+from repro.kernels.stream_cipher.ops import *  # noqa: F401,F403

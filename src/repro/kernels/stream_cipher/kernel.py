@@ -1,0 +1,70 @@
+"""Counter-mode keystream cipher Pallas TPU kernel.
+
+TPU-side analogue of the DPU inline-encryption service (core.smartnic.
+InlineCrypto): with device-direct placement, decrypt must run where the
+bytes land. The DPU oracle uses splitmix64; TPUs have no 64-bit vector
+lanes (DESIGN.md hardware-adaptation notes), so the TPU cipher is the
+32-bit counter-mode variant of the same construction — a murmur3-finalizer
+PRF over (block counter + nonce), XORed into the data stream:
+
+    x   = (idx + nonce) * GOLDEN32 + key
+    x  ^= x >> 16;  x *= 0x85EBCA6B
+    x  ^= x >> 13;  x *= 0xC2B2AE35
+    x  ^= x >> 16
+    out = data ^ x
+
+Fully parallel over u32 words: the grid streams (1, block) tiles through
+VMEM with pure VPU work, so throughput is HBM-bound — the right shape for
+an inline service.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 2048
+GOLDEN32 = 0x9E3779B9
+
+
+def keystream_u32(idx: jax.Array, key: int, nonce: int) -> jax.Array:
+    """The PRF, usable inside and outside the kernel. idx: u32 array."""
+    x = (idx.astype(jnp.uint32) + jnp.uint32(nonce & 0xFFFFFFFF)) \
+        * jnp.uint32(GOLDEN32) + jnp.uint32(key & 0xFFFFFFFF)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _cipher_kernel(x_ref, out_ref, *, key: int, nonce: int, block: int):
+    i = pl.program_id(0)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1).astype(jnp.uint32)
+    idx = idx + (i * block).astype(jnp.uint32)
+    ks = keystream_u32(idx, key, nonce)
+    out_ref[...] = x_ref[...] ^ ks
+
+
+def cipher_tiles(words: jax.Array, key: int, nonce: int, *,
+                 interpret: bool = False) -> jax.Array:
+    """words: u32 (n_blocks, block). Returns XOR-ciphered words (same shape).
+    Involution: applying twice restores the input."""
+    nb, blk = words.shape
+    kern = functools.partial(_cipher_kernel, key=key, nonce=nonce, block=blk)
+    try:
+        params = pltpu.CompilerParams(dimension_semantics=("parallel",))
+    except TypeError:
+        params = None
+    call = pl.pallas_call(
+        kern, grid=(nb,),
+        in_specs=[pl.BlockSpec((1, blk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk), jnp.uint32),
+        interpret=interpret,
+        **({"compiler_params": params} if params is not None else {}))
+    return call(words)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the stream-cipher kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+GOLDEN32 = 0x9E3779B9
+
+
+def cipher_ref(words: jax.Array, key: int, nonce: int) -> jax.Array:
+    """words u32 (N,) -> XOR with the murmur3-finalizer keystream."""
+    idx = jnp.arange(words.shape[0], dtype=jnp.uint32)
+    x = (idx + jnp.uint32(nonce & 0xFFFFFFFF)) * jnp.uint32(GOLDEN32) \
+        + jnp.uint32(key & 0xFFFFFFFF)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return words.astype(jnp.uint32) ^ x

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results are cached as JSON under results/dryrun/.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import (SHAPES, SHAPE_BY_NAME, TrainConfig,
+                                 cell_is_runnable)
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_mesh_ctx
+from repro.models.api import ModelAPI
+from repro.models.params import abstract_params, param_pspecs
+from repro.roofline.hlo import collective_bytes, collective_count
+from repro.train.optimizer import abstract_adam
+from repro.train.trainer import jit_decode_step, jit_prefill_step, jit_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Microbatch counts tuned per §Perf so train_4k activations fit 16 GiB/chip
+# HBM (EXPERIMENTS.md §Perf iteration log records the before/after; the
+# original baseline values are in EXPERIMENTS.md §Dry-run). Value must
+# divide 256 and keep per-microbatch batch divisible by dp (16 or 32).
+TRAIN_MICROBATCHES = {
+    "gemma-7b": 8,
+    "nemotron-4-15b": 16,
+    "qwen3-14b": 16,
+    "granite-3-2b": 16,
+    "llama-3.2-vision-90b": 16,
+    "recurrentgemma-2b": 8,
+    "whisper-tiny": 4,
+    "dbrx-132b": 16,
+    "deepseek-v2-236b": 16,
+    "rwkv6-1.6b": 8,
+}
+
+
+# §Perf hillclimb variants: config transforms measured against the same
+# cell's baseline (EXPERIMENTS.md §Perf). Combine with "+".
+import dataclasses as _dc
+
+VARIANTS = {
+    "save-coll": lambda c: c.replace(remat_policy="save_collectives"),
+    "fp8-dispatch": lambda c: c.replace(
+        moe=_dc.replace(c.moe, dispatch_dtype="float8_e4m3fn")),
+    "kv-fp8": lambda c: c.replace(kv_cache_dtype="float8_e4m3fn"),
+    "cache-seq-shard": lambda c: c.replace(cache_seq_shard=True),
+    "no-remat": lambda c: c.replace(remat=False),
+    "donate": lambda c: c,          # handled in run_cell (jit-level knob)
+    "accum-bf16": lambda c: c,      # handled in run_cell (TrainConfig knob)
+    "params-bf16": lambda c: c.replace(param_dtype="bfloat16"),
+}
+
+
+def apply_variant(cfg, variant: str):
+    """Returns (cfg, nmb_override). Variant "a+b" composes; "nmbN" sets
+    the microbatch count."""
+    nmb = None
+    if not variant:
+        return cfg, nmb
+    for v in variant.split("+"):
+        if v.startswith("nmb"):
+            nmb = int(v[3:])
+        else:
+            cfg = VARIANTS[v](cfg)
+    return cfg, nmb
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool,
+              variant: str = "") -> Path:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    suffix = f"__{variant}" if variant else ""
+    return RESULTS / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             variant: str = "") -> dict:
+    shape = SHAPE_BY_NAME[shape_name]
+    cfg = get_config(arch)
+    cfg, nmb_override = apply_variant(cfg, variant)
+    api = ModelAPI(cfg)
+    mctx = make_mesh_ctx(cfg, multi_pod=multi_pod)
+    mesh = mctx.mesh
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            nmb = nmb_override or TRAIN_MICROBATCHES.get(arch, 8)
+            if nmb_override is None:
+                # microbatch counts are mesh-dependent (EXPERIMENTS §Perf
+                # A6): each microbatch must still shard over all dp ways
+                dp = mctx.dp_size()
+                while nmb > 1 and (shape.global_batch // nmb) % dp != 0:
+                    nmb //= 2
+            adt = ("bfloat16" if variant and "accum-bf16" in variant.split("+")
+                   else "float32")
+            tcfg = TrainConfig(num_microbatches=nmb, accum_dtype=adt)
+            step = jit_train_step(api, tcfg, mctx, shape, donate=True)
+            defs = api.param_defs()
+            a_params = abstract_params(defs, jnp.dtype(cfg.param_dtype))
+            a_opt = abstract_adam(a_params)
+            a_in = api.input_specs(shape)
+            lowered = step.lower(a_params, a_opt, a_in)
+        elif shape.kind == "prefill":
+            step = jit_prefill_step(api, mctx, shape)
+            defs = api.param_defs()
+            a_params = abstract_params(defs, jnp.dtype(cfg.param_dtype))
+            a_in = api.input_specs(shape)
+            lowered = step.lower(a_params, a_in)
+        else:  # decode
+            donate = "donate" in variant.split("+") if variant else False
+            step = jit_decode_step(api, mctx, shape, donate=donate)
+            defs = api.param_defs()
+            a_params = abstract_params(defs, jnp.dtype(cfg.param_dtype))
+            a_in = api.input_specs(shape)
+            lowered = step.lower(a_params, a_in["token"], a_in["pos"],
+                                 a_in["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    hlo = compiled.as_text()
+    cbytes, ckinds = collective_bytes(hlo)
+    ccounts = collective_count(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_per_device": float(cost.get("bytes accessed", -1)),
+        "collective_bytes_per_device": int(cbytes),
+        "collective_breakdown": ckinds,
+        "collective_counts": ccounts,
+        "memory": mem_d,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "n_params": int(cfg.n_params()),
+        "n_active_params": int(cfg.n_active_params()),
+        "ok": True,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="perf variant(s), e.g. save-coll+nmb4")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = [args.multi_pod] if (args.multi_pod or not args.all) else [False, True]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        path = cell_path(arch, shape, mp, args.variant)
+        if path.exists() and not args.force:
+            print(f"[skip-cached] {path.name}")
+            continue
+        if not cell_is_runnable(arch, shape):
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16", "ok": True,
+                   "skipped": "full-attention arch; long_500k requires "
+                              "sub-quadratic sequence mixing (DESIGN.md)"}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[skip-quad ] {path.name}")
+            continue
+        print(f"[lower+comp] {arch} x {shape} x "
+              f"{'2x16x16' if mp else '16x16'}"
+              f"{' x ' + args.variant if args.variant else ''} ...",
+              flush=True)
+        try:
+            rec = run_cell(arch, shape, mp, args.variant)
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"  ok: flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"compile={rec['compile_s']}s", flush=True)
+        except Exception as e:  # noqa
+            failures += 1
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "ok": False, "error": "".join(
+                       traceback.format_exception_only(type(e), e))[-2000:]}
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"  FAIL: {rec['error'][:300]}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS before importing jax to get 512
+host placeholder devices.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.context import MeshCtx, make_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_ctx(cfg, *, multi_pod: bool = False) -> MeshCtx:
+    return MeshCtx(mesh=make_production_mesh(multi_pod=multi_pod),
+                   rules=make_rules(cfg))
+
+
+def make_host_mesh_ctx(cfg, data: int = 1, model: int = 1) -> MeshCtx:
+    """Small mesh over locally available devices (tests, examples)."""
+    n = data * model
+    devs = jax.devices()[:n]
+    mesh = jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=devs)
+    return MeshCtx(mesh=mesh, rules=make_rules(cfg))
+
+
+# TPU v5e hardware constants used by the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_LINK_BW = 50e9                # B/s per link

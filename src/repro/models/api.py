@@ -1,0 +1,225 @@
+"""Unified model API: family dispatch + ShapeDtypeStruct input specs.
+
+Every architecture exposes the same surface:
+    defs        = api.param_defs()
+    loss        = api.loss(params, batch, mctx)
+    out, cache  = api.prefill(params, inputs, mctx)
+    out, cache  = api.decode(params, inputs, cache, mctx)
+    api.input_specs(shape)   -> pytree of ShapeDtypeStruct (no allocation)
+    api.input_pspecs(mctx, shape) -> matching PartitionSpecs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models.context import MeshCtx
+
+DEC_PRIME = 448          # decoder token budget for enc-dec cells
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+
+    # -- dispatch ----------------------------------------------------------
+    @property
+    def _m(self):
+        fam = self.cfg.family
+        if fam in ("dense", "moe"):
+            from repro.models import transformer as m
+        elif fam == "hybrid":
+            from repro.models import recurrent as m
+        elif fam == "ssm":
+            from repro.models import rwkv as m
+        elif fam == "vlm":
+            from repro.models import vlm as m
+        elif fam == "encdec":
+            from repro.models import encdec as m
+        else:
+            raise ValueError(fam)
+        return m
+
+    def param_defs(self):
+        return self._m.param_defs(self.cfg)
+
+    def loss(self, params, batch, mctx: MeshCtx):
+        return self._m.loss_fn(params, batch, self.cfg, mctx)
+
+    def prefill(self, params, inputs: Dict[str, Any], mctx: MeshCtx):
+        cfg, fam = self.cfg, self.cfg.family
+        if fam == "vlm":
+            return self._m.prefill(params, inputs["tokens"],
+                                   inputs["vision_embeds"], cfg, mctx)
+        if fam == "encdec":
+            return self._m.prefill(params, inputs["frames"],
+                                   inputs["tokens"], cfg, mctx)
+        return self._m.prefill(params, inputs["tokens"], cfg, mctx)
+
+    def decode(self, params, inputs: Dict[str, Any], cache, mctx: MeshCtx):
+        return self._m.decode_step(params, inputs["token"], inputs["pos"],
+                                   cache, self.cfg, mctx)
+
+    # -- cache/state specs --------------------------------------------------
+    def cache_specs(self, batch: int, seq_len: int, dtype=None):
+        cfg, fam = self.cfg, self.cfg.family
+        if dtype is None:
+            # KV caches honor cfg.kv_cache_dtype (§Perf fp8 variant);
+            # recurrent/ssm states stay bf16/f32 (O(1)-sized anyway)
+            dtype = (jnp.dtype(cfg.kv_cache_dtype)
+                     if fam in ("dense", "moe", "vlm", "encdec")
+                     else jnp.bfloat16)
+        if fam in ("dense", "moe"):
+            return self._m.cache_spec(cfg, batch, seq_len, dtype)
+        if fam == "hybrid":
+            return self._m.state_spec(cfg, batch, dtype)
+        if fam == "ssm":
+            return self._m.state_spec(cfg, batch, dtype)
+        if fam == "vlm":
+            return self._m.cache_spec(cfg, batch, seq_len, dtype)
+        if fam == "encdec":
+            return self._m.cache_spec(cfg, batch, seq_len,
+                                      cfg.encdec.n_frames, dtype)
+        raise ValueError(fam)
+
+    def cache_pspecs(self, mctx: MeshCtx):
+        cfg, fam = self.cfg, self.cfg.family
+        b = mctx.batch_axes
+        tp = mctx.tp_size()
+
+        def kh(n):
+            return "model" if (tp > 1 and n % tp == 0) else None
+
+        if fam in ("dense", "moe"):
+            if cfg.mla is not None:
+                # MLA's latent cache has no head dim to shard; §Perf variant
+                # shards its sequence dim over "model" instead
+                sq = "model" if (cfg.cache_seq_shard and tp > 1) else None
+                return {"ckv": P(None, b, sq, None),
+                        "krope": P(None, b, sq, None)}
+            heads = kh(cfg.n_kv_heads)
+            # §Perf: if kv heads don't divide tp, optionally shard the cache
+            # sequence dim over "model" instead of replicating (decode mem)
+            sq = "model" if (heads is None and cfg.cache_seq_shard
+                             and tp > 1) else None
+            s = P(None, b, sq, heads, None)
+            return {"k": s, "v": s}
+        if fam == "hybrid":
+            r = cfg.hybrid.d_rnn or cfg.d_model
+            rec = {"h": P(None, None, b, kh(r) and "model"),
+                   "conv": P(None, None, b, None, kh(r) and "model")}
+            out = {"super": {
+                "rec": rec,
+                "attn": {"k": P(None, b, None, kh(cfg.n_kv_heads), None),
+                         "v": P(None, b, None, kh(cfg.n_kv_heads), None),
+                         "kpos": P(None, b, None)}}}
+            from repro.models.recurrent import pattern
+            _, n_tail = pattern(cfg)
+            out["tail"] = ({"h": P(None, b, kh(r) and "model"),
+                            "conv": P(None, b, None, kh(r) and "model")}
+                           if n_tail else None)
+            return out
+        if fam == "ssm":
+            h = (cfg.d_model // cfg.rwkv.head_dim)
+            return {"tmix": {"shift": P(None, b, None),
+                             "s": P(None, b, kh(h), None, None)},
+                    "cmix": {"shift": P(None, b, None)}}
+        if fam == "vlm":
+            heads = kh(cfg.n_kv_heads)
+            sq = "model" if (heads is None and cfg.cache_seq_shard
+                             and tp > 1) else None
+            s = P(None, None, b, sq, heads, None)
+            c = P(None, b, sq, heads, None)
+            return {"self": {"k": s, "v": s}, "cross": {"k": c, "v": c}}
+        if fam == "encdec":
+            heads = kh(cfg.n_kv_heads)
+            sq = "model" if (heads is None and cfg.cache_seq_shard
+                             and tp > 1) else None
+            s = P(None, b, sq, heads, None)
+            return {"self": {"k": s, "v": s}, "cross": {"k": s, "v": s}}
+        raise ValueError(fam)
+
+    # -- input specs ---------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg, fam = self.cfg, self.cfg.family
+        B, S = shape.global_batch, shape.seq_len
+        cdt = jnp.bfloat16
+        if shape.kind == "train":
+            out = {"tokens": _sds((B, S), jnp.int32),
+                   "labels": _sds((B, S), jnp.int32)}
+            if fam == "vlm":
+                out["vision_embeds"] = _sds(
+                    (B, cfg.vlm.n_vision_tokens, cfg.vlm.d_vision), cdt)
+            if fam == "encdec":
+                out = {"frames": _sds((B, S, cfg.d_model), cdt),
+                       "tokens": _sds((B, DEC_PRIME), jnp.int32),
+                       "labels": _sds((B, DEC_PRIME), jnp.int32)}
+            return out
+        if shape.kind == "prefill":
+            out = {"tokens": _sds((B, S), jnp.int32)}
+            if fam == "vlm":
+                out["vision_embeds"] = _sds(
+                    (B, cfg.vlm.n_vision_tokens, cfg.vlm.d_vision), cdt)
+            if fam == "encdec":
+                out = {"frames": _sds((B, S, cfg.d_model), cdt),
+                       "tokens": _sds((B, DEC_PRIME), jnp.int32)}
+            return out
+        # decode: one token against a seq_len-sized cache/state
+        return {"token": _sds((B,), jnp.int32),
+                "pos": _sds((B,), jnp.int32),
+                "cache": self.cache_specs(B, S)}
+
+    def input_pspecs(self, mctx: MeshCtx, shape: ShapeConfig):
+        fam = self.cfg.family
+        b = mctx.batch_axes
+        if shape.kind == "train":
+            out = {"tokens": P(b, None), "labels": P(b, None)}
+            if fam == "vlm":
+                out["vision_embeds"] = P(b, None, None)
+            if fam == "encdec":
+                out["frames"] = P(b, None, None)
+            return out
+        if shape.kind == "prefill":
+            out = {"tokens": P(b, None)}
+            if fam == "vlm":
+                out["vision_embeds"] = P(b, None, None)
+            if fam == "encdec":
+                out["frames"] = P(b, None, None)
+            return out
+        return {"token": P(b), "pos": P(b),
+                "cache": self.cache_pspecs(mctx)}
+
+
+def shardings_for(mesh, specs, pspecs):
+    """NamedShardings for a SDS pytree, degrading non-divisible dims."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(sds, spec):
+        if spec is None:
+            spec = P()
+        parts = []
+        stup = tuple(spec) + (None,) * (len(sds.shape) - len(tuple(spec)))
+        for dim, p in zip(sds.shape, stup):
+            if p is None:
+                parts.append(None)
+                continue
+            axes = tuple(a for a in (p if isinstance(p, (tuple, list)) else (p,))
+                         if a in sizes)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            parts.append((axes if len(axes) > 1 else axes[0])
+                         if (axes and n > 1 and dim % n == 0) else None)
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, specs, pspecs,
+                        is_leaf=lambda x: x is None or isinstance(x, P))

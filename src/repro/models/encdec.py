@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: `input_specs()` supplies
+precomputed frame embeddings (B, n_frames, d_model). Sinusoidal positions,
+pre-LayerNorm, GELU MLPs. Decoder: causal self-attn + cross-attn to the
+encoder output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.context import MeshCtx
+from repro.models.params import pdef
+
+
+def _attn_defs(cfg, n):
+    d = cfg.d_model
+    return {
+        "w_q": pdef((n, d, cfg.n_heads, cfg.head_dim), (None, "fsdp", "heads", None)),
+        "w_k": pdef((n, d, cfg.n_kv_heads, cfg.head_dim), (None, "fsdp", "kv_heads", None)),
+        "w_v": pdef((n, d, cfg.n_kv_heads, cfg.head_dim), (None, "fsdp", "kv_heads", None)),
+        "w_o": pdef((n, cfg.n_heads, cfg.head_dim, d), (None, "heads", None, "fsdp")),
+    }
+
+
+def _mlp_defs(cfg, n):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": pdef((n, d, f), (None, "fsdp", "mlp")),
+        "b_in": pdef((n, f), (None, "mlp"), "zeros"),
+        "w_out": pdef((n, f, d), (None, "mlp", "fsdp")),
+        "b_out": pdef((n, d), (None, None), "zeros"),
+    }
+
+
+def _ln(n, d, name):
+    return {f"{name}_w": pdef((n, d), (None, None), "ones"),
+            f"{name}_b": pdef((n, d), (None, None), "zeros")}
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    ne = cfg.encdec.n_enc_layers
+    nd = cfg.n_layers
+    d = cfg.d_model
+    enc = {"attn": _attn_defs(cfg, ne), "mlp": _mlp_defs(cfg, ne),
+           **_ln(ne, d, "ln1"), **_ln(ne, d, "ln2")}
+    dec = {"self_attn": _attn_defs(cfg, nd), "cross_attn": _attn_defs(cfg, nd),
+           "mlp": _mlp_defs(cfg, nd),
+           **_ln(nd, d, "ln1"), **_ln(nd, d, "ln2"), **_ln(nd, d, "ln3")}
+    return {
+        "embed": pdef((cfg.vocab, d), ("vocab", "fsdp"), "embed"),
+        "enc": enc,
+        "dec": dec,
+        "ln_enc_w": pdef((d,), (None,), "ones"),
+        "ln_enc_b": pdef((d,), (None,), "zeros"),
+        "ln_dec_w": pdef((d,), (None,), "ones"),
+        "ln_dec_b": pdef((d,), (None,), "zeros"),
+    }
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _proj(x, w):
+    return jnp.einsum("btd,dhk->bthk", x, w.astype(x.dtype))
+
+
+def _mha(x, p, positions=None, kv=None, causal=True, cache=None, pos=None):
+    """Self- or cross-attention. kv: encoder output for cross."""
+    cdt = x.dtype
+    q = _proj(x, p["w_q"])
+    if kv is not None:                       # cross: static precomputable k/v
+        k, v = kv
+        out = L.cross_attention(q, k, v)
+        new_cache = None
+    elif cache is None:                      # causal self-attn (train/prefill)
+        k, v = _proj(x, p["w_k"]), _proj(x, p["w_v"])
+        out = L.attention(q, k, v, q_positions=positions,
+                          kv_positions=positions, causal=causal)
+        new_cache = {"k": k, "v": v}
+    else:                                    # decode
+        k, v = _proj(x, p["w_k"]), _proj(x, p["w_v"])
+        B = x.shape[0]
+        ck = cache["k"].at[jnp.arange(B), pos].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[jnp.arange(B), pos].set(v[:, 0].astype(cache["v"].dtype))
+        S = ck.shape[1]
+        out = L.attention(q, ck.astype(cdt), cv.astype(cdt),
+                          q_positions=jnp.zeros((1,), jnp.int32),
+                          kv_positions=jnp.arange(S), causal=False,
+                          kv_len=pos + 1, chunk=S)
+        new_cache = {"k": ck, "v": cv}
+    return jnp.einsum("bthk,hkd->btd", out, p["w_o"].astype(cdt)), new_cache
+
+
+def _mlp(x, p):
+    cdt = x.dtype
+    h = jax.nn.gelu(x @ p["w_in"].astype(cdt) + p["b_in"].astype(cdt),
+                    approximate=True)
+    return h @ p["w_out"].astype(cdt) + p["b_out"].astype(cdt)
+
+
+def encode(params, frames, cfg: ModelConfig, mctx):
+    """frames (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt)
+    F = x.shape[1]
+    x = x + _sinusoid(jnp.arange(F), cfg.d_model).astype(cdt)
+
+    def body(h, bp):
+        a, _ = _mha(L.layer_norm(h, bp["ln1_w"], bp["ln1_b"]), bp["attn"],
+                    positions=jnp.arange(F), causal=False)
+        h = h + a
+        h = h + _mlp(L.layer_norm(h, bp["ln2_w"], bp["ln2_b"]), bp["mlp"])
+        if mctx is not None:
+            h = mctx.constraint(h, mctx.batch_spec(None, None))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["enc"])
+    return L.layer_norm(x, params["ln_enc_w"], params["ln_enc_b"])
+
+
+def _decoder(params, tokens, enc_out, cfg, mctx, collect_cache=False,
+             cache=None, pos=None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    T = tokens.shape[1]
+    positions = jnp.arange(T) if pos is None else pos[:, None]
+    x = x + _sinusoid(positions, cfg.d_model).astype(cdt)
+
+    def body(h, xs):
+        if cache is not None:
+            bp, c_self, c_cross = xs
+        else:
+            bp, c_self, c_cross = xs, None, None
+        a, new_self = _mha(L.layer_norm(h, bp["ln1_w"], bp["ln1_b"]),
+                           bp["self_attn"], positions=jnp.arange(T),
+                           cache=c_self, pos=pos)
+        h = h + a
+        if cache is not None:
+            kv = (c_cross["k"].astype(cdt), c_cross["v"].astype(cdt))
+            new_cross = c_cross
+        else:
+            kv = (_proj(enc_out, bp["cross_attn"]["w_k"]),
+                  _proj(enc_out, bp["cross_attn"]["w_v"]))
+            new_cross = {"k": kv[0], "v": kv[1]}
+        a, _ = _mha(L.layer_norm(h, bp["ln2_w"], bp["ln2_b"]),
+                    bp["cross_attn"], kv=kv)
+        h = h + a
+        h = h + _mlp(L.layer_norm(h, bp["ln3_w"], bp["ln3_b"]), bp["mlp"])
+        if mctx is not None:
+            h = mctx.constraint(h, mctx.batch_spec(None, None))
+        out = None
+        if collect_cache:
+            out = {"self": new_self, "cross": new_cross}
+        elif cache is not None:
+            out = {"self": new_self, "cross": new_cross}
+        return h, out
+
+    if cache is not None:
+        x, new_caches = lax.scan(body, x, (params["dec"], cache["self"], cache["cross"]))
+    else:
+        b = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+            if cfg.remat else body
+        x, new_caches = lax.scan(b, x, params["dec"])
+    x = L.layer_norm(x, params["ln_dec_w"], params["ln_dec_b"])
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))
+    if mctx is not None:
+        logits = mctx.constraint(logits, mctx.batch_spec(None, "model"))
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, mctx):
+    enc_out = encode(params, batch["frames"], cfg, mctx)
+    logits, _ = _decoder(params, batch["tokens"], enc_out, cfg, mctx)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, n_frames: int,
+               dtype=jnp.bfloat16):
+    nd = cfg.n_layers
+    kv = (cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "self": {"k": jax.ShapeDtypeStruct((nd, batch, max_len) + kv, dtype),
+                 "v": jax.ShapeDtypeStruct((nd, batch, max_len) + kv, dtype)},
+        "cross": {"k": jax.ShapeDtypeStruct((nd, batch, n_frames) + kv, dtype),
+                  "v": jax.ShapeDtypeStruct((nd, batch, n_frames) + kv, dtype)},
+    }
+
+
+def prefill(params, frames, tokens, cfg, mctx):
+    """Encode + decoder pass collecting caches."""
+    enc_out = encode(params, frames, cfg, mctx)
+    logits, caches = _decoder(params, tokens, enc_out, cfg, mctx,
+                              collect_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(params, token, pos, cache, cfg, mctx):
+    logits, new_cache = _decoder(params, token[:, None], None, cfg, mctx,
+                                 cache=cache, pos=pos)
+    return logits[:, 0], new_cache

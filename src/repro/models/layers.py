@@ -1,0 +1,209 @@
+"""Shared layer library: norms, rotary, attention variants, MLPs, losses.
+
+All functions are pure jnp (compile-friendly for the 512-device dry-run);
+the Pallas kernels in repro.kernels provide TPU-optimized versions of the
+hot spots with these as oracles.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * lax.rsqrt(var + eps)).astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+
+def rope_freqs(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., T, H, D); cos/sin (T, D//2) or broadcastable."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    # broadcast cos/sin over head dim: (T, d2) -> (T, 1, d2)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+#
+# q: (B, T, H, D);  k, v: (B, S, KH, D), H % KH == 0 (GQA group G = H // KH).
+# Causal/local masking by absolute positions. Chunked online-softmax over the
+# KV axis keeps peak memory at B*H*T*chunk for long prefill.
+
+
+def _pick_chunk(s: int, target: int = 1024) -> int:
+    for c in (target, 512, 256, 128, 64):
+        if s % c == 0 and c <= s:
+            return c
+    return s
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_positions: jax.Array,
+              kv_positions: jax.Array,
+              causal: bool = True,
+              window: Optional[int] = None,
+              kv_len: Optional[jax.Array] = None,
+              softmax_scale: Optional[float] = None,
+              chunk: Optional[int] = None,
+              logit_softcap: Optional[float] = None,
+              impl: str = "jnp") -> jax.Array:
+    """Grouped-query attention with online softmax over KV chunks.
+
+    kv_len: optional dynamic valid-length of the kv cache (decode).
+    window: local attention window (positions within [qpos-window+1, qpos]).
+    impl="flash" dispatches to the Pallas kernel when the call is a plain
+    self-attention (absolute arange positions, no dynamic kv_len, D==Dv) —
+    the shape served by train/prefill; decode keeps the jnp path.
+    Returns (B, T, H, D).
+    """
+    B, T, H, D = q.shape
+    if (impl == "flash" and kv_len is None and v.shape[-1] == D
+            and T == k.shape[1]):
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, scale=softmax_scale, causal=causal,
+                               window=window, softcap=logit_softcap)
+    S, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                      # may differ from D (e.g. MLA)
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, T, KH, G, D) * jnp.asarray(scale, q.dtype)
+
+    csize = chunk or _pick_chunk(S)
+    n_chunks = S // csize
+    assert n_chunks * csize == S, (S, csize)
+
+    neg = jnp.asarray(-1e30, jnp.float32)
+
+    def kv_chunk(i):
+        ks = lax.dynamic_slice_in_dim(k, i * csize, csize, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, i * csize, csize, axis=1)
+        ps = lax.dynamic_slice_in_dim(kv_positions, i * csize, csize, axis=0)
+        return ks, vs, ps
+
+    def block(carry, i):
+        m, l, acc = carry
+        ks, vs, ps = kv_chunk(i)
+        # scores: (B, KH, G, T, C)
+        s = jnp.einsum("btkgd,bskd->bkgts", qg, ks,
+                       preferred_element_type=jnp.float32)
+        if logit_softcap:
+            s = jnp.tanh(s / logit_softcap) * logit_softcap
+        mask = jnp.ones((T, csize), bool)
+        if causal:
+            mask &= ps[None, :] <= q_positions[:, None]
+        if window is not None:
+            mask &= ps[None, :] > q_positions[:, None] - window
+        m_full = mask[None, None, None]            # (1,1,1,T,C)
+        if kv_len is not None:
+            idx = i * csize + jnp.arange(csize)
+            valid = idx[None, :] < jnp.reshape(kv_len, (-1, 1))  # (B or 1, C)
+            m_full = m_full & valid[:, None, None, None, :]
+        s = jnp.where(m_full, s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", p.astype(vs.dtype), vs,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, T), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, T), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, T, Dv), jnp.float32)
+    if n_chunks == 1:
+        (m, l, acc), _ = block((m0, l0, a0), 0)
+    else:
+        (m, l, acc), _ = lax.scan(block, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B, KH, G, T, Dv) -> (B, T, KH, G, Dv) -> (B, T, H, Dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, Dv).astype(q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    softmax_scale: Optional[float] = None) -> jax.Array:
+    """Unmasked attention (encoder-decoder / vision cross-attn)."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    return attention(
+        q, k, v,
+        q_positions=jnp.zeros((T,), jnp.int32),
+        kv_positions=jnp.zeros((S,), jnp.int32),
+        causal=False, softmax_scale=softmax_scale)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+def mlp(x: jax.Array, p: dict, act: str) -> jax.Array:
+    """Dense MLP. Param names: swiglu/geglu -> w_gate,w_up,w_down;
+    relu2/gelu -> w_in,w_out."""
+    if act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)) * u
+        return h @ p["w_down"]
+    h = x @ p["w_in"]
+    if act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Stable mean cross-entropy. logits (..., V) any dtype; reduce in f32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers
+
+def cache_update(cache_k: jax.Array, cache_v: jax.Array,
+                 k: jax.Array, v: jax.Array, pos: jax.Array):
+    """Write k,v (B, t, KH, D) into caches at position pos (scalar)."""
+    ck = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    return ck, cv

@@ -1,0 +1,176 @@
+"""Parameter-definition framework.
+
+Models declare parameters as nested dicts of `ParamDef(shape, axes, init)`
+where `axes` are *logical* axis names. A rules table maps logical axes to
+mesh axes, producing a PartitionSpec pytree that mirrors the param pytree.
+Sharding falls back to replication whenever a dim is not divisible by the
+mesh-axis size (handles MQA kv=1, whisper's 51865 vocab, 10-head attn, ...).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Axes                       # logical axis name per dim (None = replicated)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: Optional[float] = None    # overrides fan-in scaling
+
+
+def pdef(shape: Sequence[int], axes: Sequence[Optional[str]], init: str = "normal",
+         scale: Optional[float] = None) -> ParamDef:
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    assert len(shape) == len(axes), (shape, axes)
+    return ParamDef(shape, axes, init, scale)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape) * 0.02).astype(dtype)
+    # fan-in scaled normal over the last-but-one dim (input dim)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape) * scale).astype(dtype)
+
+
+def is_paramdef(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: Dict[str, Any], rng: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamDef pytree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_paramdef)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(defs: Dict[str, Any], dtype=jnp.float32):
+    """ShapeDtypeStruct pytree matching init_params (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_paramdef)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules
+
+# Default rules for the ("pod", "data", "model") production mesh. "batch"-like
+# logical axes map to the compound data-parallel axes; model-parallel axes map
+# to "model". A logical axis absent here is replicated.
+DEFAULT_RULES: Dict[str, Union[str, Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "zero": ("pod", "data"),        # ZeRO-1 optimizer-state sharding axis
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "rnn": "model",
+    "embed": None,                   # residual stream replicated under TP
+    "seq": None,
+    "sp_seq": "data",               # sequence-parallel prefill (opt-in)
+}
+
+
+def _mesh_axes_size(mesh, axes: Union[str, Tuple[str, ...]]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return n
+
+
+def spec_for(mesh, axes: Axes, shape: Tuple[int, ...],
+             rules: Optional[Dict[str, Any]] = None) -> P:
+    """PartitionSpec for one leaf. Replicates any non-divisible dim."""
+    rules = rules or DEFAULT_RULES
+    parts = []
+    for dim, ax in zip(shape, axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        # drop mesh axes missing from this mesh (e.g. "pod" on single-pod)
+        mesh_axes = tuple(a for a in mesh_axes if a in mesh.axis_names)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        size = _mesh_axes_size(mesh, mesh_axes)
+        if size > 1 and dim % size == 0:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_pspecs(defs: Dict[str, Any], mesh, rules=None):
+    """PartitionSpec pytree mirroring a ParamDef pytree."""
+    return jax.tree.map(
+        lambda d: spec_for(mesh, d.axes, d.shape, rules), defs, is_leaf=is_paramdef)
+
+
+def param_shardings(defs: Dict[str, Any], mesh, rules=None):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_for(mesh, d.axes, d.shape, rules)),
+        defs, is_leaf=is_paramdef)
+
+
+def zero1_pspecs(defs: Dict[str, Any], mesh, rules=None):
+    """Optimizer-moment specs: like param specs but additionally shard the
+    largest not-yet-sharded divisible dim over the data axes (ZeRO-1)."""
+    rules = rules or DEFAULT_RULES
+    zaxes = rules.get("zero", ("pod", "data"))
+    zaxes = tuple(a for a in (zaxes if isinstance(zaxes, tuple) else (zaxes,))
+                  if a in mesh.axis_names)
+    zsize = _mesh_axes_size(mesh, zaxes) if zaxes else 1
+
+    def one(d: ParamDef) -> P:
+        base = spec_for(mesh, d.axes, d.shape, rules)
+        parts = list(base)
+        # mesh axes already consumed by the param's own sharding
+        used = set()
+        for p in parts:
+            for a in (p if isinstance(p, (tuple, list)) else (p,)):
+                if a is not None:
+                    used.add(a)
+        avail = tuple(a for a in zaxes if a not in used)
+        if not avail:
+            return base
+        asize = _mesh_axes_size(mesh, avail)
+        if asize <= 1:
+            return base
+        # choose largest unsharded divisible dim
+        cand = [(dim, i) for i, (dim, p) in enumerate(zip(d.shape, parts))
+                if p is None and dim % asize == 0]
+        if cand:
+            _, i = max(cand)
+            parts[i] = avail if len(avail) > 1 else avail[0]
+        return P(*parts)
+
+    return jax.tree.map(one, defs, is_leaf=is_paramdef)
+
+
+def count_params(defs: Dict[str, Any]) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_paramdef)
+    return sum(int(np.prod(l.shape)) for l in leaves)

@@ -1,0 +1,343 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU recurrent blocks + local MQA.
+
+Layer pattern: (R, R, A) super-blocks — `rnn_per_attn` recurrent blocks per
+local-attention block — plus trailing recurrent blocks when n_layers is not
+a multiple of the pattern (26 = 8x3 + 2 for recurrentgemma-2b).
+
+State is O(1) in sequence length: RG-LRU hidden (B, R) + conv tail
+(B, w-1, R) per recurrent layer; a rolling window cache for local attention.
+This is why this family runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.context import MeshCtx
+from repro.models.params import pdef
+
+C_LRU = 8.0  # Griffin's fixed recurrence sharpness
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+
+def _rec_defs(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d = cfg.d_model
+    r = cfg.hybrid.d_rnn or d
+    w = cfg.hybrid.conv_width
+    ax = (None,) * len(lead)
+    return {
+        "w_in": pdef(lead + (d, r), ax + ("fsdp", "rnn")),
+        "w_gate_in": pdef(lead + (d, r), ax + ("fsdp", "rnn")),
+        "conv_w": pdef(lead + (w, r), ax + (None, "rnn"), scale=0.3),
+        "conv_b": pdef(lead + (r,), ax + ("rnn",), "zeros"),
+        "w_a": pdef(lead + (r, r), ax + (None, "rnn")),
+        "w_x": pdef(lead + (r, r), ax + (None, "rnn")),
+        "lam": pdef(lead + (r,), ax + ("rnn",), "normal", scale=0.5),
+        "w_out": pdef(lead + (r, d), ax + ("rnn", "fsdp")),
+    }
+
+
+def _attn_defs(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d = cfg.d_model
+    ax = (None,) * len(lead)
+    return {
+        "w_q": pdef(lead + (d, cfg.n_heads, cfg.head_dim), ax + ("fsdp", "heads", None)),
+        "w_k": pdef(lead + (d, cfg.n_kv_heads, cfg.head_dim), ax + ("fsdp", "kv_heads", None)),
+        "w_v": pdef(lead + (d, cfg.n_kv_heads, cfg.head_dim), ax + ("fsdp", "kv_heads", None)),
+        "w_o": pdef(lead + (cfg.n_heads, cfg.head_dim, d), ax + ("heads", None, "fsdp")),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    ax = (None,) * len(lead)
+    return {
+        "w_gate": pdef(lead + (d, f), ax + ("fsdp", "mlp")),
+        "w_up": pdef(lead + (d, f), ax + ("fsdp", "mlp")),
+        "w_down": pdef(lead + (f, d), ax + ("mlp", "fsdp")),
+    }
+
+
+def _wrap(defs_fn, cfg, lead):
+    d = cfg.d_model
+    ax = (None,) * len(lead)
+    return {
+        "ln_mix": pdef(lead + (d,), ax + (None,), "ones"),
+        "ln_mlp": pdef(lead + (d,), ax + (None,), "ones"),
+        "mix": defs_fn(cfg, lead),
+        "mlp": _mlp_defs(cfg, lead),
+    }
+
+
+def pattern(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_super, n_trailing_recurrent)."""
+    per = cfg.hybrid.rnn_per_attn + 1
+    return cfg.n_layers // per, cfg.n_layers % per
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    n_super, n_tail = pattern(cfg)
+    k = cfg.hybrid.rnn_per_attn
+    defs: Dict[str, Any] = {
+        "embed": pdef((cfg.vocab, cfg.d_model), ("vocab", "fsdp"), "embed"),
+        "ln_f": pdef((cfg.d_model,), (None,), "ones"),
+        "super": {
+            "rec": _wrap(_rec_defs, cfg, (n_super, k)),
+            "attn": _wrap(_attn_defs, cfg, (n_super,)),
+        },
+    }
+    if n_tail:
+        defs["tail"] = _wrap(_rec_defs, cfg, (n_tail,))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+
+def _conv1d(u, conv_w, conv_b, tail=None):
+    """Causal depthwise conv. u (B,T,R); conv_w (w,R). tail (B,w-1,R) or None."""
+    w = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], w - 1, u.shape[2]), u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * conv_w[w - 1 - i].astype(u.dtype)
+              for i in range(w))
+    new_tail = up[:, -(w - 1):] if w > 1 else None
+    return out + conv_b.astype(u.dtype), new_tail
+
+
+def _lru_gates(xt, p):
+    """a (decay) and gated input, f32. xt (B,T,R)."""
+    xf = xt.astype(jnp.float32)
+    rt = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32))
+    it = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32))
+    log_a = -C_LRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * rt
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (it * xf)
+    return a, gated
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t*h_{t-1} + b_t via associative scan over T. a,b (B,T,R) f32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _rec_mix(x, p, cfg, state=None):
+    """Recurrent (RG-LRU) temporal mixing. Returns (out, new_state)."""
+    cdt = x.dtype
+    u = x @ p["w_in"].astype(cdt)
+    gate = jax.nn.gelu(x @ p["w_gate_in"].astype(cdt), approximate=True)
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _conv1d(u, p["conv_w"], p["conv_b"], tail)
+    a, b = _lru_gates(u, p)
+    h0 = state["h"] if state is not None else None
+    if getattr(cfg, "attn_impl", "jnp") == "flash":
+        # "flash" selects the Pallas kernel suite model-wide; for the
+        # recurrent mixer that is the rglru_scan kernel
+        from repro.kernels.rglru_scan.ops import rglru_scan
+        h = rglru_scan(a, b, h0)
+    else:
+        h = _lru_scan(a, b, h0)
+    out = (h.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    new_state = {"h": h[:, -1], "conv": new_tail}
+    return out, new_state
+
+
+def _local_attn_mix(x, p, cfg, positions, state=None, pos=None):
+    """Local MQA with rolling-window cache. Returns (out, new_state)."""
+    cdt = x.dtype
+    W = cfg.hybrid.attn_window
+    q = jnp.einsum("btd,dhk->bthk", x, p["w_q"].astype(cdt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["w_k"].astype(cdt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["w_v"].astype(cdt))
+    cos, sin = L.rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    if state is None:
+        out = L.attention(q, k, v, q_positions=positions,
+                          kv_positions=positions, causal=True, window=W)
+        B, T = x.shape[0], x.shape[1]
+        if T >= W:
+            # decode writes at slot pos % W, so store entry p at slot p % W:
+            # the last W positions are a cyclic rotation by T % W.
+            shift = T % W
+            new_state = {
+                "k": jnp.roll(k[:, -W:], shift, axis=1),
+                "v": jnp.roll(v[:, -W:], shift, axis=1),
+                "kpos": jnp.roll(
+                    jnp.broadcast_to(positions[-W:], (B, W)).astype(jnp.int32),
+                    shift, axis=1),
+            }
+        else:
+            # position i sits at slot i % W == i already; pad the rest
+            padn = W - T
+            new_state = {
+                "k": jnp.pad(k, ((0, 0), (0, padn), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, padn), (0, 0), (0, 0))),
+                "kpos": jnp.pad(
+                    jnp.broadcast_to(positions, (B, T)).astype(jnp.int32),
+                    ((0, 0), (0, padn)), constant_values=-10**9),
+            }
+    else:
+        B = x.shape[0]
+        slot = pos % W
+        ck = state["k"].at[jnp.arange(B), slot].set(k[:, 0].astype(state["k"].dtype))
+        cv = state["v"].at[jnp.arange(B), slot].set(v[:, 0].astype(state["v"].dtype))
+        cp = state["kpos"].at[jnp.arange(B), slot].set(pos.astype(jnp.int32))
+        # mask: within window and not in the future
+        valid = (cp <= pos[:, None]) & (cp > (pos - W)[:, None])   # (B, W)
+        H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        qg = q.reshape(B, 1, KH, H // KH, D)
+        s = jnp.einsum("btkgd,bskd->bkgts", qg, ck.astype(cdt),
+                       preferred_element_type=jnp.float32) / math.sqrt(D)
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+        w_ = jax.nn.softmax(s, axis=-1).astype(cdt)
+        out = jnp.einsum("bkgts,bskd->btkgd", w_, cv.astype(cdt))
+        out = out.reshape(B, 1, H, D)
+        new_state = {"k": ck, "v": cv, "kpos": cp}
+    out = jnp.einsum("bthk,hkd->btd", out, p["w_o"].astype(cdt))
+    return out, new_state
+
+
+def _mqa_fix(cfg: ModelConfig):
+    # kv heads broadcast: n_kv=1 -> attention() handles G = H//KH with KH=1
+    return cfg
+
+
+def _block(x, bp, cfg, mctx, kind, positions, state=None, pos=None):
+    h = L.rms_norm(x, bp["ln_mix"], cfg.rms_eps)
+    if kind == "rec":
+        mix, new_state = _rec_mix(h, bp["mix"], cfg, state)
+    else:
+        mix, new_state = _local_attn_mix(h, bp["mix"], cfg, positions, state, pos)
+    x = x + mix
+    h = L.rms_norm(x, bp["ln_mlp"], cfg.rms_eps)
+    x = x + L.mlp(h, {k: v.astype(x.dtype) for k, v in bp["mlp"].items()}, cfg.act)
+    if mctx is not None:
+        x = mctx.constraint(x, mctx.batch_spec(None, None))
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / serve
+
+def _embed_in(params, tokens, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    return x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+
+
+def forward(params, tokens, cfg: ModelConfig, mctx, collect_state=False):
+    x = _embed_in(params, tokens, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    k = cfg.hybrid.rnn_per_attn
+
+    def super_body(h, sp):
+        def rec_body(hh, rp):
+            hh, st = _block(hh, rp, cfg, mctx, "rec", positions)
+            return hh, (st if collect_state else None)
+        h, rec_states = lax.scan(rec_body, h, sp["rec"])
+        h, attn_state = _block(h, sp["attn"], cfg, mctx, "attn", positions)
+        return h, ({"rec": rec_states, "attn": attn_state}
+                   if collect_state else None)
+
+    body = super_body
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = lax.scan(body, x, params["super"])
+    tail_states = None
+    if "tail" in params:
+        def tail_body(h, rp):
+            h, st = _block(h, rp, cfg, mctx, "rec", positions)
+            return h, (st if collect_state else None)
+        tb = jax.checkpoint(tail_body, policy=jax.checkpoint_policies.nothing_saveable) \
+            if cfg.remat else tail_body
+        x, tail_states = lax.scan(tb, x, params["tail"])
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))
+    if mctx is not None:
+        logits = mctx.constraint(logits, mctx.batch_spec(None, "model"))
+    if collect_state:
+        return logits, {"super": states, "tail": tail_states}
+    return logits
+
+
+def loss_fn(params, batch, cfg, mctx):
+    logits = forward(params, batch["tokens"], cfg, mctx)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def state_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode state (O(1) in seq_len)."""
+    n_super, n_tail = pattern(cfg)
+    k = cfg.hybrid.rnn_per_attn
+    r = cfg.hybrid.d_rnn or cfg.d_model
+    W = cfg.hybrid.attn_window
+    w = cfg.hybrid.conv_width
+
+    def rec(lead):
+        return {"h": jax.ShapeDtypeStruct(lead + (batch, r), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(lead + (batch, w - 1, r), dtype)}
+
+    out = {"super": {
+        "rec": rec((n_super, k)),
+        "attn": {
+            "k": jax.ShapeDtypeStruct((n_super, batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct((n_super, batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "kpos": jax.ShapeDtypeStruct((n_super, batch, W), jnp.int32),
+        }}}
+    out["tail"] = rec((n_tail,)) if n_tail else None
+    return out
+
+
+def prefill(params, tokens, cfg, mctx):
+    logits, state = forward(params, tokens, cfg, mctx, collect_state=True)
+    return logits[:, -1], state
+
+
+def decode_step(params, token, pos, state, cfg, mctx):
+    x = _embed_in(params, token[:, None], cfg)
+    positions = pos[:, None]
+
+    def super_body(h, xs):
+        sp, st = xs
+        def rec_body(hh, xs2):
+            rp, rst = xs2
+            hh, nst = _block(hh, rp, cfg, mctx, "rec", positions, state=rst, pos=pos)
+            return hh, nst
+        h, new_rec = lax.scan(rec_body, h, (sp["rec"], st["rec"]))
+        h, new_attn = _block(h, sp["attn"], cfg, mctx, "attn", positions,
+                             state=st["attn"], pos=pos)
+        return h, {"rec": new_rec, "attn": new_attn}
+
+    x, new_super = lax.scan(super_body, x, (params["super"], state["super"]))
+    new_tail = None
+    if "tail" in params:
+        def tail_body(h, xs2):
+            rp, rst = xs2
+            h, nst = _block(h, rp, cfg, mctx, "rec", positions, state=rst, pos=pos)
+            return h, nst
+        x, new_tail = lax.scan(tail_body, x, (params["tail"], state["tail"]))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(x.dtype))[:, 0]
+    return logits, {"super": new_super, "tail": new_tail}

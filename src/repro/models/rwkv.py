@@ -1,0 +1,306 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Time-mix per head keeps a matrix state S (hd x hd):
+    y_t = r_t @ (diag(u) k_t v_t^T + S_t)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+with data-dependent per-channel decay w_t in (0,1).
+
+Two functionally-equivalent sequence forms are implemented:
+  * `wkv_sequential` — lax.scan over T (the oracle; O(T) steps)
+  * `wkv_chunked`    — chunk-parallel form (dense matmuls; what the Pallas
+                       kernel implements on TPU), used for train/prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.context import MeshCtx
+from repro.models.params import pdef
+
+MIX_NAMES = ("r", "w", "k", "v", "g")
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    n, d = cfg.n_layers, cfg.d_model
+    rw = cfg.rwkv
+    hd = rw.head_dim
+    h = d // hd
+    la = (None,)
+    block = {
+        "ln1": pdef((n, d), la + (None,), "ones"),
+        "ln1b": pdef((n, d), la + (None,), "zeros"),
+        "ln2": pdef((n, d), la + (None,), "ones"),
+        "ln2b": pdef((n, d), la + (None,), "zeros"),
+        "tmix": {
+            "mu_base": pdef((n, d), la + (None,), "zeros"),
+            "mix_w1": pdef((n, d, 5 * rw.mix_lora), la + (None, None), scale=0.02),
+            "mix_w2": pdef((n, 5, rw.mix_lora, d), la + (None, None, None), scale=0.02),
+            "mu": pdef((n, 5, d), la + (None, None), "zeros"),
+            "w_r": pdef((n, d, d), la + ("fsdp", "rnn")),
+            "w_k": pdef((n, d, d), la + ("fsdp", "rnn")),
+            "w_v": pdef((n, d, d), la + ("fsdp", "rnn")),
+            "w_g": pdef((n, d, d), la + ("fsdp", "rnn")),
+            "w_o": pdef((n, d, d), la + ("rnn", "fsdp")),
+            "decay_base": pdef((n, d), la + (None,), "normal", scale=1.0),
+            "decay_w1": pdef((n, d, rw.decay_lora), la + (None, None), scale=0.02),
+            "decay_w2": pdef((n, rw.decay_lora, d), la + (None, None), scale=0.02),
+            "bonus": pdef((n, h, hd), la + (None, None), "normal", scale=0.5),
+            "ln_x_w": pdef((n, d), la + (None,), "ones"),
+            "ln_x_b": pdef((n, d), la + (None,), "zeros"),
+        },
+        "cmix": {
+            "mu_k": pdef((n, d), la + (None,), "zeros"),
+            "mu_r": pdef((n, d), la + (None,), "zeros"),
+            "w_k": pdef((n, d, cfg.d_ff), la + ("fsdp", "mlp")),
+            "w_v": pdef((n, cfg.d_ff, d), la + ("mlp", "fsdp")),
+            "w_r": pdef((n, d, d), la + (None, None)),
+        },
+    }
+    return {
+        "embed": pdef((cfg.vocab, d), ("vocab", "fsdp"), "embed"),
+        "ln_in": pdef((d,), (None,), "ones"),
+        "ln_in_b": pdef((d,), (None,), "zeros"),
+        "ln_f": pdef((d,), (None,), "ones"),
+        "ln_f_b": pdef((d,), (None,), "zeros"),
+        "blocks": block,
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+
+def wkv_sequential(r, k, v, w, u, s0=None):
+    """Oracle: scan over T.
+
+    r,k,v (B,T,H,hd); w (B,T,H,hd) decay in (0,1); u (H,hd) bonus.
+    Returns y (B,T,H,hd), final state (B,H,hd,hd) [f32].
+    """
+    B, T, H, hd = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s_init = jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                                    # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]               # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, uf[None, :, :, None] * kv + s)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    s, ys = lax.scan(step, s_init, xs)
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 64):
+    """Chunk-parallel WKV: O(T/C) sequential steps of dense matmuls.
+
+    Within a chunk, using per-channel log-decay cumsums lw:
+      intra: y_t += sum_{s<t} (r_t * exp(lw_{t-1} - lw_s)) . k_s  v_s
+             + (r_t*u).k_t v_t
+      inter: y_t += (r_t * exp(lw_{t-1})) @ S
+      state: S' = diag(exp(lw_{C-1})) S + sum_s (exp(lw_{C-1} - lw_s) k_s) v_s^T
+    """
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    while T % C:
+        C //= 2
+    n = T // C
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0))    # (B,T,H,hd) <= 0
+    uf = u.astype(jnp.float32)
+
+    def resh(a):
+        return a.reshape(B, n, C, H, hd).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,hd)
+
+    rc, kc, vc, lwc = resh(rf), resh(kf), resh(vf), resh(lw)
+    s_init = jnp.zeros((B, H, hd, hd), jnp.float32) if s0 is None \
+        else s0.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, lwt = xs                    # (B,H,C,hd)
+        cum = jnp.cumsum(lwt, axis=2)           # inclusive cumsum of log-decay
+        cum_prev = cum - lwt                    # exclusive
+        total = cum[:, :, -1:, :]               # (B,H,1,hd)
+        # inter-chunk
+        r_dec = rt * jnp.exp(cum_prev)
+        y = jnp.einsum("bhci,bhij->bhcj", r_dec, s)
+        # intra-chunk, strictly causal. Pairwise exponent
+        # e[t,s,i] = cum_{t-1,i} - cum_{s,i} <= 0 for s < t, so exp() is
+        # bounded — the factored exp(-cum) form overflows under strong decay.
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        e = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,C,C,hd)
+        e = jnp.where(tri[None, None, :, :, None], e, -jnp.inf)
+        att = jnp.einsum("bhci,bhdi,bhcdi->bhcd", rt, kt, jnp.exp(e))
+        y = y + jnp.einsum("bhcd,bhdj->bhcj", att, vt)
+        # diagonal (bonus) term
+        y = y + jnp.einsum("bhci,bhci,bhcj->bhcj", rt * uf[None, :, None, :],
+                           kt, vt)
+        # state update: S' = diag(exp(total)) S + sum_s exp(total-cum_s) k_s v_s^T
+        k_dec = kt * jnp.exp(total - cum)
+        s_new = jnp.exp(total)[:, :, 0, :, None] * s \
+            + jnp.einsum("bhci,bhcj->bhij", k_dec, vt)
+        return s_new, y
+
+    s, ys = lax.scan(step, s_init, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hd)
+    return y, s
+
+
+def wkv_decode(r, k, v, w, u, s):
+    """Single token. r,k,v,w (B,H,hd); s (B,H,hd,hd)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", rf, u.astype(jnp.float32)[None, :, :, None] * kv + s)
+    s_new = wf[..., :, None] * s + kv
+    return y, s_new
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+def _token_shift(x, prev=None):
+    """x (B,T,D) -> x_{t-1} (zeros at t=0 unless prev given)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _time_mix(x, p, cfg, state=None, seq_mode="chunked"):
+    cdt = x.dtype
+    rw = cfg.rwkv
+    hd = rw.head_dim
+    B, T, D = x.shape
+    H = D // hd
+    prev = state["shift"] if state is not None else None
+    xp = _token_shift(x, prev)
+    dx = xp - x
+    xxx = x + dx * p["mu_base"].astype(cdt)
+    mixk = jnp.tanh(xxx @ p["mix_w1"].astype(cdt)).reshape(B, T, 5, rw.mix_lora)
+    mixk = jnp.einsum("btfr,frd->btfd", mixk, p["mix_w2"].astype(cdt))
+    xz = x[:, :, None, :] + dx[:, :, None, :] * (p["mu"].astype(cdt) + mixk)
+    xr, xw, xk, xv, xg = (xz[:, :, i] for i in range(5))
+
+    r = (xr @ p["w_r"].astype(cdt)).reshape(B, T, H, hd)
+    kk = (xk @ p["w_k"].astype(cdt)).reshape(B, T, H, hd)
+    vv = (xv @ p["w_v"].astype(cdt)).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"].astype(cdt))
+    dlog = p["decay_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32))
+         @ p["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dlog)).reshape(B, T, H, hd)               # (0,1)
+
+    s0 = state["s"] if state is not None else None
+    if T == 1 and state is not None:
+        y, s_new = wkv_decode(r[:, 0], kk[:, 0], vv[:, 0], w[:, 0],
+                              p["bonus"], s0)
+        y = y[:, None]
+    elif seq_mode == "sequential":
+        y, s_new = wkv_sequential(r, kk, vv, w, p["bonus"], s0)
+    elif getattr(cfg, "attn_impl", "jnp") == "flash":
+        # Pallas chunked-WKV kernel (model-wide kernel-suite switch)
+        from repro.kernels.rwkv6_scan.ops import wkv6
+        y, s_new = wkv6(r, kk, vv, w, p["bonus"], s0)
+    else:
+        y, s_new = wkv_chunked(r, kk, vv, w, p["bonus"], s0)
+    y = y.reshape(B, T, D).astype(cdt)
+    # per-head group norm
+    yh = y.reshape(B, T, H, hd)
+    mu = jnp.mean(yh.astype(jnp.float32), -1, keepdims=True)
+    var = jnp.var(yh.astype(jnp.float32), -1, keepdims=True)
+    yh = ((yh - mu) * lax.rsqrt(var + 64e-5)).astype(cdt).reshape(B, T, D)
+    y = yh * p["ln_x_w"].astype(cdt) + p["ln_x_b"].astype(cdt)
+    out = (y * g) @ p["w_o"].astype(cdt)
+    new_state = {"shift": x[:, -1], "s": s_new}
+    return out, new_state
+
+
+def _channel_mix(x, p, cfg, state=None):
+    cdt = x.dtype
+    prev = state["shift"] if state is not None else None
+    xp = _token_shift(x, prev)
+    dx = xp - x
+    xk = x + dx * p["mu_k"].astype(cdt)
+    xr = x + dx * p["mu_r"].astype(cdt)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(cdt)))
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(cdt)) * (k @ p["w_v"].astype(cdt))
+    return out, {"shift": x[:, -1]}
+
+
+def _block(x, bp, cfg, mctx, state=None, seq_mode="chunked"):
+    h = L.layer_norm(x, bp["ln1"], bp["ln1b"])
+    tm, tstate = _time_mix(h, bp["tmix"], cfg,
+                           state["tmix"] if state else None, seq_mode)
+    x = x + tm
+    h = L.layer_norm(x, bp["ln2"], bp["ln2b"])
+    cm, cstate = _channel_mix(h, bp["cmix"], cfg,
+                              state["cmix"] if state else None)
+    x = x + cm
+    if mctx is not None:
+        x = mctx.constraint(x, mctx.batch_spec(None, None))
+    return x, {"tmix": tstate, "cmix": cstate}
+
+
+def forward(params, tokens, cfg: ModelConfig, mctx, collect_state=False,
+            seq_mode="chunked"):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    x = L.layer_norm(x, params["ln_in"], params["ln_in_b"])
+
+    def body(h, bp):
+        h, st = _block(h, bp, cfg, mctx, None, seq_mode)
+        return h, (st if collect_state else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = lax.scan(body, x, params["blocks"])
+    x = L.layer_norm(x, params["ln_f"], params["ln_f_b"])
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))
+    if mctx is not None:
+        logits = mctx.constraint(logits, mctx.batch_spec(None, "model"))
+    return (logits, states) if collect_state else logits
+
+
+def loss_fn(params, batch, cfg, mctx):
+    logits = forward(params, batch["tokens"], cfg, mctx)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def state_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    n, d = cfg.n_layers, cfg.d_model
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    return {
+        "tmix": {"shift": jax.ShapeDtypeStruct((n, batch, d), dtype),
+                 "s": jax.ShapeDtypeStruct((n, batch, h, hd, hd), jnp.float32)},
+        "cmix": {"shift": jax.ShapeDtypeStruct((n, batch, d), dtype)},
+    }
+
+
+def prefill(params, tokens, cfg, mctx):
+    logits, state = forward(params, tokens, cfg, mctx, collect_state=True)
+    return logits[:, -1], state
+
+
+def decode_step(params, token, pos, state, cfg, mctx):
+    del pos  # RWKV state is position-free
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[token[:, None]]
+    x = L.layer_norm(x, params["ln_in"], params["ln_in_b"])
+
+    def body(h, xs):
+        bp, st = xs
+        h, nst = _block(h, bp, cfg, mctx, st)
+        return h, nst
+
+    x, new_state = lax.scan(body, x, (params["blocks"], state))
+    x = L.layer_norm(x, params["ln_f"], params["ln_f_b"])
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))[:, 0]
+    return logits, new_state

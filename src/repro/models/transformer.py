@@ -1,0 +1,348 @@
+"""Decoder-only transformer covering the dense and MoE LM families.
+
+Supports: GQA/MQA, qk-norm (qwen3), GeGLU/SwiGLU/squared-ReLU MLPs,
+MLA attention (deepseek-v2), MoE FFN (dbrx / deepseek-v2 via repro.models.moe).
+Layer stacks are `lax.scan` over stacked params: HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.context import MeshCtx
+from repro.models.params import pdef
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+
+def _attn_defs(cfg: ModelConfig, n: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "w_dq": pdef((n, d, m.q_lora_rank), (None, "fsdp", None)),
+            "q_ln": pdef((n, m.q_lora_rank), (None, None), "ones"),
+            "w_uq": pdef((n, m.q_lora_rank, cfg.n_heads, qk_dim),
+                         (None, None, "heads", None)),
+            "w_dkv": pdef((n, d, m.kv_lora_rank), (None, "fsdp", None)),
+            "kv_ln": pdef((n, m.kv_lora_rank), (None, None), "ones"),
+            "w_kr": pdef((n, d, m.qk_rope_head_dim), (None, "fsdp", None)),
+            "w_uk": pdef((n, m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim),
+                         (None, None, "heads", None)),
+            "w_uv": pdef((n, m.kv_lora_rank, cfg.n_heads, m.v_head_dim),
+                         (None, None, "heads", None)),
+            "w_o": pdef((n, cfg.n_heads, m.v_head_dim, d),
+                        (None, "heads", None, "fsdp")),
+        }
+    out: Dict[str, Any] = {
+        "w_q": pdef((n, d, cfg.n_heads, cfg.head_dim), (None, "fsdp", "heads", None)),
+        "w_k": pdef((n, d, cfg.n_kv_heads, cfg.head_dim), (None, "fsdp", "kv_heads", None)),
+        "w_v": pdef((n, d, cfg.n_kv_heads, cfg.head_dim), (None, "fsdp", "kv_heads", None)),
+        "w_o": pdef((n, cfg.n_heads, cfg.head_dim, d), (None, "heads", None, "fsdp")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = pdef((n, cfg.head_dim), (None, None), "ones")
+        out["k_norm"] = pdef((n, cfg.head_dim), (None, None), "ones")
+    return out
+
+
+def _mlp_defs(cfg: ModelConfig, n: int, d_ff: Optional[int] = None,
+              lead: Tuple[int, ...] = ()) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    la = (None,) * len((n,) + lead if n else lead)
+    shape_pre = ((n,) if n else ()) + lead
+    ax_pre = (None,) * len(shape_pre)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": pdef(shape_pre + (d, f), ax_pre + ("fsdp", "mlp")),
+            "w_up": pdef(shape_pre + (d, f), ax_pre + ("fsdp", "mlp")),
+            "w_down": pdef(shape_pre + (f, d), ax_pre + ("mlp", "fsdp")),
+        }
+    return {
+        "w_in": pdef(shape_pre + (d, f), ax_pre + ("fsdp", "mlp")),
+        "w_out": pdef(shape_pre + (f, d), ax_pre + ("mlp", "fsdp")),
+    }
+
+
+def _moe_defs(cfg: ModelConfig, n: int) -> Dict[str, Any]:
+    mc = cfg.moe
+    d, f, e = cfg.d_model, mc.d_ff_expert, mc.n_experts
+    defs: Dict[str, Any] = {
+        "router": pdef((n, d, e), (None, None, None), scale=0.02),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        defs["experts"] = {
+            "w_gate": pdef((n, e, d, f), (None, "experts", "fsdp", None)),
+            "w_up": pdef((n, e, d, f), (None, "experts", "fsdp", None)),
+            "w_down": pdef((n, e, f, d), (None, "experts", "fsdp", None)),
+        }
+    else:
+        defs["experts"] = {
+            "w_in": pdef((n, e, d, f), (None, "experts", "fsdp", None)),
+            "w_out": pdef((n, e, f, d), (None, "experts", "fsdp", None)),
+        }
+    if mc.n_shared:
+        defs["shared"] = _mlp_defs(cfg, n, d_ff=mc.n_shared * f)
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    n, d = cfg.n_layers, cfg.d_model
+    block: Dict[str, Any] = {
+        "ln_attn": pdef((n, d), (None, None), "ones"),
+        "ln_mlp": pdef((n, d), (None, None), "ones"),
+        "attn": _attn_defs(cfg, n),
+    }
+    block["mlp"] = _moe_defs(cfg, n) if cfg.family == "moe" else _mlp_defs(cfg, n)
+    defs = {
+        "embed": pdef((cfg.vocab, d), ("vocab", "fsdp"), "embed"),
+        "ln_f": pdef((d,), (None,), "ones"),
+        "blocks": block,
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = pdef((d, cfg.vocab), ("fsdp", "vocab"), "embed")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Attention forward (dense GQA and MLA), train/prefill and decode variants
+
+def _gqa(x, p, cfg: ModelConfig, positions, *, cache=None, pos=None,
+         window=None):
+    """x (B,T,D). Train/prefill when cache is None; decode otherwise.
+
+    cache: dict(k=(B,S,KH,Dh), v=(B,S,KH,Dh)); pos: (B,) write positions.
+    Returns (out, new_cache_or_None).
+    """
+    cdt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["w_q"].astype(cdt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["w_k"].astype(cdt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["w_v"].astype(cdt))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.rms_eps)
+    cos, sin = L.rope_freqs(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    if cache is None:
+        out = L.attention(q, k, v,
+                          q_positions=positions, kv_positions=positions,
+                          causal=True, window=window, impl=cfg.attn_impl)
+        new_cache = {"k": k, "v": v}
+    else:
+        B = x.shape[0]
+        ck = cache["k"].at[jnp.arange(B), pos].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[jnp.arange(B), pos].set(v[:, 0].astype(cache["v"].dtype))
+        S = ck.shape[1]
+        out = L.attention(q, ck.astype(cdt), cv.astype(cdt),
+                          q_positions=jnp.zeros((1,), jnp.int32),
+                          kv_positions=jnp.arange(S),
+                          causal=False, window=None, kv_len=pos + 1,
+                          chunk=S)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("bthk,hkd->btd", out, p["w_o"].astype(cdt))
+    return out, new_cache
+
+
+def _mla(x, p, cfg: ModelConfig, positions, *, cache=None, pos=None):
+    """Multi-head Latent Attention. Cache stores (c_kv, k_rope) only.
+
+    Prefill/train: materialize per-head k/v from the latent (naive path).
+    Decode: weight-absorbed path — scores and values computed in latent space.
+    """
+    m = cfg.mla
+    cdt = x.dtype
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    cq = L.rms_norm(jnp.einsum("btd,dq->btq", x, p["w_dq"].astype(cdt)),
+                    p["q_ln"], cfg.rms_eps)
+    q = jnp.einsum("btq,qhk->bthk", cq, p["w_uq"].astype(cdt))
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    ckv = L.rms_norm(jnp.einsum("btd,dk->btk", x, p["w_dkv"].astype(cdt)),
+                     p["kv_ln"], cfg.rms_eps)
+    krope = jnp.einsum("btd,dr->btr", x, p["w_kr"].astype(cdt))
+
+    cos, sin = L.rope_freqs(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    krope = L.apply_rope(krope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is None:
+        # naive path: expand latents to per-head K/V
+        k_nope = jnp.einsum("bsk,khn->bshn", ckv, p["w_uk"].astype(cdt))
+        val = jnp.einsum("bsk,khv->bshv", ckv, p["w_uv"].astype(cdt))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (B, T, H, m.qk_rope_head_dim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = L.attention(q_full, k_full, val,
+                          q_positions=positions, kv_positions=positions,
+                          causal=True, softmax_scale=scale)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        # absorbed decode: q' = q_nope @ W_uk  (latent-space scoring)
+        ckv_c = cache["ckv"].at[jnp.arange(B), pos].set(
+            ckv[:, 0].astype(cache["ckv"].dtype))
+        kr_c = cache["krope"].at[jnp.arange(B), pos].set(
+            krope[:, 0].astype(cache["krope"].dtype))
+        q_lat = jnp.einsum("bthn,khn->bthk", q_nope, p["w_uk"].astype(cdt))
+        s = (jnp.einsum("bthk,bsk->bhts", q_lat, ckv_c.astype(cdt),
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bthr,bsr->bhts", q_rope, kr_c.astype(cdt),
+                          preferred_element_type=jnp.float32)) * scale
+        S = ckv_c.shape[1]
+        valid = jnp.arange(S)[None, :] < (pos + 1)[:, None]          # (B,S)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(cdt)
+        ctx = jnp.einsum("bhts,bsk->bthk", w, ckv_c.astype(cdt))
+        val = jnp.einsum("bthk,khv->bthv", ctx, p["w_uv"].astype(cdt))
+        out, new_cache = val, {"ckv": ckv_c, "krope": kr_c}
+        return jnp.einsum("bthv,hvd->btd", out, p["w_o"].astype(cdt)), new_cache
+    out = jnp.einsum("bthv,hvd->btd", out, p["w_o"].astype(cdt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block + full forward
+
+def _ffn(x, p, cfg: ModelConfig, mctx: MeshCtx):
+    if cfg.family == "moe":
+        from repro.models.moe import moe_ffn
+        return moe_ffn(x, p, cfg, mctx)
+    cdt = x.dtype
+    return L.mlp(x, {k: v.astype(cdt) for k, v in p.items()}, cfg.act)
+
+
+def _block(x, bp, cfg: ModelConfig, mctx: MeshCtx, positions,
+           cache=None, pos=None):
+    h = L.rms_norm(x, bp["ln_attn"], cfg.rms_eps)
+    if cfg.mla is not None:
+        a, new_cache = _mla(h, bp["attn"], cfg, positions, cache=cache, pos=pos)
+    else:
+        a, new_cache = _gqa(h, bp["attn"], cfg, positions, cache=cache, pos=pos)
+    if cfg.remat_policy == "save_collectives":
+        # name the post-AR tensors so the remat policy can keep them: the
+        # backward recompute then reuses them instead of re-running the
+        # mixer/ffn forward (and, crucially, their TP all-reduces)
+        a = jax.ad_checkpoint.checkpoint_name(a, "attn_out")
+    x = x + a
+    h = L.rms_norm(x, bp["ln_mlp"], cfg.rms_eps)
+    f = _ffn(h, bp["mlp"], cfg, mctx)
+    if cfg.remat_policy == "save_collectives":
+        f = jax.ad_checkpoint.checkpoint_name(f, "ffn_out")
+    x = x + f
+    if mctx is not None:
+        x = mctx.constraint(x, mctx.batch_spec(None, None))
+    return x, new_cache
+
+
+def _embed_in(params, tokens, cfg: ModelConfig):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    if cfg.name.startswith("gemma") or cfg.family == "hybrid":
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    return x
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    cdt = x.dtype
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))
+    return jnp.einsum("btd,dv->btv", x, params["unembed"].astype(cdt))
+
+
+def forward(params, tokens, cfg: ModelConfig, mctx: MeshCtx,
+            collect_cache: bool = False):
+    """tokens (B,T) -> logits (B,T,V) [+ stacked kv cache]."""
+    x = _embed_in(params, tokens, cfg)
+    T = tokens.shape[1]
+    positions = jnp.arange(T)
+
+    def body(h, bp):
+        h, c = _block(h, bp, cfg, mctx, positions)
+        return h, (c if collect_cache else None)
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_collectives":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "ffn_out")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=policy)
+    x, caches = lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = _unembed(params, x, cfg)
+    if mctx is not None:
+        logits = mctx.constraint(logits, mctx.batch_spec(None, "model"))
+    return (logits, caches) if collect_cache else logits
+
+
+def loss_fn(params, batch, cfg: ModelConfig, mctx: MeshCtx):
+    logits = forward(params, batch["tokens"], cfg, mctx)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """ShapeDtypeStructs for the decode cache (used by input_specs)."""
+    n = cfg.n_layers
+    if dtype is None:
+        dtype = jnp.dtype(cfg.kv_cache_dtype)   # §Perf: fp8 cache variant
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((n, batch, max_len, m.kv_lora_rank), dtype),
+            "krope": jax.ShapeDtypeStruct((n, batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cache_pspec(cfg: ModelConfig, mctx: MeshCtx):
+    """PartitionSpecs matching cache_spec structure."""
+    b = mctx.batch_axes
+    if cfg.mla is not None:
+        return {"ckv": P(None, b, None, None), "krope": P(None, b, None, None)}
+    kh = "model" if (cfg.n_kv_heads % mctx.tp_size() == 0 and mctx.tp_size() > 1) else None
+    # §Perf: when kv heads don't divide tp the cache would replicate over the
+    # model axis; optionally shard its sequence dim there instead
+    sq = "model" if (kh is None and cfg.cache_seq_shard
+                     and mctx.tp_size() > 1) else None
+    return {"k": P(None, b, sq, kh, None), "v": P(None, b, sq, kh, None)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, mctx: MeshCtx):
+    """Returns (last-token logits (B,V), stacked cache (L,...))."""
+    logits, caches = forward(params, tokens, cfg, mctx, collect_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(params, token, pos, cache, cfg: ModelConfig, mctx: MeshCtx):
+    """token (B,), pos (B,) -> (logits (B,V), new stacked cache)."""
+    x = _embed_in(params, token[:, None], cfg)
+
+    def body(h, layer):
+        bp, c = layer
+        h, nc = _block(h, bp, cfg, mctx, pos[:, None], cache=c, pos=pos)
+        return h, nc
+
+    x, new_cache = lax.scan(body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,188 @@
+"""Llama-3.2-Vision-style VLM backbone: self-attn decoder with interleaved
+gated cross-attention layers over precomputed patch embeddings.
+
+The vision frontend is a STUB per the assignment: `input_specs()` supplies
+(B, n_vision_tokens, d_vision) patch embeddings; a learned projection maps
+them into the text width. 100L = 20 super-blocks of [4 self-attn + 1
+gated cross-attn] (cross_every=5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as tr
+from repro.models.context import MeshCtx
+from repro.models.params import pdef
+
+
+def _cross_defs(cfg: ModelConfig, n: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln": pdef((n, d), (None, None), "ones"),
+        "ln_mlp": pdef((n, d), (None, None), "ones"),
+        "w_q": pdef((n, d, cfg.n_heads, cfg.head_dim), (None, "fsdp", "heads", None)),
+        "w_k": pdef((n, d, cfg.n_kv_heads, cfg.head_dim), (None, "fsdp", "kv_heads", None)),
+        "w_v": pdef((n, d, cfg.n_kv_heads, cfg.head_dim), (None, "fsdp", "kv_heads", None)),
+        "w_o": pdef((n, cfg.n_heads, cfg.head_dim, d), (None, "heads", None, "fsdp")),
+        "q_ln": pdef((n, cfg.head_dim), (None, None), "ones"),
+        "k_ln": pdef((n, cfg.head_dim), (None, None), "ones"),
+        "gate_attn": pdef((n,), (None,), "zeros"),
+        "gate_mlp": pdef((n,), (None,), "zeros"),
+        "mlp": tr._mlp_defs(cfg, n),
+    }
+
+
+def n_super(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.vlm.cross_every == 0
+    return cfg.n_layers // cfg.vlm.cross_every
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    ns = n_super(cfg)
+    k = cfg.vlm.cross_every - 1          # self layers per super block
+    d = cfg.d_model
+    self_cfg_defs = {
+        "ln_attn": pdef((ns, k, d), (None, None, None), "ones"),
+        "ln_mlp": pdef((ns, k, d), (None, None, None), "ones"),
+        "attn": {
+            "w_q": pdef((ns, k, d, cfg.n_heads, cfg.head_dim),
+                        (None, None, "fsdp", "heads", None)),
+            "w_k": pdef((ns, k, d, cfg.n_kv_heads, cfg.head_dim),
+                        (None, None, "fsdp", "kv_heads", None)),
+            "w_v": pdef((ns, k, d, cfg.n_kv_heads, cfg.head_dim),
+                        (None, None, "fsdp", "kv_heads", None)),
+            "w_o": pdef((ns, k, cfg.n_heads, cfg.head_dim, d),
+                        (None, None, "heads", None, "fsdp")),
+        },
+        "mlp": {
+            "w_gate": pdef((ns, k, d, cfg.d_ff), (None, None, "fsdp", "mlp")),
+            "w_up": pdef((ns, k, d, cfg.d_ff), (None, None, "fsdp", "mlp")),
+            "w_down": pdef((ns, k, cfg.d_ff, d), (None, None, "mlp", "fsdp")),
+        },
+    }
+    return {
+        "embed": pdef((cfg.vocab, d), ("vocab", "fsdp"), "embed"),
+        "vis_proj": pdef((cfg.vlm.d_vision, d), (None, "fsdp")),
+        "ln_f": pdef((d,), (None,), "ones"),
+        "super": {"self": self_cfg_defs, "cross": _cross_defs(cfg, ns)},
+    }
+
+
+def _self_block(x, bp, cfg, mctx, positions, cache=None, pos=None):
+    h = L.rms_norm(x, bp["ln_attn"], cfg.rms_eps)
+    a, new_cache = tr._gqa(h, bp["attn"], cfg, positions, cache=cache, pos=pos)
+    x = x + a
+    h = L.rms_norm(x, bp["ln_mlp"], cfg.rms_eps)
+    x = x + L.mlp(h, {k: v.astype(x.dtype) for k, v in bp["mlp"].items()}, cfg.act)
+    if mctx is not None:
+        x = mctx.constraint(x, mctx.batch_spec(None, None))
+    return x, new_cache
+
+
+def _cross_kv(vis, cp, cfg):
+    """vis (B, N, D_text-projected) -> per-layer k, v."""
+    cdt = vis.dtype
+    k = jnp.einsum("bnd,dhk->bnhk", vis, cp["w_k"].astype(cdt))
+    v = jnp.einsum("bnd,dhk->bnhk", vis, cp["w_v"].astype(cdt))
+    k = L.rms_norm(k, cp["k_ln"], cfg.rms_eps)
+    return k, v
+
+
+def _cross_block(x, cp, cfg, mctx, kv):
+    cdt = x.dtype
+    k, v = kv
+    h = L.rms_norm(x, cp["ln"], cfg.rms_eps)
+    q = jnp.einsum("btd,dhk->bthk", h, cp["w_q"].astype(cdt))
+    q = L.rms_norm(q, cp["q_ln"], cfg.rms_eps)
+    a = L.cross_attention(q, k, v)
+    a = jnp.einsum("bthk,hkd->btd", a, cp["w_o"].astype(cdt))
+    x = x + jnp.tanh(cp["gate_attn"]).astype(cdt) * a
+    h = L.rms_norm(x, cp["ln_mlp"], cfg.rms_eps)
+    m = L.mlp(h, {k2: v2.astype(cdt) for k2, v2 in cp["mlp"].items()}, cfg.act)
+    x = x + jnp.tanh(cp["gate_mlp"]).astype(cdt) * m
+    if mctx is not None:
+        x = mctx.constraint(x, mctx.batch_spec(None, None))
+    return x
+
+
+def forward(params, tokens, vision_embeds, cfg: ModelConfig, mctx,
+            collect_cache=False):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[tokens]
+    vis = vision_embeds.astype(cdt) @ params["vis_proj"].astype(cdt)
+    positions = jnp.arange(tokens.shape[1])
+
+    def super_body(h, sp):
+        def self_body(hh, bp):
+            hh, c = _self_block(hh, bp, cfg, mctx, positions)
+            return hh, (c if collect_cache else None)
+        h, self_caches = lax.scan(self_body, h, sp["self"])
+        kv = _cross_kv(vis, sp["cross"], cfg)
+        h = _cross_block(h, sp["cross"], cfg, mctx, kv)
+        return h, ({"self": self_caches,
+                    "cross": {"k": kv[0], "v": kv[1]}} if collect_cache else None)
+
+    body = super_body
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = lax.scan(body, x, params["super"])
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))
+    if mctx is not None:
+        logits = mctx.constraint(logits, mctx.batch_spec(None, "model"))
+    return (logits, caches) if collect_cache else logits
+
+
+def loss_fn(params, batch, cfg, mctx):
+    logits = forward(params, batch["tokens"], batch["vision_embeds"], cfg, mctx)
+    return L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ns = n_super(cfg)
+    k = cfg.vlm.cross_every - 1
+    kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "self": {"k": jax.ShapeDtypeStruct((ns, k) + kv, dtype),
+                 "v": jax.ShapeDtypeStruct((ns, k) + kv, dtype)},
+        "cross": {"k": jax.ShapeDtypeStruct(
+                      (ns, batch, cfg.vlm.n_vision_tokens, cfg.n_kv_heads,
+                       cfg.head_dim), dtype),
+                  "v": jax.ShapeDtypeStruct(
+                      (ns, batch, cfg.vlm.n_vision_tokens, cfg.n_kv_heads,
+                       cfg.head_dim), dtype)},
+    }
+
+
+def prefill(params, tokens, vision_embeds, cfg, mctx):
+    logits, caches = forward(params, tokens, vision_embeds, cfg, mctx,
+                             collect_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(params, token, pos, cache, cfg, mctx):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cdt)[token[:, None]]
+
+    def super_body(h, xs):
+        sp, c = xs
+        def self_body(hh, xs2):
+            bp, cc = xs2
+            hh, nc = _self_block(hh, bp, cfg, mctx, pos[:, None], cache=cc, pos=pos)
+            return hh, nc
+        h, new_self = lax.scan(self_body, h, (sp["self"], c["self"]))
+        kv = (c["cross"]["k"].astype(cdt), c["cross"]["v"].astype(cdt))
+        h = _cross_block(h, sp["cross"], cfg, mctx, kv)
+        return h, {"self": new_self, "cross": c["cross"]}
+
+    x, new_cache = lax.scan(super_body, x, (params["super"], cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"].astype(cdt))[:, 0]
+    return logits, new_cache

@@ -1,0 +1,106 @@
+"""Parse collective traffic out of post-SPMD optimized HLO text.
+
+XLA prints collectives as `%name = TYPE[SHAPE] op(%operand, ...)` — operand
+types are NOT inline, so we read the RESULT shape and convert to estimated
+per-device ring wire-traffic using the replica-group size n:
+
+    all-reduce         2 * S * (n-1)/n      (S = result bytes)
+    all-gather         S * (n-1)/n          (result is the gathered buffer)
+    reduce-scatter     S * (n-1)            (result is the scattered shard)
+    all-to-all         S * (n-1)/n
+    collective-permute S
+
+CAVEAT (documented in EXPERIMENTS.md §Dry-run): ops inside `while` bodies
+(lax.scan over layers/microbatches) are counted ONCE by both this parser and
+`compiled.cost_analysis()`; the analytic model in repro.roofline.analytic
+supplies trip-count-aware totals, and these parsed numbers serve as a
+structural crosscheck (which collectives exist, on which axes, what shapes).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+# %x = f32[4,8]{1,0} all-gather(%y), ... replica_groups=[2,4]<=[8] ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^\s]*)\s+"
+    r"(" + "|".join(COLLECTIVES) + r")(-start)?\(")
+_GROUPS_NEW = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_TUPLE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_NEW.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_OLD.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def _wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    if kind == "collective-permute":
+        return float(result_bytes)   # group-size-independent point-to-point
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if kind in ("all-gather", "collective-broadcast"):
+        return result_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (n - 1)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return result_bytes * (n - 1) / n
+    return float(result_bytes)       # collective-permute
+
+
+def collective_stats(hlo_text: str):
+    """Per-kind (count, est. wire bytes) from the optimized module text."""
+    per_kind_bytes: Dict[str, float] = defaultdict(float)
+    per_kind_count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_part, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if tuple_part is not None:
+            rb = sum(_nbytes(dt, dm) for dt, dm in _TUPLE_SHAPE.findall(tuple_part))
+        else:
+            rb = _nbytes(dtype, dims)
+        n = _group_size(line)
+        per_kind_bytes[kind] += _wire_bytes(kind, rb, n)
+        per_kind_count[kind] += 1
+    return dict(per_kind_count), {k: int(v) for k, v in per_kind_bytes.items()}
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    counts, bts = collective_stats(hlo_text)
+    return int(sum(bts.values())), bts
+
+
+def collective_count(hlo_text: str) -> Dict[str, int]:
+    counts, _ = collective_stats(hlo_text)
+    return counts

@@ -1,0 +1,85 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping.
+
+Implemented directly in JAX (no optax dependency). Optimizer moments are
+pytrees mirroring params; ZeRO-1 sharding of the moments over the data axes
+is applied at the jit boundary via `zero1_pspecs` (train/trainer.py).
+Adafactor-style factored second moments are a logged §Perf lever for the
+train-cell memory term (EXPERIMENTS.md), not yet implemented.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_adam(params) -> AdamState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(z, params), v=jax.tree.map(z, params))
+
+
+def abstract_adam(param_specs) -> AdamState:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                     m=jax.tree.map(z, param_specs),
+                     v=jax.tree.map(z, param_specs))
+
+
+def lr_schedule(tcfg: TrainConfig, step) -> jax.Array:
+    """Linear warmup then cosine decay to 10%."""
+    warm = jnp.minimum(1.0, (step + 1) / max(tcfg.warmup_steps, 1))
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamState, params, tcfg: TrainConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tcfg.grad_clip > 0 else jnp.float32(1.0)
+    lr = lr_schedule(tcfg, state.step)
+    b1, b2 = tcfg.b1, tcfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tcfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,162 @@
+"""Train/serve step builders: microbatched grad accumulation, ZeRO-1
+sharding, optional int8-compressed gradient all-reduce, donation.
+
+These are the functions the dry-run lowers and the launcher runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.api import ModelAPI, shardings_for
+from repro.models.context import MeshCtx, make_rules
+from repro.models.params import (abstract_params, param_pspecs, zero1_pspecs)
+from repro.train.optimizer import AdamState, adamw_update, init_adam
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (beyond-paper distributed trick; see EXPERIMENTS §Perf)
+
+def compress_int8(tree):
+    """Per-leaf symmetric int8 quantization: (q, scale)."""
+    def one(x):
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        return (jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8),
+                scale)
+    return jax.tree.map(one, tree)
+
+
+def decompress_int8(qtree):
+    return jax.tree.map(lambda q_s: q_s[0].astype(jnp.float32) * q_s[1],
+                        qtree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+
+def _microbatch(batch: Dict[str, Any], nmb: int, mctx: MeshCtx):
+    """(B, ...) -> (nmb, B/nmb, ...) with a resharding hint."""
+    def one(x):
+        assert x.shape[0] % nmb == 0, (x.shape, nmb)
+        y = x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+        return mctx.constraint(y, P(None, mctx.batch_axes,
+                                    *([None] * (y.ndim - 2))))
+    return jax.tree.map(one, batch)
+
+
+def make_train_step(api: ModelAPI, tcfg: TrainConfig, mctx: MeshCtx):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    nmb = tcfg.num_microbatches
+
+    def train_step(params, opt_state: AdamState, batch):
+        if nmb > 1:
+            mbs = _microbatch(batch, nmb, mctx)
+            adt = jnp.dtype(tcfg.accum_dtype)
+
+            def accum(carry, mb):
+                loss_sum, g_sum = carry
+                loss, g = jax.value_and_grad(api.loss)(params, mb, mctx)
+                g = jax.tree.map(lambda a, b: (a + b.astype(adt)).astype(adt),
+                                 g_sum, g)
+                return (loss_sum + loss, g), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (loss_sum, grads), _ = lax.scan(accum, (jnp.float32(0), g0), mbs)
+            loss = loss_sum / nmb
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+        else:
+            loss, grads = jax.value_and_grad(api.loss)(params, batch, mctx)
+
+        if tcfg.grad_compression == "int8":
+            # quantize-dequantize before the optimizer; the all-reduce of the
+            # (much smaller) int8 payload is modeled by sharding constraints
+            grads = decompress_int8(compress_int8(grads))
+            grads = jax.tree.map(lambda g, p: g.astype(jnp.float32),
+                                 grads, params)
+
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params,
+                                                    tcfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# jit wiring with shardings
+
+def jit_train_step(api: ModelAPI, tcfg: TrainConfig, mctx: MeshCtx,
+                   shape: ShapeConfig, donate: bool = True):
+    cfg = api.cfg
+    mesh = mctx.mesh
+    rules = mctx.rules
+    defs = api.param_defs()
+    p_specs = param_pspecs(defs, mesh, rules)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    z_specs = zero1_pspecs(defs, mesh, rules) if cfg.zero1 else p_specs
+    z_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), z_specs)
+    opt_shard = AdamState(step=NamedSharding(mesh, P()), m=z_shard, v=z_shard)
+    in_specs = api.input_specs(shape)
+    in_shard = shardings_for(mesh, in_specs, api.input_pspecs(mctx, shape))
+    metric_shard = {"loss": NamedSharding(mesh, P()),
+                    "grad_norm": NamedSharding(mesh, P()),
+                    "lr": NamedSharding(mesh, P())}
+    step = make_train_step(api, tcfg, mctx)
+    return jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, in_shard),
+        out_shardings=(p_shard, opt_shard, metric_shard),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def jit_prefill_step(api: ModelAPI, mctx: MeshCtx, shape: ShapeConfig):
+    mesh = mctx.mesh
+    defs = api.param_defs()
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_pspecs(defs, mesh, mctx.rules))
+    in_specs = api.input_specs(shape)
+    in_shard = shardings_for(mesh, in_specs, api.input_pspecs(mctx, shape))
+
+    def step(params, inputs):
+        return api.prefill(params, inputs, mctx)
+
+    logits_shard = shardings_for(
+        mesh, jax.ShapeDtypeStruct((shape.global_batch, api.cfg.vocab),
+                                   jnp.float32),
+        P(mctx.batch_axes, None))
+    cache_sh = shardings_for(
+        mesh, api.cache_specs(shape.global_batch, shape.seq_len),
+        api.cache_pspecs(mctx))
+    return jax.jit(step, in_shardings=(p_shard, in_shard),
+                   out_shardings=(logits_shard, cache_sh))
+
+
+def jit_decode_step(api: ModelAPI, mctx: MeshCtx, shape: ShapeConfig,
+                    donate: bool = True):
+    mesh = mctx.mesh
+    defs = api.param_defs()
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           param_pspecs(defs, mesh, mctx.rules))
+    in_specs = api.input_specs(shape)          # token, pos, cache
+    in_shard = shardings_for(mesh, in_specs, api.input_pspecs(mctx, shape))
+
+    def step(params, token, pos, cache):
+        return api.decode(params, {"token": token, "pos": pos}, cache, mctx)
+
+    logits_shard = shardings_for(
+        mesh, jax.ShapeDtypeStruct((shape.global_batch, api.cfg.vocab),
+                                   jnp.float32),
+        P(mctx.batch_axes, None))
+    return jax.jit(step,
+                   in_shardings=(p_shard, in_shard["token"],
+                                 in_shard["pos"], in_shard["cache"]),
+                   out_shardings=(logits_shard, in_shard["cache"]),
+                   donate_argnums=(3,) if donate else ())

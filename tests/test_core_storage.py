@@ -1,0 +1,293 @@
+"""Unit + property tests for the ROS2 storage substrate: object store,
+DFS, control plane, data plane, SmartNIC runtime, client e2e.
+"""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.client import ROS2Client
+from repro.core.control_plane import ControlPlane
+from repro.core.data_plane import (AccessError, MemoryRegistry,
+                                   RDMATransport, TCPTransport, EAGER_LIMIT,
+                                   MTU)
+from repro.core.dfs import BLOCK, split_blocks
+from repro.core.media import checksum, make_nvme_array
+from repro.core.object_store import ChecksumError, ObjectStore, StorageError
+from repro.core.smartnic import DPURuntime, InlineCrypto
+from repro.distributed.fault import FailureInjector
+
+
+# ---------------------------------------------------------------------------
+# Object store
+
+
+def make_store(n=4, repl=2):
+    store = ObjectStore(make_nvme_array(n))
+    cont = store.create_pool("p").create_container("c", replication=repl)
+    return store, cont
+
+
+def test_versioned_extents_overlap():
+    _, cont = make_store()
+    obj = cont.object(1)
+    obj.update("0", "data", 0, b"A" * 10)
+    obj.update("0", "data", 5, b"B" * 10)
+    got = obj.fetch("0", "data", 0, 15)
+    assert got == b"A" * 5 + b"B" * 10
+
+
+def test_epoch_snapshot_read():
+    _, cont = make_store()
+    obj = cont.object(1)
+    e1 = obj.update("0", "data", 0, b"old")
+    obj.update("0", "data", 0, b"new")
+    assert obj.fetch("0", "data", 0, 3, epoch=e1) == b"old"
+    assert obj.fetch("0", "data", 0, 3) == b"new"
+
+
+def test_replication_survives_device_failure():
+    store, cont = make_store(n=4, repl=2)
+    obj = cont.object(7)
+    obj.update("0", "data", 0, b"payload")
+    ext = obj._extents[("0", "data")][0]
+    victim = next(iter(ext.block_keys))
+    store.fail_device(victim)
+    assert obj.fetch("0", "data", 0, 7) == b"payload"
+
+
+def test_all_replicas_down_raises():
+    store, cont = make_store(n=2, repl=2)
+    obj = cont.object(7)
+    obj.update("0", "data", 0, b"payload")
+    for d in store.devices:
+        d.fail()
+    with pytest.raises(StorageError):
+        obj.fetch("0", "data", 0, 7)
+
+
+def test_silent_corruption_routed_to_clean_replica():
+    store, cont = make_store(n=2, repl=2)
+    obj = cont.object(3)
+    obj.update("0", "data", 0, b"x" * 64)
+    inj = FailureInjector(store)
+    assert inj.corrupt_block(store.devices[0].name)
+    assert obj.fetch("0", "data", 0, 64) == b"x" * 64   # checksum reroute
+
+
+def test_rebuild_restores_replication():
+    store, cont = make_store(n=3, repl=2)
+    obj = cont.object(9)
+    for i in range(5):
+        obj.update(str(i), "data", 0, bytes([i]) * 32)
+    victim = store.devices[0].name
+    store.fail_device(victim)
+    moved = store.rebuild(victim)
+    assert moved > 0
+    # now kill another device: every extent must still have a live replica
+    store.fail_device(store.devices[1].name)
+    for i in range(5):
+        got = obj.fetch(str(i), "data", 0, 32)
+        assert got == bytes([i]) * 32
+
+
+# ---------------------------------------------------------------------------
+# Data plane semantics (the paper's transport distinction)
+
+
+def _pair():
+    a, b = MemoryRegistry("cli"), MemoryRegistry("srv")
+    return a, b
+
+
+def test_rdma_single_copy_tcp_double_copy():
+    cli, srv = _pair()
+    src = cli.register(np.arange(256 * 1024, dtype=np.uint8) % 251, "t")
+    dst = srv.register(256 * 1024, "t")
+    rk = srv.grant(dst, "rw")
+    rdma = RDMATransport(cli, srv)
+    rdma.write(rk.token, "t", 0, src, 0, src.size)
+    assert rdma.stats.copy_bytes == src.size            # exactly 1 copy/byte
+    np.testing.assert_array_equal(dst.buf, src.buf)
+
+    cli2, srv2 = _pair()
+    s2 = cli2.register(src.buf.copy(), "t")
+    d2 = srv2.register(256 * 1024, "t")
+    tcp = TCPTransport(cli2, srv2)
+    tcp.write(d2, 0, s2, 0, s2.size)
+    assert tcp.stats.copy_bytes == 2 * s2.size          # 2 copies/byte
+    assert tcp.stats.segments == -(-s2.size // MTU)     # MTU segmentation
+    np.testing.assert_array_equal(d2.buf, s2.buf)
+
+
+def test_rdma_eager_vs_rendezvous():
+    cli, srv = _pair()
+    src = cli.register(64 * 1024, "t")
+    dst = srv.register(64 * 1024, "t")
+    rk = srv.grant(dst, "rw")
+    x = RDMATransport(cli, srv)
+    x.write(rk.token, "t", 0, src, 0, EAGER_LIMIT)       # eager
+    x.write(rk.token, "t", 0, src, 0, EAGER_LIMIT + 1)   # rendezvous
+    assert x.stats.eager == 1 and x.stats.rendezvous == 1
+    assert x.stats.control_msgs == 2                     # RTS/CTS only
+
+
+def test_rkey_scoping_expiry_revocation():
+    cli, srv = _pair()
+    dst = srv.register(1024, "tenantA")
+    src = cli.register(1024, "tenantA")
+    x = RDMATransport(cli, srv)
+    rk = srv.grant(dst, "r", ttl_s=1000)
+    with pytest.raises(AccessError):                     # write with r-only
+        x.write(rk.token, "tenantA", 0, src, 0, 16)
+    with pytest.raises(AccessError):                     # cross-tenant
+        x.read(rk.token, "tenantB", 0, src, 0, 16)
+    with pytest.raises(AccessError):                     # out of bounds
+        x.read(rk.token, "tenantA", 1020, src, 0, 16)
+    srv.revoke(rk.token)
+    with pytest.raises(AccessError):                     # revoked
+        x.read(rk.token, "tenantA", 0, src, 0, 16)
+    rk2 = srv.grant(dst, "rw", ttl_s=-1.0)               # already expired
+    with pytest.raises(AccessError):
+        x.read(rk2.token, "tenantA", 0, src, 0, 16)
+
+
+# ---------------------------------------------------------------------------
+# split_blocks property
+
+
+@given(st.integers(0, 5 * BLOCK), st.integers(1, 3 * BLOCK))
+@settings(max_examples=60, deadline=None)
+def test_split_blocks_partition(offset, size):
+    parts = split_blocks(offset, size)
+    assert sum(ln for _, _, ln in parts) == size
+    pos = offset
+    for b, bo, ln in parts:
+        assert b * BLOCK + bo == pos
+        assert 0 < ln <= BLOCK - bo
+        pos += ln
+
+
+# ---------------------------------------------------------------------------
+# Control plane
+
+
+def test_control_plane_auth_and_sessions():
+    store, _ = make_store()
+    cp = ControlPlane(store, MemoryRegistry("srv"), {"t1": "s1"})
+    bad = cp.rpc("connect", tenant="t1", secret="wrong")
+    assert not bad["ok"]
+    ok = cp.rpc("connect", tenant="t1", secret="s1")
+    assert ok["ok"]
+    r = cp.rpc("grant_rkey", session_id=999999, region_id=1)
+    assert not r["ok"]                                   # invalid session
+
+
+def test_control_plane_cross_tenant_grant_denied():
+    store, _ = make_store()
+    reg = MemoryRegistry("srv")
+    mr = reg.register(128, "other-tenant")
+    cp = ControlPlane(store, reg, {"t1": "s1"})
+    sid = cp.rpc("connect", tenant="t1", secret="s1")["session_id"]
+    r = cp.rpc("grant_rkey", session_id=sid, region_id=mr.region_id)
+    assert not r["ok"] and "protection" in r["error"]
+
+
+# ---------------------------------------------------------------------------
+# SmartNIC runtime
+
+
+def test_dpu_runtime_concurrent_tag_safety():
+    dpu = DPURuntime(n_cores=4)
+    dpu.register("sq", lambda x: x * x)
+    dpu.start()
+    results = {}
+
+    def worker(v):
+        tag = dpu.submit("sq", x=v)
+        results[v] = dpu.wait_tag(tag).result
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dpu.stop()
+    assert results == {i: i * i for i in range(32)}
+
+
+def test_inline_crypto_roundtrip():
+    c = InlineCrypto(0xC0FFEE)
+    data = np.random.default_rng(0).integers(0, 256, 1000, dtype=np.uint8)
+    enc = c.apply(data, nonce=7)
+    assert (enc != data).mean() > 0.9
+    np.testing.assert_array_equal(c.apply(enc, nonce=7), data)
+    assert (c.apply(data, nonce=8) != enc).mean() > 0.9
+
+
+# ---------------------------------------------------------------------------
+# Client end-to-end, all four (mode x transport) configs
+
+
+@pytest.mark.parametrize("mode", ["host", "dpu"])
+@pytest.mark.parametrize("transport", ["tcp", "rdma"])
+def test_client_roundtrip(mode, transport):
+    c = ROS2Client(mode=mode, transport=transport)
+    c.mkdir("/d")
+    fd = c.open("/d/f", create=True)
+    payload = np.random.default_rng(1).integers(
+        0, 256, 3 * BLOCK + 12345, dtype=np.uint8).tobytes()
+    c.pwrite(fd, payload, 0)
+    got = c.pread(fd, len(payload), 0)
+    assert got == payload
+    # unaligned cross-block read
+    assert c.pread(fd, 100, BLOCK - 50) == payload[BLOCK - 50:BLOCK + 50]
+    if mode == "dpu":
+        assert c.dpu.ops_processed >= 3      # host stayed off the data path
+    c.close()
+
+
+def test_client_inline_encryption_at_rest():
+    c = ROS2Client(mode="host", transport="rdma", inline_encryption=True)
+    fd = c.open("/enc", create=True)
+    payload = b"secret-training-data" * 100
+    c.pwrite(fd, payload, 0)
+    assert c.pread(fd, len(payload), 0) == payload       # transparent
+    # ciphertext at rest: no device block contains the plaintext
+    for dev in c.devices:
+        for blk in dev._blocks.values():
+            assert b"secret-training-data" not in blk
+    c.close()
+
+
+def test_control_data_plane_separation():
+    """Bulk bytes never traverse the control plane (the design point)."""
+    c = ROS2Client(mode="host", transport="rdma")
+    fd = c.open("/sep", create=True)
+    payload = bytes(2 * BLOCK)
+    c.pwrite(fd, payload, 0)
+    c.pread(fd, len(payload), 0)
+    data_bytes = c.io.stats.bytes_moved
+    assert data_bytes >= 2 * len(payload)
+    assert c.control.rpc_bytes < 0.01 * data_bytes
+    c.close()
+
+
+@given(st.lists(st.tuples(st.integers(0, 3 * BLOCK),
+                          st.integers(1, BLOCK // 2)), min_size=1,
+                max_size=6))
+@settings(max_examples=20, deadline=None)
+def test_dfs_read_write_matches_shadow(ops):
+    """Property: arbitrary pwrite/pread sequences match a bytearray model."""
+    c = ROS2Client(mode="host", transport="rdma")
+    fd = c.open("/prop", create=True)
+    shadow = bytearray(4 * BLOCK)
+    rng = np.random.default_rng(42)
+    for off, size in ops:
+        data = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+        c.pwrite(fd, data, off)
+        shadow[off:off + size] = data
+    for off, size in ops:
+        assert c.pread(fd, size, off) == bytes(shadow[off:off + size])
+    c.close()

@@ -1,0 +1,61 @@
+"""Device-direct placement (GPUDirect-RDMA analogue) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import ROS2Client
+from repro.core.device_direct import DeviceDirectSink, staged_read_tensor
+
+
+@pytest.fixture(scope="module", params=["host", "dpu"])
+def client_with_tensor(request):
+    c = ROS2Client(mode=request.param, transport="rdma")
+    arr = np.random.default_rng(3).standard_normal((64, 128)).astype(
+        np.float32)
+    c.mkdir("/tensors")
+    fd = c.open("/tensors/w0", create=True)
+    c.pwrite(fd, arr.tobytes(), 0)
+    yield c, fd, arr
+    c.close()
+
+
+def test_device_direct_matches_staged(client_with_tensor):
+    c, fd, arr = client_with_tensor
+    sink = DeviceDirectSink(c, slot_bytes=arr.nbytes, n_slots=2)
+    direct = sink.read_tensor(fd, 0, arr.shape, np.float32)
+    staged = staged_read_tensor(c, fd, 0, arr.shape, np.float32)
+    np.testing.assert_array_equal(np.asarray(direct), arr)
+    np.testing.assert_array_equal(np.asarray(staged), arr)
+    assert isinstance(direct, jax.Array)
+
+
+def test_device_direct_fewer_copies(client_with_tensor):
+    """The point of the design: RDMA into the registered ring is one splice
+    per block; the staged path adds a second client-side copy per block."""
+    c, fd, arr = client_with_tensor
+    sink = DeviceDirectSink(c, slot_bytes=arr.nbytes, n_slots=2)
+    s0 = c.io.stats.copy_bytes
+    sink.read_tensor(fd, 0, arr.shape, np.float32)
+    direct_wire = c.io.stats.copy_bytes - s0
+    assert direct_wire == arr.nbytes                 # exactly 1 copy/byte
+    assert sink.stats.device_puts == 1
+
+
+def test_device_direct_slot_too_small(client_with_tensor):
+    c, fd, arr = client_with_tensor
+    sink = DeviceDirectSink(c, slot_bytes=64, n_slots=1)
+    with pytest.raises(ValueError):
+        sink.read_tensor(fd, 0, arr.shape, np.float32)
+
+
+def test_device_direct_encrypted_payload():
+    """Inline DPU decryption composes with device-direct placement."""
+    c = ROS2Client(mode="dpu", transport="rdma", inline_encryption=True)
+    arr = np.arange(1024, dtype=np.int32)
+    fd = c.open("/enc-tensor", create=True)
+    c.pwrite(fd, arr.tobytes(), 0)
+    sink = DeviceDirectSink(c, slot_bytes=arr.nbytes)
+    got = sink.read_tensor(fd, 0, arr.shape, np.int32)
+    np.testing.assert_array_equal(np.asarray(got), arr)
+    c.close()

@@ -1,0 +1,63 @@
+"""Unit tests for dry-run helpers (no device state: pure config logic)."""
+import pytest
+
+from repro.common.config import SHAPES, cell_is_runnable
+from repro.configs import ARCHS, get_config
+
+
+def test_cell_skip_matrix():
+    runnable = {(a, s.name) for a in ARCHS for s in SHAPES
+                if cell_is_runnable(a, s.name)}
+    # 40 cells, long_500k only for the sub-quadratic archs
+    assert len(runnable) == 10 * 3 + 2
+    assert ("rwkv6-1.6b", "long_500k") in runnable
+    assert ("recurrentgemma-2b", "long_500k") in runnable
+    assert ("gemma-7b", "long_500k") not in runnable
+    assert ("deepseek-v2-236b", "long_500k") not in runnable
+
+
+def test_apply_variant_composition():
+    from repro.launch import dryrun  # sets XLA_FLAGS; fine in its own test
+    cfg = get_config("dbrx-132b")
+    out, nmb = dryrun.apply_variant(cfg, "fp8-dispatch+nmb16+save-coll")
+    assert out.moe.dispatch_dtype == "float8_e4m3fn"
+    assert out.remat_policy == "save_collectives"
+    assert nmb == 16
+    base, nmb0 = dryrun.apply_variant(cfg, "")
+    assert base == cfg and nmb0 is None
+
+
+def test_apply_variant_unknown_raises():
+    from repro.launch import dryrun
+    cfg = get_config("gemma-7b")
+    with pytest.raises(KeyError):
+        dryrun.apply_variant(cfg, "warp-speed")
+
+
+def test_assigned_configs_match_assignment():
+    """Spot-check the published numbers the assignment pins."""
+    g = get_config("gemma-7b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab, g.head_dim) == (28, 3072, 16, 16, 24576, 256000, 256)
+    d = get_config("deepseek-v2-236b")
+    assert (d.n_layers, d.d_model, d.n_heads, d.vocab) == \
+        (60, 5120, 128, 102400)
+    assert (d.moe.n_experts, d.moe.top_k, d.moe.n_shared) == (160, 6, 2)
+    assert (d.mla.kv_lora_rank, d.mla.qk_rope_head_dim) == (512, 64)
+    r = get_config("rwkv6-1.6b")
+    assert (r.n_layers, r.d_model, r.d_ff, r.vocab) == \
+        (24, 2048, 7168, 65536)
+    q = get_config("qwen3-14b")
+    assert q.qk_norm and (q.n_heads, q.n_kv_heads) == (40, 8)
+    x = get_config("dbrx-132b")
+    assert (x.moe.n_experts, x.moe.top_k) == (16, 4)
+    w = get_config("whisper-tiny")
+    assert w.family == "encdec" and (w.n_layers, w.d_model) == (4, 384)
+    v = get_config("llama-3.2-vision-90b")
+    assert v.family == "vlm" and (v.n_layers, v.d_model) == (100, 8192)
+    h = get_config("recurrentgemma-2b")
+    assert h.family == "hybrid" and h.hybrid.rnn_per_attn == 2
+    n = get_config("nemotron-4-15b")
+    assert n.act == "relu2" and (n.n_layers, n.d_model) == (32, 6144)
+    gr = get_config("granite-3-2b")
+    assert (gr.n_layers, gr.d_model, gr.n_kv_heads) == (40, 2048, 8)

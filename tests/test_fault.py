@@ -1,0 +1,72 @@
+"""Fault-tolerance layer tests: straggler detection, elastic membership,
+and the end-to-end failure drill through the training driver."""
+import numpy as np
+
+from repro.distributed.fault import (ElasticMembership, FailureInjector,
+                                     StragglerMonitor)
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(window=8, factor=2.0)
+    rng = np.random.default_rng(0)
+    for step in range(20):
+        for rank in range(8):
+            dt = 0.1 + rng.uniform(0, 0.01)
+            if rank == 5:
+                dt = 0.35          # persistent straggler
+            mon.record(rank, dt)
+    assert mon.stragglers() == [5]
+
+
+def test_straggler_requires_persistence():
+    mon = StragglerMonitor(window=8, factor=2.0)
+    for step in range(20):
+        for rank in range(4):
+            dt = 0.1
+            if rank == 2 and step == 3:
+                dt = 1.0           # single blip, median-filtered out
+            mon.record(rank, dt)
+    assert mon.stragglers() == []
+
+
+def test_elastic_membership_reshard_notifications():
+    em = ElasticMembership(4)
+    events = []
+    em.subscribe(lambda asg, size: events.append((dict(asg), size)))
+    em.leave("host1")
+    asg, size = events[-1]
+    assert size == 3
+    assert sorted(asg.values()) == [0, 1, 2]     # dense ranks
+    em.join("host9")
+    asg, size = events[-1]
+    assert size == 4 and len(set(asg.values())) == 4
+    # stable: same membership -> same assignment
+    assert asg == em.assignment()
+
+
+def test_end_to_end_failure_drill():
+    """Kill a storage device mid-training run; the run completes and the
+    loss stays finite (reads served from replicas)."""
+    from repro.launch.train import main
+    loss = main(["--arch", "tiny-rwkv6-1.6b", "--steps", "6",
+                 "--global-batch", "2", "--seq", "32",
+                 "--storage-mode", "host", "--transport", "rdma",
+                 "--inject-failure-at", "3"])
+    assert np.isfinite(loss)
+
+
+def test_resume_from_checkpoint_drill():
+    """Train, 'preempt', resume: the driver picks up the committed step."""
+    from repro.launch.train import main
+    import repro.launch.train as T
+    # run 6 steps with ckpt every 3, then resume for the remainder
+    main(["--arch", "tiny-granite-3-2b", "--steps", "6",
+          "--global-batch", "2", "--seq", "32", "--ckpt-every", "3",
+          "--storage-mode", "host", "--transport", "rdma"])
+    # fresh process state is simulated by a new client in main();
+    # resume path exercised directly:
+    loss = main(["--arch", "tiny-granite-3-2b", "--steps", "6",
+                 "--global-batch", "2", "--seq", "32", "--ckpt-every", "3",
+                 "--storage-mode", "host", "--transport", "rdma",
+                 "--resume"])
+    assert np.isfinite(loss)

@@ -1,0 +1,306 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp ref.
+
+Sweeps shapes/dtypes per kernel and asserts allclose; also checks the
+kernels against the *model-side* oracles (layers.attention, recurrent's
+associative scan, rwkv.wkv_sequential) and the storage-side numpy
+implementations, so kernel <-> system consistency is pinned.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwkv6_scan.ops import wkv6
+from repro.kernels.rwkv6_scan.ref import wkv_ref
+from repro.kernels.fletcher.ops import fletcher_checksum, packed
+from repro.kernels.fletcher.ref import fletcher_ref, fletcher_np
+from repro.kernels.stream_cipher.ops import stream_cipher
+from repro.kernels.stream_cipher.ref import cipher_ref
+
+
+def keys3(seed: int):
+    return jax.random.split(jax.random.PRNGKey(seed), 3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,T,S,H,KH,D,causal,window,softcap",
+    [
+        (1, 128, 128, 4, 4, 64, True, None, None),      # MHA causal
+        (2, 128, 128, 4, 2, 64, True, None, None),      # GQA
+        (1, 256, 256, 4, 1, 64, True, None, None),      # MQA
+        (1, 256, 256, 2, 2, 64, True, 64, None),        # local window
+        (1, 128, 128, 2, 2, 64, True, None, 30.0),      # softcap
+        (1, 128, 128, 2, 2, 64, False, None, None),     # full (non-causal)
+        (1, 100, 100, 2, 2, 64, True, None, None),      # non-multiple T/S
+        (1, 128, 128, 2, 2, 128, True, None, None),     # head_dim 128
+    ])
+def test_flash_vs_ref(B, T, S, H, KH, D, causal, window, softcap, dtype):
+    kq, kk, kv = keys3(B * 1000 + T + S + H * 7 + D)
+    q = jax.random.normal(kq, (B, T, H, D), dtype)
+    k = jax.random.normal(kk, (B, S, KH, D), dtype)
+    v = jax.random.normal(kv, (B, S, KH, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_vs_model_attention():
+    """Kernel matches the model-side chunked online-softmax attention."""
+    from repro.models import layers as L
+    B, T, H, KH, D = 2, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KH, D), jnp.float32)
+    pos = jnp.arange(T)
+    model = L.attention(q, k, v, q_positions=pos, kv_positions=pos,
+                        causal=True)
+    kern = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(model),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_grad_matches_ref_grad():
+    B, T, H, D = 1, 64, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, T, H, D))
+    v = jax.random.normal(ks[2], (B, T, H, D))
+
+    def f_kern(q, k, v):
+        return jnp.sum(jnp.square(
+            flash_attention(q, k, v, block_q=32, block_k=32)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.square(attention_ref(q, k, v)))
+
+    gk = jax.grad(f_kern, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+
+
+@pytest.mark.parametrize("B,T,R", [(1, 64, 128), (2, 128, 256),
+                                   (1, 100, 96), (3, 32, 512)])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_rglru_vs_ref(B, T, R, with_h0):
+    ks = jax.random.split(jax.random.PRNGKey(B * T + R), 3)
+    # decays in (0,1) like the model's exp(log_a)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, R)) * 2.0)
+    b = jax.random.normal(ks[1], (B, T, R))
+    h0 = jax.random.normal(ks[2], (B, R)) if with_h0 else None
+    out = rglru_scan(a, b, h0, block_t=32, block_r=64)
+    ref = rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_vs_model_scan():
+    from repro.models.recurrent import _lru_scan
+    B, T, R = 2, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, R)))
+    b = jax.random.normal(ks[1], (B, T, R))
+    h0 = jax.random.normal(ks[2], (B, R))
+    np.testing.assert_allclose(
+        np.asarray(rglru_scan(a, b, h0, block_t=32, block_r=64)),
+        np.asarray(_lru_scan(a, b, h0)), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_grad_matches_ref_grad():
+    B, T, R = 1, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, R)))
+    b = jax.random.normal(ks[1], (B, T, R))
+    h0 = jax.random.normal(ks[2], (B, R))
+
+    def f(fn):
+        def g(a_, b_, h_):
+            return jnp.sum(jnp.sin(fn(a_, b_, h_)))
+        return jax.grad(g, argnums=(0, 1, 2))(a, b, h0)
+
+    gk = f(lambda a_, b_, h_: rglru_scan(a_, b_, h_, block_t=16, block_r=32))
+    gr = f(rglru_scan_ref)
+    for x, y in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (1, 64, 2, 32, 16), (2, 96, 2, 64, 32), (1, 33, 1, 64, 16),
+    (1, 128, 4, 64, 64)])
+def test_wkv6_vs_ref(B, T, H, hd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(T + hd), 6)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    # realistic decays: mostly close to 1 with some strong-decay channels
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd))))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+    y, s = wkv6(r, k, v, w, u, s0, chunk=chunk)
+    yr, sr = wkv_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_wkv6_vs_model_chunked():
+    from repro.models.rwkv import wkv_chunked
+    B, T, H, hd = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(29), 5)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd))))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.5
+    y, s = wkv6(r, k, v, w, u, chunk=16)
+    ym, sm = wkv_chunked(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ym),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sm),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_wkv6_strong_decay_stability():
+    """Strong decay (w ~ 0) must not overflow the chunked form."""
+    B, T, H, hd = 1, 64, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jnp.full((B, T, H, hd), 1e-9)
+    u = jnp.zeros((H, hd))
+    y, s = wkv6(r, k, v, w, u, chunk=32)
+    yr, _ = wkv_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fletcher checksum
+
+
+@pytest.mark.parametrize("n", [1, 7, 256, 2048, 2049, 10000])
+def test_fletcher_vs_ref(n):
+    words = jnp.asarray(
+        np.random.default_rng(n).integers(0, 2**32, n, dtype=np.uint32))
+    out = fletcher_checksum(words, block=256)
+    ref = fletcher_ref(words)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fletcher_vs_numpy_bytes():
+    data = np.random.default_rng(0).integers(
+        0, 256, 1013, dtype=np.uint8).tobytes()
+    kern = packed(fletcher_checksum(jnp.asarray(
+        np.frombuffer(data, np.uint8)), block=128))
+    assert kern == fletcher_np(data)
+
+
+def test_fletcher_detects_corruption():
+    words = jnp.asarray(np.arange(4096, dtype=np.uint32))
+    base = packed(fletcher_checksum(words))
+    flipped = words.at[1234].set(words[1234] ^ 1)
+    assert packed(fletcher_checksum(flipped)) != base
+    # order sensitivity (this is why there are two sums)
+    swapped = np.asarray(words).copy()
+    swapped[10], swapped[11] = swapped[11], swapped[10]
+    assert packed(fletcher_checksum(jnp.asarray(swapped))) != base
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.uint8])
+def test_fletcher_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (333,)).astype(
+        jnp.float32)
+    if dtype == jnp.uint8:
+        x = jnp.asarray(np.random.default_rng(1).integers(
+            0, 256, 333, dtype=np.uint8))
+    else:
+        x = x.astype(dtype)
+    out = fletcher_checksum(x)
+    assert out.shape == (2,) and out.dtype == jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Stream cipher
+
+
+@pytest.mark.parametrize("n", [4, 100, 4096, 8193])
+def test_cipher_vs_ref(n):
+    words = jnp.asarray(
+        np.random.default_rng(n).integers(0, 2**32, n, dtype=np.uint32))
+    out = stream_cipher(words, key=0xC0FFEE, nonce=42, block=512)
+    ref = cipher_ref(words, key=0xC0FFEE, nonce=42)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_cipher_involution_and_diffusion():
+    data = jnp.asarray(np.random.default_rng(7).integers(
+        0, 256, 999, dtype=np.uint8))
+    enc = stream_cipher(data, key=1, nonce=2)
+    dec = stream_cipher(enc, key=1, nonce=2)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(data))
+    # different nonce -> different ciphertext
+    enc2 = stream_cipher(data, key=1, nonce=3)
+    assert (np.asarray(enc) != np.asarray(enc2)).mean() > 0.9
+
+
+@pytest.mark.parametrize(
+    "B,T,H,KH,D,window,dtype",
+    [
+        (1, 128, 4, 2, 64, None, jnp.float32),     # GQA group reduction
+        (2, 64, 4, 1, 64, None, jnp.float32),      # MQA
+        (1, 128, 2, 2, 64, 32, jnp.float32),       # local window
+        (1, 100, 2, 2, 64, None, jnp.float32),     # non-multiple T
+        (1, 128, 2, 2, 128, None, jnp.bfloat16),   # bf16, head_dim 128
+    ])
+def test_flash_pallas_bwd_vs_ref(B, T, H, KH, D, window, dtype):
+    """The dedicated Pallas backward kernels (dq + dkv) vs jnp-vjp ref."""
+    ks = jax.random.split(jax.random.PRNGKey(T + H + D), 4)
+    q = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, KH, D), dtype)
+    ct = jax.random.normal(ks[3], (B, T, H, D), dtype)
+
+    def f_kern(q, k, v):
+        return flash_attention(q, k, v, window=window,
+                               block_q=64, block_k=64)
+
+    def f_ref(q, k, v):
+        return attention_ref(q, k, v, window=window)
+
+    _, vjp_k = jax.vjp(f_kern, q, k, v)
+    _, vjp_r = jax.vjp(f_ref, q, k, v)
+    gk, gr = vjp_k(ct), vjp_r(ct)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    for a, b, name in zip(gk, gr, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol, rtol=tol, err_msg=name)

@@ -1,0 +1,121 @@
+"""Validation of the calibrated system against the paper's own claims
+(DESIGN.md §8). Every assertion cites the paper section it reproduces.
+
+One documented deviation: the paper reports ~6.4 GiB/s for 1-SSD RDMA DFS
+reads — *above* its own Fig. 3 single-device ceiling (~5.6 GiB/s); our
+model is ceiling-faithful, so the band for that cell is [5.0, 6.6] and the
+model lands at the media ceiling (see EXPERIMENTS.md §Paper-claims).
+"""
+import pytest
+
+from repro.core.fio import local_fio, remote_spdk
+from repro.core.sim import GiB, KiB, MiB
+from benchmarks.fig5_dfs_offload import dfs_perf
+
+
+# ---------------------------------------------------------------------------
+# Claim 1-2: Fig. 3 local ceilings
+
+
+def test_local_1ssd_large_block():
+    r = local_fio(1, MiB, "read", 8)[1] / GiB
+    w = local_fio(1, MiB, "write", 8)[1] / GiB
+    assert 5.0 <= r <= 5.8, r
+    assert 2.4 <= w <= 3.0, w
+
+
+def test_local_4ssd_large_block_scales_linearly():
+    r = local_fio(4, MiB, "read", 8)[1] / GiB
+    w = local_fio(4, MiB, "write", 8)[1] / GiB
+    assert 20.0 <= r <= 22.5, r
+    assert 10.0 <= w <= 11.0, w
+    # one job already saturates (paper implication (a))
+    r1 = local_fio(4, MiB, "read", 1)[1] / GiB
+    assert r1 >= 0.95 * r, (r1, r)
+
+
+def test_local_4k_iops_concurrency_not_drives():
+    i1 = local_fio(1, 4 * KiB, "randread", 1)[0]
+    i16 = local_fio(1, 4 * KiB, "randread", 16)[0]
+    assert 60e3 <= i1 <= 100e3, i1          # ~80 K @ 1 job
+    assert 500e3 <= i16 <= 700e3, i16       # ~600 K @ 16 jobs
+    # drive-count insensitive (host-path limited)
+    i16_4 = local_fio(4, 4 * KiB, "randread", 16)[0]
+    assert abs(i16_4 - i16) / i16 < 0.1, (i16, i16_4)
+
+
+# ---------------------------------------------------------------------------
+# Claim 3-4: Fig. 4 remote SPDK
+
+
+def test_remote_1mib_transport_agnostic():
+    t = remote_spdk("tcp", MiB, "read", 8, 8)[1]
+    r = remote_spdk("rdma", MiB, "read", 8, 8)[1]
+    assert abs(t - r) / r < 0.1, (t / GiB, r / GiB)
+
+
+def test_remote_4k_rdma_beats_tcp_and_scales():
+    t16 = remote_spdk("tcp", 4 * KiB, "randread", 16, 16)[0]
+    r16 = remote_spdk("rdma", 4 * KiB, "randread", 16, 16)[0]
+    assert r16 > 1.8 * t16, (r16, t16)
+    # RDMA keeps scaling with cores; TCP plateaus
+    t4 = remote_spdk("tcp", 4 * KiB, "randread", 4, 4)[0]
+    r4 = remote_spdk("rdma", 4 * KiB, "randread", 4, 4)[0]
+    assert r16 / r4 > 2.5, (r4, r16)        # near-linear core scaling
+    assert t16 / t4 < 2.5, (t4, t16)        # throttled by shared RX path
+
+
+# ---------------------------------------------------------------------------
+# Claims 5-7: Fig. 5 DFS end-to-end
+
+
+def test_dfs_host_tcp():
+    bw1 = dfs_perf("host", "tcp", MiB, False, 1, 16) * MiB / GiB
+    bw4 = dfs_perf("host", "tcp", MiB, False, 4, 16) * MiB / GiB
+    iops = dfs_perf("host", "tcp", 4 * KiB, False, 1, 16)
+    assert 5.0 <= bw1 <= 6.2, bw1           # ~5-6 GiB/s
+    assert 9.5 <= bw4 <= 11.6, bw4          # ~10 GiB/s (link-bound)
+    assert 0.4e6 <= iops <= 0.62e6, iops    # 0.4-0.6 M IOPS
+
+
+def test_dfs_dpu_tcp_rx_collapse():
+    # reads cap at 1.6-3.1 GiB/s and DEGRADE with concurrency
+    caps = [dfs_perf("dpu", "tcp", MiB, False, 4, j) * MiB / GiB
+            for j in (1, 4, 16)]
+    assert all(1.5 <= c <= 3.2 for c in caps), caps
+    assert caps[-1] < caps[0], caps         # degradation under load
+    # writes are fine (TX path): ~10 GiB/s with 4 SSDs
+    w = dfs_perf("dpu", "tcp", MiB, True, 4, 16) * MiB / GiB
+    assert 9.5 <= w <= 11.0, w
+    # 4 KiB: 0.18-0.23 M IOPS
+    i = dfs_perf("dpu", "tcp", 4 * KiB, False, 1, 16)
+    assert 0.17e6 <= i <= 0.24e6, i
+
+
+def test_dfs_rdma_dpu_matches_host_large_block():
+    for n_dev, lo, hi in ((1, 5.0, 6.6), (4, 9.5, 11.7)):
+        h = dfs_perf("host", "rdma", MiB, False, n_dev, 16) * MiB / GiB
+        d = dfs_perf("dpu", "rdma", MiB, False, n_dev, 16) * MiB / GiB
+        assert lo <= h <= hi, (n_dev, h)
+        assert abs(d - h) / h < 0.05, (n_dev, h, d)   # parity
+
+
+def test_dfs_rdma_dpu_4k_gap():
+    h = dfs_perf("host", "rdma", 4 * KiB, False, 1, 16)
+    d = dfs_perf("dpu", "rdma", 4 * KiB, False, 1, 16)
+    t = dfs_perf("dpu", "tcp", 4 * KiB, False, 1, 16)
+    assert 0.60 <= d / h <= 0.80, d / h     # trails host by 20-40%
+    assert d / t >= 2.0, d / t              # >= 2x DPU TCP
+
+
+# ---------------------------------------------------------------------------
+# Claim: RDMA >= TCP everywhere (the paper's headline)
+
+
+@pytest.mark.parametrize("mode", ["host", "dpu"])
+@pytest.mark.parametrize("io,write", [(MiB, False), (MiB, True),
+                                      (4 * KiB, False), (4 * KiB, True)])
+def test_rdma_never_loses(mode, io, write):
+    t = dfs_perf(mode, "tcp", io, write, 4, 16)
+    r = dfs_perf(mode, "rdma", io, write, 4, 16)
+    assert r >= 0.99 * t, (mode, io, write, t, r)

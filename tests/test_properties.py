@@ -1,0 +1,99 @@
+"""System-invariant property tests (hypothesis).
+
+The MVA queueing model and the checkpoint manager are the two components
+whose correctness is easiest to state as laws; pin them under random
+inputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim import Station, mva
+
+
+# ---------------------------------------------------------------------------
+# MVA laws
+
+
+@st.composite
+def station_sets(draw):
+    n = draw(st.integers(1, 5))
+    out = []
+    for i in range(n):
+        d = draw(st.floats(1e-7, 1e-3, allow_nan=False))
+        servers = draw(st.integers(1, 8))
+        kind = draw(st.sampled_from(["queue", "queue", "delay"]))
+        out.append(Station(f"s{i}", d, servers=servers, kind=kind))
+    return out
+
+
+@given(station_sets(), st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_mva_throughput_positive_and_monotone_in_jobs(stations, n):
+    x1, _ = mva(stations, n)
+    x2, _ = mva(stations, n + 8)
+    assert x1 > 0
+    assert x2 >= x1 - 1e-9          # closed MVA throughput is nondecreasing
+
+
+@given(station_sets(), st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_mva_bottleneck_bound(stations, n):
+    """Throughput never exceeds the bottleneck station's service capacity
+    (nor N / total-demand)."""
+    x, _ = mva(stations, n)
+    cap = min((s.servers / s.demand_s for s in stations
+               if s.kind == "queue" and s.demand_s > 0 and s.degrade == 0.0),
+              default=float("inf"))
+    total = sum(s.demand_s for s in stations)
+    assert x <= cap * (1 + 1e-9)
+    assert x <= n / total * (1 + 1e-9)
+
+
+@given(st.integers(1, 32))
+@settings(max_examples=20, deadline=None)
+def test_mva_single_station_exact(n):
+    """M/M/1-style closed loop with one queue: X = N/(D*(N)) asymptote ->
+    exactly 1/D for large N, N/(N*D) in general (no think time)."""
+    d = 10e-6
+    x, _ = mva([Station("q", d)], n)
+    assert x <= 1.0 / d + 1e-6
+    if n == 1:
+        assert abs(x - 1.0 / d) < 1e-3 / d
+
+
+# ---------------------------------------------------------------------------
+# checkpoint roundtrip law
+
+
+@st.composite
+def pytrees(draw):
+    n = draw(st.integers(1, 4))
+    tree = {}
+    for i in range(n):
+        shape = tuple(draw(st.lists(st.integers(1, 5), min_size=0,
+                                    max_size=3)))
+        dtype = draw(st.sampled_from([np.float32, np.int32]))
+        rng = np.random.default_rng(i)
+        arr = (rng.standard_normal(shape).astype(dtype)
+               if dtype == np.float32
+               else rng.integers(-100, 100, shape).astype(dtype))
+        tree[f"leaf{i}"] = jnp.asarray(arr)
+    return tree
+
+
+@given(pytrees(), st.integers(1, 1000))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_roundtrip_random_trees(tree, step):
+    from repro.core.client import ROS2Client
+    from repro.distributed.checkpoint import ROS2CheckpointManager
+    c = ROS2Client(mode="host", transport="rdma")
+    mgr = ROS2CheckpointManager(c, "/ckpt", asynchronous=False)
+    mgr.save(step, tree)
+    got_step, got = mgr.restore(tree)
+    assert got_step == step
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step + prefill/decode on CPU; asserts shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ShapeConfig, TrainConfig
+from repro.configs import ARCHS, get_config, tiny_config
+from repro.models.api import ModelAPI
+from repro.models.context import single_device_ctx
+from repro.models.params import init_params
+from repro.train.optimizer import init_adam
+from repro.train.trainer import make_train_step
+
+B, S = 2, 32
+
+
+def _inputs(api, cfg):
+    k = jax.random.key(0)
+    toks = jax.random.randint(k, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            k, (B, cfg.vlm.n_vision_tokens, cfg.vlm.d_vision), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(k, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    name = request.param
+    cfg = tiny_config(name)
+    api = ModelAPI(cfg)
+    mctx = single_device_ctx(cfg)
+    params = init_params(api.param_defs(), jax.random.key(0),
+                         jnp.dtype(cfg.param_dtype))
+    return name, cfg, api, mctx, params
+
+
+def test_full_config_matches_assignment(arch_setup):
+    name, *_ = arch_setup
+    full = get_config(name)
+    assert full.name == name
+    assert full.n_params() > 0
+
+
+def test_forward_loss_finite(arch_setup):
+    name, cfg, api, mctx, params = arch_setup
+    batch = _inputs(api, cfg)
+    loss = jax.jit(lambda p, b: api.loss(p, b, mctx))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{name} loss NaN"
+
+
+def test_train_step(arch_setup):
+    name, cfg, api, mctx, params = arch_setup
+    batch = _inputs(api, cfg)
+    tcfg = TrainConfig(num_microbatches=2, lr=1e-3)
+    step = jax.jit(make_train_step(api, tcfg, mctx))
+    opt = init_adam(params)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(new_params),
+                                jax.tree.leaves(params)))
+    assert delta > 0, f"{name}: optimizer produced no update"
+    # loss decreases over a few steps on a fixed batch
+    p, o = new_params, new_opt
+    first = float(metrics["loss"])
+    for _ in range(3):
+        p, o, metrics = step(p, o, batch)
+    assert float(metrics["loss"]) < first, f"{name}: loss did not decrease"
+
+
+def test_prefill_decode(arch_setup):
+    name, cfg, api, mctx, params = arch_setup
+    batch = _inputs(api, cfg)
+    logits, cache = jax.jit(lambda p, b: api.prefill(p, b, mctx))(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # decode one token: caches sized by prefill need room -> pad seq dim
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        def pad(x):
+            if x.ndim >= 3 and x.shape[-3] == S:  # (..., S, KH, hd)
+                pw = [(0, 0)] * x.ndim
+                pw[-3] = (0, 8)
+                return jnp.pad(x, pw)
+            if x.ndim >= 2 and cfg.mla is not None and x.shape[-2] == S:
+                pw = [(0, 0)] * x.ndim
+                pw[-2] = (0, 8)
+                return jnp.pad(x, pw)
+            return x
+        cache = jax.tree.map(pad, cache)
+    token = batch["tokens"][:, 0]
+    pos = jnp.full((B,), S, jnp.int32)
+    logits2, cache2 = jax.jit(
+        lambda p, t, q, c: api.decode(p, {"token": t, "pos": q}, c, mctx)
+    )(params, token, pos, cache)
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2)).all(), f"{name} decode NaN"
+
+
+def test_decode_matches_prefill(arch_setup):
+    """Incremental decoding must agree with a one-shot prefill."""
+    name, cfg, api, mctx, params = arch_setup
+    if cfg.family == "encdec":
+        pytest.skip("enc-dec prefill primes on full decoder prefix already")
+    batch = _inputs(api, cfg)
+    toks = batch["tokens"]
+    T0 = S - 3
+    b0 = dict(batch, tokens=toks[:, :T0])
+    _, cache = jax.jit(lambda p, b: api.prefill(p, b, mctx))(params, b0)
+    if cfg.family in ("dense", "moe", "vlm"):
+        def pad(x):
+            if x.ndim >= 3 and x.shape[-3] == T0:
+                pw = [(0, 0)] * x.ndim
+                pw[-3] = (0, 8)
+                return jnp.pad(x, pw)
+            if cfg.mla is not None and x.ndim >= 2 and x.shape[-2] == T0:
+                pw = [(0, 0)] * x.ndim
+                pw[-2] = (0, 8)
+                return jnp.pad(x, pw)
+            return x
+        cache = jax.tree.map(pad, cache)
+    dec = jax.jit(lambda p, t, q, c: api.decode(p, {"token": t, "pos": q}, c, mctx))
+    lg = None
+    for i in range(T0, S):
+        lg, cache = dec(params, toks[:, i], jnp.full((B,), i, jnp.int32), cache)
+    # lg = logits after consuming tokens[:, :S] incrementally; reference is
+    # the one-shot prefill over the same S tokens.
+    lg_ref, _ = jax.jit(lambda p, b: api.prefill(p, b, mctx))(params, batch)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               atol=5e-2, rtol=5e-2)
