@@ -10,6 +10,29 @@ mode="dpu":  the DFS client runs on the SmartNIC worker pool; the host only
              rings doorbells (ROS2Client.submit/poll or the sync wrappers).
 transport:   "rdma" (zero-copy, rkey-checked) or "tcp" (two-copy, segmented).
 
+Data-path anatomy (the vectored scatter-gather path, default):
+
+    pread:  object store --fetch_into--> staging-ring slots (per-slot
+            locks, N concurrent ops) --ONE read_sg splice per batch-->
+            caller's registered region. One rkey resolution per transport
+            lifetime (cached), one rendezvous per SG op, 2 byte-copies +
+            1 checksum pass per byte end to end.
+    pwrite: each iovec buffer registered once per writev (zero-copy wrap,
+            no MR churn per block) --ONE write_sg per batch--> staging
+            slots --update_many--> one epoch, one extent lock acquisition,
+            replica writes outside the lock. One set_size control RPC per
+            writev.
+
+Inline crypto (when enabled) is applied on the staging leg — the DPU-
+adjacent bounce buffer — with per-block nonces and block-absolute
+keystream offsets (partial-block reads decrypt at the stream position the
+write used), identically on the vectored and legacy paths so both
+interoperate on the same stored bytes.
+
+`legacy=True` keeps the seed per-block path (one transport op + one MR
+register/deregister per block, global engine lock, scalar CRC32 extent
+checksums) so benchmarks can measure the gain in the same run.
+
 Perf numbers for any workload come from `stations()` + core.sim.mva — the
 same calibrated model the paper-figure benchmarks use.
 """
@@ -17,7 +40,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -26,19 +49,83 @@ from repro.core.control_plane import ControlPlane
 from repro.core.data_plane import (MemoryRegion, MemoryRegistry,
                                    RDMATransport, TCPTransport)
 from repro.core.dfs import AKEY, BLOCK, DFSClient, DFSMeta, split_blocks
-from repro.core.media import Device, make_nvme_array, striped_stations
+from repro.core.media import (Device, crc32_checksum, make_nvme_array,
+                              striped_stations)
 from repro.core.object_store import ObjectStore
 from repro.core.sim import Station, mva
 from repro.core.smartnic import DPURuntime, InlineCrypto
 
 
+class _StagingRing:
+    """N block-sized staging slots in ONE registered server region.
+
+    Slot ownership is per-slot (a Lock each); `acquire(k)` hands out k free
+    slots atomically (waits until k are free at once, so concurrent multi-
+    slot ops can never deadlock holding partial sets). This replaces the
+    seed's single 4-block staging region guarded by a global engine lock —
+    with 16 slots, 16 DPU workers stage in parallel."""
+
+    def __init__(self, registry: MemoryRegistry, n_slots: int,
+                 slot_bytes: int, tenant: str):
+        self.n_slots = max(1, int(n_slots))
+        self.slot_bytes = int(slot_bytes)
+        self.region = registry.register(self.n_slots * self.slot_bytes,
+                                        tenant)
+        self._locks = [threading.Lock() for _ in range(self.n_slots)]
+        self._free = list(range(self.n_slots))
+        self._cv = threading.Condition()
+
+    def acquire(self, k: int, timeout: float = 120.0) -> List[int]:
+        k = min(k, self.n_slots)
+        import time as _time
+        deadline = _time.monotonic() + timeout
+        with self._cv:
+            while len(self._free) < k:
+                if not self._cv.wait(deadline - _time.monotonic()):
+                    raise TimeoutError("staging ring exhausted")
+            slots = [self._free.pop() for _ in range(k)]
+        for s in slots:
+            acquired = self._locks[s].acquire(blocking=False)
+            assert acquired, "staging slot handed out twice"
+        return slots
+
+    def release(self, slots: List[int]) -> None:
+        for s in slots:
+            self._locks[s].release()
+        with self._cv:
+            self._free.extend(slots)
+            self._cv.notify_all()
+
+    def offset(self, slot: int) -> int:
+        return slot * self.slot_bytes
+
+    def view(self, slot: int) -> np.ndarray:
+        off = slot * self.slot_bytes
+        return self.region.buf[off:off + self.slot_bytes]
+
+
 class _ServerIO:
-    """Transport-aware server I/O adapter used by DFSClient."""
+    """Transport-aware server I/O adapter used by DFSClient.
+
+    Default path is vectored: `writev`/`read_into` coalesce the
+    `split_blocks` output into one scatter-gather transport op per staging
+    batch, stage through the per-slot-locked ring (no global lock), and
+    commit/fetch through the engine's batched `update_many`/`fetch_into`.
+    `legacy=True` preserves the seed per-block path for comparison.
+
+    Concurrency semantics: with the global lock gone, overlapping reads
+    and writes from different callers are NOT atomic against each other —
+    a reader racing a multi-block writer may observe some blocks from the
+    new write and some from the old state (each block individually
+    consistent via epochs). This matches POSIX/DFS practice for
+    unsynchronized overlapping I/O; callers needing read-vs-write
+    atomicity must serialize at the application layer."""
 
     def __init__(self, engine_container, client_registry: MemoryRegistry,
                  server_registry: MemoryRegistry, transport: str,
                  tenant: str, control: ControlPlane,
-                 crypto: Optional[InlineCrypto] = None):
+                 crypto: Optional[InlineCrypto] = None,
+                 n_staging_slots: int = 16, legacy: bool = False):
         self.container = engine_container
         self.creg = client_registry
         self.sreg = server_registry
@@ -46,8 +133,11 @@ class _ServerIO:
         self.cp = control
         self.crypto = crypto
         self.transport_kind = transport
-        # server staging region (bounce buffer) for the engine side
-        self.staging = self.sreg.register(4 * BLOCK, tenant)
+        self.legacy = legacy
+        # server staging ring (bounce buffers) for the engine side; the
+        # legacy path uses the same region through `self.staging`
+        self.ring = _StagingRing(self.sreg, n_staging_slots, BLOCK, tenant)
+        self.staging = self.ring.region
         if transport == "rdma":
             self.xport = RDMATransport(local=self.creg, remote=self.sreg)
             # session-scoped capability exchange over the control plane
@@ -60,13 +150,151 @@ class _ServerIO:
         else:
             self.xport = TCPTransport(local=self.creg, remote=self.sreg)
             self.staging_rkey = None
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()           # legacy path only
+        # concurrency gauge: how many reads are in flight right now / ever
+        self._gauge_lock = threading.Lock()
+        self._active_reads = 0
+        self.max_concurrent_reads = 0
 
     @property
     def stats(self):
         return self.xport.stats
 
+    # -- vectored write path -------------------------------------------------
     def write(self, oid: int, offset: int, data) -> None:
+        if self.legacy:
+            self._write_legacy(oid, offset, data)
+        else:
+            self.writev(oid, offset, [data])
+
+    def writev(self, oid: int, offset: int, buffers: Sequence) -> int:
+        """Scatter-gather write: every iovec buffer is registered once
+        (zero-copy wrap, no concatenation), moved in ring-sized SG batches
+        (one transport op each, descriptors pointing into the caller's own
+        regions), and committed via `update_many` (one epoch per writev)."""
+        if self.legacy:
+            pos = offset
+            for a in buffers:
+                b = bytes(a)
+                self._write_legacy(oid, pos, b)
+                pos += len(b)
+            return pos - offset
+        arrs = [a if isinstance(a, np.ndarray)
+                else np.frombuffer(bytes(a), np.uint8) for a in buffers]
+        arrs = [a for a in arrs if a.size]
+        total = int(sum(a.size for a in arrs))
+        if total == 0:
+            return 0
+        obj = self.container.object(oid)
+        mrs = [self.creg.register(a, self.tenant) for a in arrs]
+        # buffer spans in writev-global byte coordinates
+        spans, g = [], 0
+        for mr in mrs:
+            spans.append((g, g + mr.size, mr))
+            g += mr.size
+        epoch = self.container.next_epoch()
+        try:
+            blocks = split_blocks(offset, total)
+            pos = 0
+            for base in range(0, len(blocks), self.ring.n_slots):
+                batch = blocks[base:base + self.ring.n_slots]
+                slots = self.ring.acquire(len(batch))
+                try:
+                    iov, p = [], pos
+                    for (b, bo, ln), s in zip(batch, slots):
+                        # a block may straddle buffer boundaries: one
+                        # descriptor per (block, buffer) overlap
+                        for g0, g1, mr in spans:
+                            lo, hi = max(p, g0), min(p + ln, g1)
+                            if lo < hi:
+                                iov.append((self.ring.offset(s) + lo - p,
+                                            mr, lo - g0, hi - lo))
+                        p += ln
+                    if self.transport_kind == "rdma":
+                        self.xport.write_sg(self.staging_rkey, self.tenant,
+                                            iov)
+                    else:
+                        self.xport.write_sg(self.staging, iov)
+                    items = []
+                    for (b, bo, ln), s in zip(batch, slots):
+                        view = self.ring.view(s)[:ln]
+                        if self.crypto is not None:
+                            view[:] = self.crypto.apply(
+                                view, nonce=oid * (1 << 20) + b,
+                                offset=bo)
+                        items.append((str(b), AKEY, bo, view.tobytes()))
+                    obj.update_many(items, epoch=epoch)
+                    pos = p
+                finally:
+                    self.ring.release(slots)
+        finally:
+            for mr in mrs:
+                self.creg.deregister(mr)
+        return total
+
+    # -- vectored read path --------------------------------------------------
+    def _fetch_block(self, obj, oid: int, b: int, bo: int, ln: int,
+                     view: np.ndarray) -> None:
+        """Stage one block: engine -> ring slot (tests hook this to assert
+        staging-ring concurrency)."""
+        obj.fetch_into(str(b), AKEY, bo, ln, view)
+        if self.crypto is not None:
+            view[:ln] = self.crypto.apply(view[:ln],
+                                          nonce=oid * (1 << 20) + b,
+                                          offset=bo)
+
+    def read_into(self, oid: int, offset: int, size: int,
+                  dst_mr: MemoryRegion, dst_off: int = 0) -> int:
+        """Device-direct gather-read: blocks are staged into ring slots
+        (concurrently with other readers — per-slot locks, no engine-wide
+        lock) and land in the caller's registered region with ONE
+        scatter-gather splice per batch. This is the GPUDirect-RDMA
+        analogue's transport leg (core.device_direct builds on it)."""
+        if self.legacy:
+            return self._read_into_legacy(oid, offset, size, dst_mr, dst_off)
+        obj = self.container.object(oid)
+        with self._gauge_lock:
+            self._active_reads += 1
+            self.max_concurrent_reads = max(self.max_concurrent_reads,
+                                            self._active_reads)
+        try:
+            blocks = split_blocks(offset, size)
+            pos = 0
+            for base in range(0, len(blocks), self.ring.n_slots):
+                batch = blocks[base:base + self.ring.n_slots]
+                slots = self.ring.acquire(len(batch))
+                try:
+                    iov = []
+                    for (b, bo, ln), s in zip(batch, slots):
+                        self._fetch_block(obj, oid, b, bo, ln,
+                                          self.ring.view(s)[:ln])
+                        iov.append((self.ring.offset(s), dst_mr,
+                                    dst_off + pos, ln))
+                        pos += ln
+                    if self.transport_kind == "rdma":
+                        self.xport.read_sg(self.staging_rkey, self.tenant,
+                                           iov)
+                    else:
+                        self.xport.read_sg(self.staging, iov)
+                finally:
+                    self.ring.release(slots)
+        finally:
+            with self._gauge_lock:
+                self._active_reads -= 1
+        return size
+
+    def read(self, oid: int, offset: int, size: int) -> bytes:
+        if self.legacy:
+            return self._read_legacy(oid, offset, size)
+        dst = self.creg.register(np.empty(size, np.uint8), self.tenant)
+        try:
+            self.read_into(oid, offset, size, dst, 0)
+            return dst.buf.tobytes()
+        finally:
+            self.creg.deregister(dst)
+
+    # -- seed per-block path (kept verbatim for `legacy=True` benchmarks) ----
+    def _write_legacy(self, oid: int, offset: int, data) -> None:
         arr = np.frombuffer(bytes(data), np.uint8) if not isinstance(
             data, np.ndarray) else data
         obj = self.container.object(oid)
@@ -75,7 +303,8 @@ class _ServerIO:
             for b, bo, ln in split_blocks(offset, arr.size):
                 chunk = arr[pos:pos + ln]
                 if self.crypto is not None:
-                    chunk = self.crypto.apply(chunk, nonce=oid * (1 << 20) + b)
+                    chunk = self.crypto.apply(chunk, nonce=oid * (1 << 20) + b,
+                                              offset=bo)
                 src = self.creg.register(np.ascontiguousarray(chunk),
                                          self.tenant)
                 try:
@@ -90,12 +319,8 @@ class _ServerIO:
                     self.creg.deregister(src)
                 pos += ln
 
-    def read_into(self, oid: int, offset: int, size: int,
-                  dst_mr: MemoryRegion, dst_off: int = 0) -> int:
-        """Device-direct read: bytes land straight in the caller's
-        registered region (one splice per block — the 'NIC DMA'), with no
-        intermediate client-side staging copy. This is the GPUDirect-RDMA
-        analogue's transport leg (core.device_direct builds on it)."""
+    def _read_into_legacy(self, oid: int, offset: int, size: int,
+                          dst_mr: MemoryRegion, dst_off: int = 0) -> int:
         obj = self.container.object(oid)
         with self._lock:
             pos = 0
@@ -104,7 +329,8 @@ class _ServerIO:
                 self.staging.buf[:ln] = np.frombuffer(data, np.uint8)
                 if self.crypto is not None:
                     self.staging.buf[:ln] = self.crypto.apply(
-                        self.staging.buf[:ln], nonce=oid * (1 << 20) + b)
+                        self.staging.buf[:ln], nonce=oid * (1 << 20) + b,
+                        offset=bo)
                 if self.transport_kind == "rdma":
                     self.xport.read(self.staging_rkey, self.tenant, 0,
                                     dst_mr, dst_off + pos, ln)
@@ -114,7 +340,7 @@ class _ServerIO:
                 pos += ln
         return size
 
-    def read(self, oid: int, offset: int, size: int) -> bytes:
+    def _read_legacy(self, oid: int, offset: int, size: int) -> bytes:
         obj = self.container.object(oid)
         out = np.zeros(size, np.uint8)
         with self._lock:
@@ -132,7 +358,8 @@ class _ServerIO:
                     chunk = dst.buf[:ln]
                     if self.crypto is not None:
                         chunk = self.crypto.apply(chunk,
-                                                  nonce=oid * (1 << 20) + b)
+                                                  nonce=oid * (1 << 20) + b,
+                                                  offset=bo)
                     out[pos:pos + ln] = chunk
                 finally:
                     self.creg.deregister(dst)
@@ -144,15 +371,21 @@ class ROS2Client:
     def __init__(self, mode: str = "host", transport: str = "rdma",
                  n_devices: int = 4, tenant: str = "default",
                  secret: str = "secret", inline_encryption: bool = False,
-                 replication: int = 2, n_dpu_cores: int = 16):
+                 replication: int = 2, n_dpu_cores: int = 16,
+                 n_staging_slots: int = 16, legacy: bool = False):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
         self.mode, self.transport = mode, transport
         # ---- storage server ----
         self.devices = make_nvme_array(n_devices)
-        self.store = ObjectStore(self.devices)
+        # legacy reproduces the full seed data path, scalar CRC included
+        self.store = ObjectStore(self.devices,
+                                 csum=crc32_checksum if legacy else None)
         pool = self.store.create_pool("pool0")
+        # DFS reads never pin historical epochs, so the vectored client runs
+        # with epoch aggregation on; legacy keeps seed full-history extents
         self.container = pool.create_container("cont0",
-                                               replication=replication)
+                                               replication=replication,
+                                               aggregate=not legacy)
         self.server_registry = MemoryRegistry("server")
         self.control = ControlPlane(self.store, self.server_registry,
                                     tenants={tenant: secret})
@@ -168,7 +401,8 @@ class ROS2Client:
         crypto = InlineCrypto(0xC0FFEE) if inline_encryption else None
         self.io = _ServerIO(self.container, self.client_registry,
                             self.server_registry, transport, tenant,
-                            self.control, crypto)
+                            self.control, crypto,
+                            n_staging_slots=n_staging_slots, legacy=legacy)
         self.dfs = DFSClient(self.control, self.io, self.session_id)
         self.dfs.mount()
         self.tenant = tenant
@@ -179,6 +413,8 @@ class ROS2Client:
             self.dpu.register("write", self.dfs.pwrite)
             self.dpu.register("open", self.dfs.open)
             self.dpu.register("read_into", self.dfs.pread_into)
+            self.dpu.register("readv", self.dfs.preadv)
+            self.dpu.register("writev", self.dfs.pwritev)
             self.dpu.start()
 
     # ---- POSIX-ish sync API (host launches; DPU executes in dpu mode) ----
@@ -208,6 +444,23 @@ class ROS2Client:
         if self.dpu:
             return self._dpu_call("read", fd=fd, size=size, offset=offset)
         return self.dfs.pread(fd, size, offset)
+
+    def pwritev(self, fd: int, buffers: Sequence, offset: int) -> int:
+        """Vectored write: the whole iovec moves as scatter-gather transport
+        ops with ONE set_size control RPC (vs one per pwrite)."""
+        if self.dpu:
+            return self._dpu_call("writev", fd=fd,
+                                  buffers=[bytes(b) for b in buffers],
+                                  offset=offset)
+        return self.dfs.pwritev(fd, buffers, offset)
+
+    def preadv(self, fd: int, sizes: Sequence[int], offset: int) -> List[bytes]:
+        """Vectored read: fills len(sizes) logically separate buffers from
+        one contiguous file range with a single gather op."""
+        if self.dpu:
+            return self._dpu_call("readv", fd=fd, sizes=list(sizes),
+                                  offset=offset)
+        return self.dfs.preadv(fd, sizes, offset)
 
     def pread_into(self, fd: int, size: int, offset: int,
                    dst_mr, dst_off: int = 0) -> int:

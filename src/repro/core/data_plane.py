@@ -12,9 +12,17 @@ transports in the paper:
     staged through a bounded kernel buffer: TWO copies per byte plus
     per-segment processing on both ends.
 
-Counters (copies, segments, control messages, bytes) let tests assert these
-semantics; throughput numbers come from the MVA model (core/sim.py), not
-wall-clock.
+Vectored (scatter-gather) data path: `read_sg`/`write_sg` take an iovec of
+N descriptors sharing one remote rkey/region. Over RDMA the whole bulk op
+costs ONE rkey resolution (with an rkey-resolution cache modeling the NIC's
+MPT/MTT translation cache across ops) and ONE rendezvous RTS/CTS exchange —
+the offload-engine scatter-gather the paper's data path depends on. Over
+TCP each descriptor remains an independently requested, MTU-segmented,
+double-copied stream, so the counters still discriminate the transports.
+
+Counters (copies, segments, control messages, sg_ops, descriptors,
+rkey_resolves, bytes) let tests assert these semantics; throughput numbers
+come from the MVA model (core/sim.py), not wall-clock.
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ import secrets
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -91,11 +99,20 @@ class MemoryRegistry:
         if rk:
             rk.revoked = True
 
-    def resolve(self, token: str, tenant: str, offset: int, size: int,
-                op: str) -> MemoryRegion:
+    def lookup(self, token: str) -> Tuple[RKey, MemoryRegion]:
+        """Translate a token to its key + region (the cacheable MPT/MTT
+        lookup); key-state/PD/bounds checks happen in `check_access`."""
         rk = self._rkeys.get(token)
         if rk is None:
             raise AccessError("unknown rkey")
+        mr = self._regions.get(rk.region_id)
+        if mr is None:
+            raise AccessError("rkey region deregistered")
+        return rk, mr
+
+    @staticmethod
+    def check_access(rk: RKey, mr: MemoryRegion, tenant: str, offset: int,
+                     size: int, op: str) -> None:
         if rk.revoked:
             raise AccessError("rkey revoked")
         if time.monotonic() > rk.expires_at:
@@ -105,9 +122,13 @@ class MemoryRegistry:
                 f"protection-domain violation: {tenant} != {rk.tenant}")
         if op not in rk.perms:
             raise AccessError(f"rkey lacks '{op}' permission")
-        mr = self._regions[rk.region_id]
         if offset < 0 or offset + size > mr.size:
             raise AccessError("access outside registered region")
+
+    def resolve(self, token: str, tenant: str, offset: int, size: int,
+                op: str) -> MemoryRegion:
+        rk, mr = self.lookup(token)
+        self.check_access(rk, mr, tenant, offset, size, op)
         return mr
 
 
@@ -121,79 +142,203 @@ class TransportStats:
     ops: int = 0
     rendezvous: int = 0
     eager: int = 0
+    sg_ops: int = 0                # vectored (scatter-gather) ops
+    descriptors: int = 0           # iovec entries across all sg ops
+    rkey_resolves: int = 0         # registry translations actually performed
+    rkey_cache_hits: int = 0       # translations served from the NIC cache
+
+
+# One scatter-gather descriptor: (remote_offset, local_mr, local_offset, size)
+SGDescriptor = Tuple[int, MemoryRegion, int, int]
 
 
 class RDMATransport:
-    """One-sided verbs-style transport between two registries."""
+    """One-sided verbs-style transport between two registries.
+
+    Scalar `read`/`write` resolve the rkey through the registry on every op
+    (the seed behavior). The vectored `read_sg`/`write_sg` verbs move an
+    entire iovec as ONE bulk op: one rkey translation (served from a
+    per-transport resolution cache after the first op — the NIC's MPT/MTT
+    cache), one eager-or-rendezvous decision for the summed length, and one
+    splice per descriptor (still exactly one copy per byte)."""
 
     def __init__(self, local: MemoryRegistry, remote: MemoryRegistry):
         self.local = local
         self.remote = remote
         self.stats = TransportStats()
+        self._rkey_cache: Dict[str, Tuple[RKey, MemoryRegion]] = {}
+        self._stats_lock = threading.Lock()
 
     def _splice(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
                 size: int) -> None:
         dst[do:do + size] = src[so:so + size]     # single copy ("NIC DMA")
-        self.stats.copies += 1
-        self.stats.copy_bytes += size
-        self.stats.bytes_moved += size
+        with self._stats_lock:                    # concurrent SG readers
+            self.stats.copies += 1
+            self.stats.copy_bytes += size
+            self.stats.bytes_moved += size
+
+    def _resolve_cached(self, rkey: str, tenant: str,
+                        op: str) -> MemoryRegion:
+        """Cached rkey translation; key-state/PD checks still run on every
+        use (revocation/expiry must bite even on cache hits), and the
+        cached entry is dropped if its region was deregistered (MPT
+        invalidation on dereg). Per-descriptor bounds checks happen in
+        _sg_setup."""
+        with self._stats_lock:
+            ent = self._rkey_cache.get(rkey)
+            if ent is None:
+                ent = self.remote.lookup(rkey)
+                self._rkey_cache[rkey] = ent
+                self.stats.rkey_resolves += 1
+            else:
+                self.stats.rkey_cache_hits += 1
+        rk, mr = ent
+        if self.remote._regions.get(rk.region_id) is not mr:
+            self.invalidate_rkey_cache(rkey)
+            raise AccessError("rkey region deregistered")
+        self.remote.check_access(rk, mr, tenant, 0, 0, op)
+        return mr
+
+    def invalidate_rkey_cache(self, rkey: Optional[str] = None) -> None:
+        if rkey is None:
+            self._rkey_cache.clear()
+        else:
+            self._rkey_cache.pop(rkey, None)
 
     def read(self, rkey: str, tenant: str, roff: int,
              local_mr: MemoryRegion, loff: int, size: int) -> None:
         mr = self.remote.resolve(rkey, tenant, roff, size, "r")
-        self.stats.ops += 1
-        if size > EAGER_LIMIT:
-            self.stats.rendezvous += 1
-            self.stats.control_msgs += 2          # RTS/CTS
-        else:
-            self.stats.eager += 1
+        with self._stats_lock:
+            self.stats.rkey_resolves += 1
+            self.stats.ops += 1
+            if size > EAGER_LIMIT:
+                self.stats.rendezvous += 1
+                self.stats.control_msgs += 2      # RTS/CTS
+            else:
+                self.stats.eager += 1
         self._splice(mr.buf, roff, local_mr.buf, loff, size)
 
     def write(self, rkey: str, tenant: str, roff: int,
               local_mr: MemoryRegion, loff: int, size: int) -> None:
         mr = self.remote.resolve(rkey, tenant, roff, size, "w")
-        self.stats.ops += 1
-        if size > EAGER_LIMIT:
-            self.stats.rendezvous += 1
-            self.stats.control_msgs += 2
-        else:
-            self.stats.eager += 1
+        with self._stats_lock:
+            self.stats.rkey_resolves += 1
+            self.stats.ops += 1
+            if size > EAGER_LIMIT:
+                self.stats.rendezvous += 1
+                self.stats.control_msgs += 2
+            else:
+                self.stats.eager += 1
         self._splice(local_mr.buf, loff, mr.buf, roff, size)
+
+    # -- vectored verbs ------------------------------------------------------
+    def _sg_setup(self, rkey: str, tenant: str, op: str,
+                  iov: Sequence[SGDescriptor]) -> MemoryRegion:
+        total = sum(d[3] for d in iov)
+        mr = self._resolve_cached(rkey, tenant, op)
+        for roff, _lmr, _loff, size in iov:       # per-descriptor bounds
+            if roff < 0 or roff + size > mr.size:
+                raise AccessError("sg descriptor outside registered region")
+        with self._stats_lock:
+            self.stats.ops += 1
+            self.stats.sg_ops += 1
+            self.stats.descriptors += len(iov)
+            if total > EAGER_LIMIT:
+                self.stats.rendezvous += 1        # ONE RTS/CTS for the op
+                self.stats.control_msgs += 2
+            else:
+                self.stats.eager += 1
+        return mr
+
+    def read_sg(self, rkey: str, tenant: str,
+                iov: Sequence[SGDescriptor]) -> int:
+        """Gather-read: remote region -> N local destinations, one bulk op."""
+        mr = self._sg_setup(rkey, tenant, "r", iov)
+        for roff, lmr, loff, size in iov:
+            self._splice(mr.buf, roff, lmr.buf, loff, size)
+        return sum(d[3] for d in iov)
+
+    def write_sg(self, rkey: str, tenant: str,
+                 iov: Sequence[SGDescriptor]) -> int:
+        """Scatter-write: N local sources -> remote region, one bulk op."""
+        mr = self._sg_setup(rkey, tenant, "w", iov)
+        for roff, lmr, loff, size in iov:
+            self._splice(lmr.buf, loff, mr.buf, roff, size)
+        return sum(d[3] for d in iov)
 
 
 class TCPTransport:
     """Two-copy, segmented, kernel-buffered transport (no rkeys needed —
-    and no protection-domain enforcement either, which is the point)."""
+    and no protection-domain enforcement either, which is the point).
+
+    The bounded kernel buffer is shared by all streams on the connection:
+    `_kbuf_lock` is held for the duration of each MTU segment's two copies
+    (the kernel's per-socket-buffer serialization), so concurrent streams
+    (the engine no longer serializes transports behind one lock) cannot
+    corrupt in-flight data.
+
+    `read_sg`/`write_sg` exist for API parity with RDMA, but TCP has no
+    scatter-gather offload: every descriptor is its own requested,
+    MTU-segmented, double-copied stream — the counters keep discriminating
+    the transports."""
 
     def __init__(self, local: MemoryRegistry, remote: MemoryRegistry):
         self.local = local
         self.remote = remote
         self.stats = TransportStats()
         self._kernel_buf = np.zeros(KERNEL_BUF, np.uint8)
+        self._kbuf_lock = threading.Lock()
 
     def _stream(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
                 size: int) -> None:
         sent = 0
         while sent < size:
             seg = min(MTU, size - sent, KERNEL_BUF)
-            # copy 1: user -> kernel
-            self._kernel_buf[:seg] = src[so + sent:so + sent + seg]
-            # copy 2: kernel -> user
-            dst[do + sent:do + sent + seg] = self._kernel_buf[:seg]
-            self.stats.copies += 2
-            self.stats.copy_bytes += 2 * seg
-            self.stats.segments += 1
+            with self._kbuf_lock:                 # exclusive kernel staging
+                # copy 1: user -> kernel
+                self._kernel_buf[:seg] = src[so + sent:so + sent + seg]
+                # copy 2: kernel -> user
+                dst[do + sent:do + sent + seg] = self._kernel_buf[:seg]
+                self.stats.copies += 2
+                self.stats.copy_bytes += 2 * seg
+                self.stats.segments += 1
             sent += seg
-        self.stats.bytes_moved += size
+        with self._kbuf_lock:
+            self.stats.bytes_moved += size
 
     def read(self, region: MemoryRegion, roff: int, local_mr: MemoryRegion,
              loff: int, size: int) -> None:
-        self.stats.ops += 1
-        self.stats.control_msgs += 1              # request message
+        with self._kbuf_lock:
+            self.stats.ops += 1
+            self.stats.control_msgs += 1          # request message
         self._stream(region.buf, roff, local_mr.buf, loff, size)
 
     def write(self, region: MemoryRegion, roff: int, local_mr: MemoryRegion,
               loff: int, size: int) -> None:
-        self.stats.ops += 1
-        self.stats.control_msgs += 1
+        with self._kbuf_lock:
+            self.stats.ops += 1
+            self.stats.control_msgs += 1
         self._stream(local_mr.buf, loff, region.buf, roff, size)
+
+    # -- vectored API parity (no offload: per-descriptor streams) -----------
+    def read_sg(self, region: MemoryRegion,
+                iov: Sequence[SGDescriptor]) -> int:
+        with self._kbuf_lock:                     # concurrent SG callers
+            self.stats.ops += 1
+            self.stats.sg_ops += 1
+            self.stats.descriptors += len(iov)
+            self.stats.control_msgs += len(iov)   # one request per segment
+        for roff, lmr, loff, size in iov:
+            self._stream(region.buf, roff, lmr.buf, loff, size)
+        return sum(d[3] for d in iov)
+
+    def write_sg(self, region: MemoryRegion,
+                 iov: Sequence[SGDescriptor]) -> int:
+        with self._kbuf_lock:
+            self.stats.ops += 1
+            self.stats.sg_ops += 1
+            self.stats.descriptors += len(iov)
+            self.stats.control_msgs += len(iov)
+        for roff, lmr, loff, size in iov:
+            self._stream(lmr.buf, loff, region.buf, roff, size)
+        return sum(d[3] for d in iov)

@@ -178,11 +178,38 @@ class DFSClient:
                     size=offset + len(data))
         return len(data)
 
+    def pwritev(self, fd: int, buffers, offset: int) -> int:
+        """Vectored write: the iovec is coalesced into scatter-gather
+        transport ops by the server I/O adapter, and file-size metadata is
+        batched into ONE set_size control RPC for the whole writev (vs one
+        per pwrite on the per-block path)."""
+        h = self._open.get(fd)
+        if h is None:
+            raise DFSError("EBADF")
+        written = self.io.writev(h.oid, offset, buffers)
+        self.cp.rpc("set_size", session_id=self.session_id, path=h.path,
+                    size=offset + written)
+        return written
+
     def pread(self, fd: int, size: int, offset: int) -> bytes:
         h = self._open.get(fd)
         if h is None:
             raise DFSError("EBADF")
         return self.io.read(h.oid, offset, size)
+
+    def preadv(self, fd: int, sizes, offset: int) -> List[bytes]:
+        """Vectored read: one gather op over the contiguous range, sliced
+        into len(sizes) result buffers."""
+        h = self._open.get(fd)
+        if h is None:
+            raise DFSError("EBADF")
+        total = int(sum(sizes))
+        blob = self.io.read(h.oid, offset, total)
+        out, pos = [], 0
+        for s in sizes:
+            out.append(blob[pos:pos + s])
+            pos += s
+        return out
 
     def pread_into(self, fd: int, size: int, offset: int,
                    dst_mr, dst_off: int = 0) -> int:

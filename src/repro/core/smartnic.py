@@ -15,7 +15,7 @@ import itertools
 import queue
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -44,9 +44,12 @@ class InlineCrypto:
     def __init__(self, key: int):
         self.key = np.uint64(key or 0x9E3779B97F4A7C15)
 
-    def keystream(self, n: int, nonce: int) -> np.ndarray:
+    def keystream(self, n: int, nonce: int, offset: int = 0) -> np.ndarray:
+        """Keystream bytes [offset, offset+n) of the block's stream."""
         # splitmix64 over block counters — vectorized, invertible-free PRF
-        idx = np.arange((n + 7) // 8, dtype=np.uint64)
+        first = offset // 8
+        words = (offset + n + 7) // 8 - first
+        idx = np.arange(first, first + words, dtype=np.uint64)
         x = (idx + np.uint64(nonce)) * np.uint64(0x9E3779B97F4A7C15) + self.key
         with np.errstate(over="ignore"):
             x ^= x >> np.uint64(30)
@@ -54,10 +57,15 @@ class InlineCrypto:
             x ^= x >> np.uint64(27)
             x *= np.uint64(0x94D049BB133111EB)
             x ^= x >> np.uint64(31)
-        return x.view(np.uint8)[:n]
+        skip = offset - first * 8
+        return x.view(np.uint8)[skip:skip + n]
 
-    def apply(self, data: np.ndarray, nonce: int) -> np.ndarray:
-        return data ^ self.keystream(data.size, nonce)
+    def apply(self, data: np.ndarray, nonce: int,
+              offset: int = 0) -> np.ndarray:
+        """XOR with the keystream at byte position `offset` of the (nonce-
+        scoped) block stream, so partial-block reads decrypt with the same
+        stream positions the write used."""
+        return data ^ self.keystream(data.size, nonce, offset)
 
 
 class DPURuntime:
@@ -72,6 +80,7 @@ class DPURuntime:
         self._workers = []
         self._started = False
         self.ops_processed = 0
+        self.doorbells = 0            # host->NIC SQ crossings (MMIO rings)
         self._lock = threading.Lock()
         self._claimed: Dict[int, CQE] = {}
         self._claim_lock = threading.Lock()
@@ -108,7 +117,35 @@ class DPURuntime:
     def submit(self, op: str, **args) -> int:
         tag = next(self._tags)
         self.sq.put(SQE(tag, op, args))
+        self.doorbells += 1
         return tag
+
+    def submit_many(self, ops) -> List[int]:
+        """Post a batch of SQEs with ONE doorbell (one host<->NIC crossing
+        for the whole batch — the Wei et al. batching that keeps off-path
+        DPU submission cost amortized). `ops` is an iterable of
+        (op, kwargs) pairs; returns the tags in order."""
+        tags: List[int] = []
+        for op, args in ops:
+            tag = next(self._tags)
+            tags.append(tag)
+            self.sq.put(SQE(tag, op, dict(args)))
+        if tags:
+            self.doorbells += 1
+        return tags
+
+    def wait_all(self, tags, timeout: float = 120.0) -> Dict[int, CQE]:
+        """Collect the completions for a batch of tags (single CQ drain
+        loop; completions for other waiters are parked, as in wait_tag)."""
+        import time as _time
+        deadline = _time.monotonic() + timeout
+        out: Dict[int, CQE] = {}
+        for tag in tags:
+            remaining = deadline - _time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(f"no completion for tag {tag}")
+            out[tag] = self.wait_tag(tag, timeout=remaining)
+        return out
 
     def poll(self, timeout: float = 30.0) -> CQE:
         return self.cq.get(timeout=timeout)

@@ -10,14 +10,13 @@ from typing import Optional
 
 import jax
 
-from repro.models.context import MeshCtx, make_rules
+from repro.models.context import MeshCtx, make_mesh, make_rules
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_ctx(cfg, *, multi_pod: bool = False) -> MeshCtx:
@@ -29,9 +28,7 @@ def make_host_mesh_ctx(cfg, data: int = 1, model: int = 1) -> MeshCtx:
     """Small mesh over locally available devices (tests, examples)."""
     n = data * model
     devs = jax.devices()[:n]
-    mesh = jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=devs)
+    mesh = make_mesh((data, model), ("data", "model"), devices=devs)
     return MeshCtx(mesh=mesh, rules=make_rules(cfg))
 
 

@@ -10,6 +10,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.params import DEFAULT_RULES
 
 
+def make_mesh(shape, axis_names, devices=None):
+    """jax.make_mesh across JAX versions: newer releases take (and some
+    require) axis_types=jax.sharding.AxisType.*; older ones don't have the
+    enum at all. Try the typed form first, fall back to the plain call."""
+    kw = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axis_names,
+                                 axis_types=(axis_type.Auto,) * len(shape),
+                                 **kw)
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axis_names, **kw)
+
+
 @dataclass
 class MeshCtx:
     mesh: Mesh
@@ -66,7 +82,5 @@ def make_rules(cfg) -> Dict[str, Any]:
 
 def single_device_ctx(cfg=None) -> MeshCtx:
     """1x1 mesh for smoke tests — same code path as production."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=jax.devices()[:1])
+    mesh = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
     return MeshCtx(mesh=mesh, rules=make_rules(cfg) if cfg is not None else dict(DEFAULT_RULES))

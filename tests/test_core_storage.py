@@ -5,6 +5,8 @@ import threading
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.client import ROS2Client

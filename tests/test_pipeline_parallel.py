@@ -20,8 +20,8 @@ from repro.models import transformer as TF
 cfg = tiny_config("granite-3-2b").replace(n_layers=4, remat=False)
 api = ModelAPI(cfg)
 params = init_params(api.param_defs(), jax.random.PRNGKey(0))
-mesh = jax.make_mesh((2, 2, 1), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.models.context import make_mesh
+mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
 toks = jax.random.randint(jax.random.key(1), (4, 16), 0, cfg.vocab)
 batch = {"tokens": toks, "labels": toks}
 

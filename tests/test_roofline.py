@@ -5,6 +5,8 @@ import json
 from pathlib import Path
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.common.config import SHAPE_BY_NAME
