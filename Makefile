@@ -1,0 +1,13 @@
+# Dev workflow targets (see ROADMAP.md "Dev workflow").
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-smoke
+
+test:                 ## tier-1 verify
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:                ## full data-path benchmark -> BENCH_data_path.json
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_data_path.py
+
+bench-smoke:          ## ~30s gate: fails if zero_copy regresses below sg
+	bash benchmarks/smoke.sh

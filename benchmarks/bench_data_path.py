@@ -1,19 +1,29 @@
-"""Data-path microbenchmark: vectored scatter-gather path vs the seed
-per-block path, measured wall-clock in the same run via `legacy=True`.
+"""Data-path microbenchmark: the PR-2 zero-copy hot path vs the PR-1
+scatter-gather path vs the seed per-block path, measured wall-clock in the
+same run via client flags (`legacy=True` / `zero_copy=False` / default).
 
 Workloads (fio-style, per mode x transport x path):
 
-  * seq: 64 MiB sequential pwrite + pread_into in 4 MiB chunks, several
-    passes over the same file (steady state is the headline number — the
-    first pass is dominated by cold page faults that hit both paths
-    equally; the JSON reports every pass).
+  * seq: 64 MiB sequential pwrite passes, THEN sequential pread_into
+    passes in 4 MiB chunks over the same file. The phases are separate so
+    the read passes measure the steady state the verified-extent and
+    keystream caches are built for (warm re-reads); the headline numbers
+    are the mean of the last two passes of each phase.
   * rand: 4 KiB random pread/pwrite ops against a 16 MiB file.
+  * enc (host/rdma only): the seq workload with inline encryption, to
+    expose the keystream-cache hit rate.
 
-Emits BENCH_data_path.json (repo root by default) with wall-clock, ops/s,
-copies-per-byte, and the transport counters that pin the semantics:
-RDMA rendezvous == 1 per vectored op, TCP still 2 copies per byte.
+Emits BENCH_data_path.json with wall-clock, ops/s, and the first-class
+copy-accounting counters (copies/byte, checksum hit rate, keystream hit
+rate) from `_ServerIO.data_path_counters()`, plus the semantic assertions
+that pin each path: RDMA rendezvous == 1 per vectored op, TCP still 2
+copies/byte, zero_copy strictly fewer copies/byte than sg, and ~0 checksum
+bytes on the final (warm) read pass.
 
 Run:  PYTHONPATH=src python benchmarks/bench_data_path.py [--out PATH]
+      --quick   host/rdma only (all three paths)
+      --smoke   ~30 s regression gate: host/rdma, sg vs zero_copy only,
+                exits non-zero if zero_copy regresses below sg
 """
 from __future__ import annotations
 
@@ -36,34 +46,60 @@ RAND_FILE = 16 * MiB
 RAND_OPS = 256
 RAND_IO = 4096
 
+PATHS = {
+    "legacy": dict(legacy=True),          # seed per-block path, scalar CRC
+    "sg": dict(zero_copy=False),          # PR-1 scatter-gather path
+    "zero_copy": dict(),                  # PR-2 zero-copy hot path
+}
 
-def _snap(stats):
-    return {k: getattr(stats, k) for k in
-            ("sg_ops", "descriptors", "rendezvous", "rkey_resolves",
-             "copy_bytes", "bytes_moved", "ops")}
+
+def _flat(d, prefix=""):
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            out.update(_flat(v, f"{prefix}{k}."))
+        else:
+            out[f"{prefix}{k}"] = v
+    return out
 
 
-def _bench_one(mode: str, transport: str, legacy: bool) -> dict:
-    c = ROS2Client(mode=mode, transport=transport, legacy=legacy)
+def _delta(before, after):
+    return {k: after[k] - before.get(k, 0) for k in after}
+
+
+def _rate(hits, misses):
+    total = hits + misses
+    return hits / total if total else 0.0
+
+
+def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
+               passes: int = SEQ_PASSES) -> dict:
+    c = ROS2Client(mode=mode, transport=transport, inline_encryption=enc,
+                   **PATHS[path])
     fd = c.open("/bench", create=True)
     rng = np.random.default_rng(0)
     data = rng.integers(0, 256, SEQ_TOTAL, dtype=np.uint8).tobytes()
     sink = c.register_region(SEQ_TOTAL)
 
-    before = _snap(c.io.stats)
-    seq_write, seq_read = [], []
-    for _ in range(SEQ_PASSES):
+    before = _flat(c.io.data_path_counters())
+    seq_write = []
+    for _ in range(passes):
         t = time.perf_counter()
         for off in range(0, SEQ_TOTAL, SEQ_CHUNK):
             c.pwrite(fd, data[off:off + SEQ_CHUNK], off)
         seq_write.append(time.perf_counter() - t)
+    seq_read = []
+    warm_delta = {}
+    for i in range(passes):
+        if i == passes - 1:              # instrument the warmest pass
+            warm_before = _flat(c.io.data_path_counters())
         t = time.perf_counter()
         for off in range(0, SEQ_TOTAL, SEQ_CHUNK):
             c.pread_into(fd, SEQ_CHUNK, off, sink, off)
         seq_read.append(time.perf_counter() - t)
+    warm_delta = _delta(warm_before, _flat(c.io.data_path_counters()))
     assert bytes(sink.buf) == data, "seq roundtrip mismatch"
-    after = _snap(c.io.stats)
-    seq_counters = {k: after[k] - before[k] for k in after}
+    seq_counters = _delta(before, _flat(c.io.data_path_counters()))
 
     fd2 = c.open("/rand", create=True)
     c.pwrite(fd2, data[:RAND_FILE], 0)
@@ -77,13 +113,17 @@ def _bench_one(mode: str, transport: str, legacy: bool) -> dict:
         c.pread(fd2, RAND_IO, int(off))
     rand_read = time.perf_counter() - t
 
-    # steady state: mean of the last two passes (after the cold-page and
-    # preconditioning passes; fio measures the same way)
+    # steady state: mean of the last two passes of each phase (after the
+    # cold-page/cold-cache passes; fio measures the same way)
     sw = sum(seq_write[-2:]) / 2
     sr = sum(seq_read[-2:]) / 2
+    sc = seq_counters
+    moved = max(1, sc["transport.bytes_moved"])
+    csum_done = sc["engine.checksum_bytes"]
+    csum_skip = sc["engine.checksum_skipped_bytes"]
     out = {
         "mode": mode, "transport": transport,
-        "path": "legacy" if legacy else "vectored",
+        "path": path + ("+enc" if enc else ""),
         "seq_write_s": seq_write, "seq_read_s": seq_read,
         "seq_write_steady_s": sw, "seq_read_steady_s": sr,
         "seq_pass_steady_s": sw + sr,
@@ -91,12 +131,65 @@ def _bench_one(mode: str, transport: str, legacy: bool) -> dict:
         "seq_read_MiBps": SEQ_TOTAL / MiB / sr,
         "rand_write_iops": RAND_OPS / rand_write,
         "rand_read_iops": RAND_OPS / rand_read,
+        # first-class copy accounting: wire splices + every host-side
+        # materialization (client tobytes + per-replica media copies)
         "copies_per_byte":
-            seq_counters["copy_bytes"] / max(1, seq_counters["bytes_moved"]),
-        "seq_counters": seq_counters,
+            (sc["transport.copy_bytes"] + sc["client.host_copy_bytes"]
+             + sc["media.host_copy_bytes"]) / moved,
+        "checksum_hit_rate": csum_skip / max(1, csum_skip + csum_done),
+        "verify_hit_rate": _rate(sc.get("engine.verify_hits", 0),
+                                 sc.get("engine.verify_misses", 0)),
+        "warm_read_checksum_bytes": warm_delta.get("engine.checksum_bytes",
+                                                   0),
+        "seq_counters": sc,
     }
+    if enc:
+        out["keystream_hit_rate"] = _rate(sc.get("crypto.cache_hits", 0),
+                                          sc.get("crypto.cache_misses", 0))
+        out["keystream_bytes_generated"] = \
+            sc.get("crypto.keystream_bytes_generated", 0)
     c.close()
     return out
+
+
+def _print_run(r: dict) -> None:
+    print(f"{r['mode']:4s}/{r['transport']:4s} {r['path']:13s} "
+          f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
+          f"seq_r {r['seq_read_steady_s']*1e3:7.1f} ms  "
+          f"rand_r {r['rand_read_iops']:7.0f} iops  "
+          f"copies/B {r['copies_per_byte']:.2f}  "
+          f"csum-hit {r['checksum_hit_rate']:.2f}"
+          + (f"  ks-hit {r['keystream_hit_rate']:.2f}" if "keystream_hit_rate"
+             in r else ""))
+
+
+def _check_semantics(runs_by, mode: str, transport: str) -> list:
+    """The per-path semantic assertions the acceptance criteria pin."""
+    fails = []
+    zc = runs_by[(mode, transport, "zero_copy")]
+    sg = runs_by[(mode, transport, "sg")]
+    sc = zc["seq_counters"]
+    if transport == "rdma":
+        if sc["transport.rendezvous"] != sc["transport.sg_ops"]:
+            fails.append(f"{mode}/rdma rendezvous != sg_ops")
+        if sc["transport.rkey_resolves"] > 1:
+            fails.append(f"{mode}/rdma rkey_resolves > 1")
+    else:
+        tcp_copies = sc["transport.copy_bytes"] / \
+            max(1, sc["transport.bytes_moved"])
+        if abs(tcp_copies - 2.0) > 1e-9:
+            fails.append(f"{mode}/tcp wire copies/byte {tcp_copies} != 2")
+        if sc["transport.sendmsg_batches"] != sc["transport.sg_ops"]:
+            fails.append(f"{mode}/tcp sendmsg batches != sg ops")
+    # zero-copy must beat sg on copies and skip checksums when warm
+    if zc["copies_per_byte"] >= sg["copies_per_byte"]:
+        fails.append(f"{mode}/{transport} zero_copy copies/byte "
+                     f"{zc['copies_per_byte']:.3f} not < sg "
+                     f"{sg['copies_per_byte']:.3f}")
+    if zc["warm_read_checksum_bytes"] > 0.01 * SEQ_TOTAL:
+        fails.append(f"{mode}/{transport} warm read still checksums "
+                     f"{zc['warm_read_checksum_bytes']} bytes")
+    return fails
 
 
 def main(argv=None) -> int:
@@ -104,68 +197,84 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=str(
         Path(__file__).resolve().parent.parent / "BENCH_data_path.json"))
     ap.add_argument("--quick", action="store_true",
-                    help="host/rdma only (CI smoke)")
+                    help="host/rdma only (all three paths)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="~30s gate: host/rdma sg vs zero_copy, fails if "
+                         "zero_copy regresses below sg")
     args = ap.parse_args(argv)
 
     combos = [("host", "rdma"), ("host", "tcp"), ("dpu", "rdma"),
               ("dpu", "tcp")]
-    if args.quick:
+    paths = list(PATHS)
+    passes = SEQ_PASSES
+    enc_runs = not args.smoke
+    if args.quick or args.smoke:
         combos = [("host", "rdma")]
+    if args.smoke:
+        paths = ["sg", "zero_copy"]
+        passes = 4
 
     runs = []
     for mode, transport in combos:
-        for legacy in (True, False):
-            r = _bench_one(mode, transport, legacy)
+        for path in paths:
+            r = _bench_one(mode, transport, path, passes=passes)
             runs.append(r)
-            print(f"{mode:4s}/{transport:4s} {r['path']:8s} "
-                  f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
-                  f"seq_r {r['seq_read_steady_s']*1e3:7.1f} ms  "
-                  f"rand_w {r['rand_write_iops']:7.0f} iops  "
-                  f"rand_r {r['rand_read_iops']:7.0f} iops  "
-                  f"copies/B {r['copies_per_byte']:.2f}")
+            _print_run(r)
+    if enc_runs:
+        for path in ("sg", "zero_copy"):
+            r = _bench_one("host", "rdma", path, enc=True, passes=passes)
+            runs.append(r)
+            _print_run(r)
 
     by = {(r["mode"], r["transport"], r["path"]): r for r in runs}
     speedups = {}
-    ok = True
+    fails = []
     for mode, transport in combos:
-        leg = by[(mode, transport, "legacy")]
-        vec = by[(mode, transport, "vectored")]
-        sw = leg["seq_write_steady_s"] / vec["seq_write_steady_s"]
-        sr = leg["seq_read_steady_s"] / vec["seq_read_steady_s"]
-        sp = leg["seq_pass_steady_s"] / vec["seq_pass_steady_s"]
-        speedups[f"{mode}/{transport}"] = {
-            "seq_write": round(sw, 2), "seq_read": round(sr, 2),
-            "seq_pass": round(sp, 2)}
-        # semantics assertions the acceptance criteria pin (seq phase only:
-        # the 4 KiB random ops are eager, not rendezvous, by design)
-        sc = vec["seq_counters"]
-        if transport == "rdma":
-            if sc["rendezvous"] != sc["sg_ops"]:
-                print(f"FAIL: {mode}/rdma seq rendezvous {sc['rendezvous']} "
-                      f"!= sg_ops {sc['sg_ops']}")
-                ok = False
-            if sc["rkey_resolves"] > 1:
-                print(f"FAIL: {mode}/rdma seq rkey_resolves "
-                      f"{sc['rkey_resolves']} > 1")
-                ok = False
-        else:
-            if abs(vec["copies_per_byte"] - 2.0) > 1e-9:
-                print(f"FAIL: {mode}/tcp copies/byte "
-                      f"{vec['copies_per_byte']} != 2")
-                ok = False
-        if transport == "rdma" and sp < 3.0:
-            print(f"FAIL: {mode}/rdma seq pass speedup {sp:.2f}x < 3x")
-            ok = False
-        print(f"{mode}/{transport}: seq speedup write {sw:.2f}x, "
-              f"read {sr:.2f}x, full pass {sp:.2f}x")
+        zc = by[(mode, transport, "zero_copy")]
+        sg = by[(mode, transport, "sg")]
+        entry = {}
+        if (mode, transport, "legacy") in by:
+            leg = by[(mode, transport, "legacy")]
+            entry["sg_vs_legacy"] = {
+                "seq_write": round(leg["seq_write_steady_s"]
+                                   / sg["seq_write_steady_s"], 2),
+                "seq_read": round(leg["seq_read_steady_s"]
+                                  / sg["seq_read_steady_s"], 2),
+                "seq_pass": round(leg["seq_pass_steady_s"]
+                                  / sg["seq_pass_steady_s"], 2)}
+            if transport == "rdma" and entry["sg_vs_legacy"]["seq_pass"] < 3:
+                fails.append(f"{mode}/rdma sg vs legacy "
+                             f"{entry['sg_vs_legacy']['seq_pass']}x < 3x")
+        entry["zero_copy_vs_sg"] = {
+            "seq_write": round(sg["seq_write_steady_s"]
+                               / zc["seq_write_steady_s"], 2),
+            "seq_read": round(sg["seq_read_steady_s"]
+                              / zc["seq_read_steady_s"], 2),
+            "seq_pass": round(sg["seq_pass_steady_s"]
+                              / zc["seq_pass_steady_s"], 2),
+            "rand_read_iops": round(zc["rand_read_iops"]
+                                    / sg["rand_read_iops"], 2)}
+        speedups[f"{mode}/{transport}"] = entry
+        fails += _check_semantics(by, mode, transport)
+        sr = entry["zero_copy_vs_sg"]["seq_read"]
+        if transport == "rdma" and not args.smoke and sr < 1.5:
+            fails.append(f"{mode}/rdma zero_copy seq read {sr}x < 1.5x vs sg")
+        if args.smoke and sr < 1.0:
+            fails.append(f"SMOKE: zero_copy seq read {sr}x slower than sg")
+        print(f"{mode}/{transport}: " + ", ".join(
+            f"{k} seq read {v['seq_read']}x / pass {v['seq_pass']}x"
+            for k, v in entry.items()))
 
+    for f in fails:
+        print(f"FAIL: {f}")
     payload = {"bench": "data_path", "seq_total_bytes": SEQ_TOTAL,
-               "seq_chunk_bytes": SEQ_CHUNK, "seq_passes": SEQ_PASSES,
+               "seq_chunk_bytes": SEQ_CHUNK, "seq_passes": passes,
                "rand_io_bytes": RAND_IO, "rand_ops": RAND_OPS,
-               "block_bytes": BLOCK, "runs": runs, "speedups": speedups}
+               "block_bytes": BLOCK, "runs": runs, "speedups": speedups,
+               "failures": fails}
     Path(args.out).write_text(json.dumps(payload, indent=1))
     print(f"wrote {args.out}")
-    return 0 if ok else 1
+    return 0 if not fails else 1
 
 
 if __name__ == "__main__":

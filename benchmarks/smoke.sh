@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# ~30-second data-path regression gate: runs the sg vs zero_copy pair of
+# the data-path bench (host/rdma) and fails if the zero-copy path regresses
+# below the PR-1 scatter-gather path. Wired into `make bench-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_data_path.py --smoke \
+    --out "${BENCH_SMOKE_OUT:-/tmp/BENCH_data_path_smoke.json}" "$@"

@@ -87,6 +87,8 @@ def main():
     fd3 = e.open("/secret", create=True)
     e.pwrite(fd3, b"attack at dawn" * 64, 0)
     readback = e.pread(fd3, 14, 0)
+    for d in e.devices:               # land donated staging buffers first
+        d.writeback()
     at_rest = any(b"attack at dawn" in blk for d in e.devices
                   for blk in d._blocks.values())
     print(f"  POSIX readback: {readback!r} (transparent)")

@@ -10,28 +10,39 @@ mode="dpu":  the DFS client runs on the SmartNIC worker pool; the host only
              rings doorbells (ROS2Client.submit/poll or the sync wrappers).
 transport:   "rdma" (zero-copy, rkey-checked) or "tcp" (two-copy, segmented).
 
-Data-path anatomy (the vectored scatter-gather path, default):
+Data-path anatomy (the zero-copy path, default):
 
     pread:  object store --fetch_into--> staging-ring slots (per-slot
-            locks, N concurrent ops) --ONE read_sg splice per batch-->
-            caller's registered region. One rkey resolution per transport
-            lifetime (cached), one rendezvous per SG op, 2 byte-copies +
-            1 checksum pass per byte end to end.
+            locks, N concurrent ops; warm re-reads skip the Fletcher-64
+            via the verified-extent cache) --ONE read_sg splice per
+            batch--> caller's registered region. One rkey resolution per
+            transport lifetime (cached), one rendezvous per SG op.
     pwrite: each iovec buffer registered once per writev (zero-copy wrap,
             no MR churn per block) --ONE write_sg per batch--> staging
-            slots --update_many--> one epoch, one extent lock acquisition,
-            replica writes outside the lock. One set_size control RPC per
-            writev.
+            slots, encrypted IN PLACE (fused apply_into), then DONATED to
+            every replica device under a SlotLease --update_many--> one
+            epoch, one extent lock acquisition. Zero post-splice copies on
+            the critical path; media writes back (one shared
+            materialization per donation) under ring pressure or on first
+            read. One set_size control RPC per writev.
+    preadv: readv_into scatters descriptors straight into the per-buffer
+            destinations — no contiguous intermediate bytes.
 
 Inline crypto (when enabled) is applied on the staging leg — the DPU-
 adjacent bounce buffer — with per-block nonces and block-absolute
 keystream offsets (partial-block reads decrypt at the stream position the
-write used), identically on the vectored and legacy paths so both
-interoperate on the same stored bytes.
+write used), identically on the zero-copy and legacy paths so both
+interoperate on the same stored bytes. The keystream PRF is bit-identical
+to the stream_cipher Pallas kernel, and warm keystream pages come from an
+LRU (no PRF regeneration).
 
+`zero_copy=False` reproduces the PR-1 scatter-gather path (tobytes per
+block, verify every read, no donation, per-descriptor TCP requests);
 `legacy=True` keeps the seed per-block path (one transport op + one MR
 register/deregister per block, global engine lock, scalar CRC32 extent
-checksums) so benchmarks can measure the gain in the same run.
+checksums). Benchmarks measure all three in the same run, with
+`_ServerIO.data_path_counters()` providing first-class copy/checksum/
+keystream accounting.
 
 Perf numbers for any workload come from `stations()` + core.sim.mva — the
 same calibrated model the paper-figure benchmarks use.
@@ -51,9 +62,64 @@ from repro.core.data_plane import (MemoryRegion, MemoryRegistry,
 from repro.core.dfs import AKEY, BLOCK, DFSClient, DFSMeta, split_blocks
 from repro.core.media import (Device, crc32_checksum, make_nvme_array,
                               striped_stations)
-from repro.core.object_store import ObjectStore
+from repro.core.object_store import MediaScrubber, ObjectStore
 from repro.core.sim import Station, mva
 from repro.core.smartnic import DPURuntime, InlineCrypto
+
+
+class SlotLease:
+    """Lease on a DONATED staging-ring slot.
+
+    The op thread holds the slot while staging; at commit each replica
+    device `pin()`s the lease (the buffer is now media's DMA source) and
+    `unpin()`s it when its deferred writeback lands the bytes (or the
+    block is deleted). The slot returns to the ring's free list only when
+    the op has released it AND every pin has dropped — a donated slot can
+    therefore never be re-staged while any device still reads from it
+    (the no-aliasing invariant tests assert structurally)."""
+
+    __slots__ = ("ring", "slot", "materialized", "_pins", "_op_held",
+                 "_freed", "_lock")
+
+    def __init__(self, ring: "_StagingRing", slot: int):
+        self.ring = ring
+        self.slot = slot
+        # first replica writeback materializes the payload once; the other
+        # replicas reuse it (the replicas all DMA from the same buffer)
+        self.materialized: Optional[bytes] = None
+        self._pins = 0
+        self._op_held = True
+        self._freed = False
+        self._lock = threading.Lock()
+
+    def pin(self) -> None:
+        with self._lock:
+            assert not self._freed, "pin on a returned slot lease"
+            self._pins += 1
+
+    def unpin(self) -> None:
+        with self._lock:
+            self._pins -= 1
+            free_now = self._pins == 0 and not self._op_held \
+                and not self._freed
+            if free_now:
+                self._freed = True
+        if free_now:
+            self.ring._return_slot(self.slot)
+
+    def _op_release(self) -> None:
+        with self._lock:
+            self._op_held = False
+            free_now = self._pins == 0 and not self._freed
+            if free_now:
+                self._freed = True
+        if free_now:
+            self.ring._return_slot(self.slot)
+
+    @property
+    def active(self) -> bool:
+        with self._lock:
+            return not self._freed
 
 
 class _StagingRing:
@@ -63,7 +129,13 @@ class _StagingRing:
     slots atomically (waits until k are free at once, so concurrent multi-
     slot ops can never deadlock holding partial sets). This replaces the
     seed's single 4-block staging region guarded by a global engine lock —
-    with 16 slots, 16 DPU workers stage in parallel."""
+    with 16 slots, 16 DPU workers stage in parallel.
+
+    `donate(slot)` starts the zero-copy write handoff: the slot's buffer
+    becomes the payload media commits by reference (SlotLease above). When
+    `acquire` runs short of free slots and donations are outstanding, it
+    invokes the reclaim callback (the server flushes device writebacks) to
+    pull leased slots back instead of waiting out their owners."""
 
     def __init__(self, registry: MemoryRegistry, n_slots: int,
                  slot_bytes: int, tenant: str):
@@ -74,27 +146,78 @@ class _StagingRing:
         self._locks = [threading.Lock() for _ in range(self.n_slots)]
         self._free = list(range(self.n_slots))
         self._cv = threading.Condition()
+        self._donated: Dict[int, SlotLease] = {}
+        self._reclaim = None          # callback: flush media writebacks
+        self.donations = 0
+        self.reclaims = 0
+
+    def set_reclaim(self, cb) -> None:
+        self._reclaim = cb
 
     def acquire(self, k: int, timeout: float = 120.0) -> List[int]:
         k = min(k, self.n_slots)
         import time as _time
         deadline = _time.monotonic() + timeout
-        with self._cv:
-            while len(self._free) < k:
-                if not self._cv.wait(deadline - _time.monotonic()):
+        while True:
+            with self._cv:
+                if len(self._free) >= k:
+                    slots = [self._free.pop() for _ in range(k)]
+                    break
+                reclaimable = bool(self._donated) and self._reclaim is not None
+                if not reclaimable:
+                    if not self._cv.wait(deadline - _time.monotonic()):
+                        raise TimeoutError("staging ring exhausted")
+                    continue
+            # leased slots outstanding: ask media to write back (outside
+            # the cv — writeback completion re-enters via _return_slot);
+            # bounded to roughly what this acquire needs, not a full flush
+            self.reclaims += 1
+            self._reclaim(k * self.slot_bytes)
+            with self._cv:
+                if len(self._free) >= k:
+                    slots = [self._free.pop() for _ in range(k)]
+                    break
+                if _time.monotonic() >= deadline:
                     raise TimeoutError("staging ring exhausted")
-            slots = [self._free.pop() for _ in range(k)]
+                self._cv.wait(0.05)
         for s in slots:
             acquired = self._locks[s].acquire(blocking=False)
             assert acquired, "staging slot handed out twice"
         return slots
 
-    def release(self, slots: List[int]) -> None:
-        for s in slots:
-            self._locks[s].release()
+    def donate(self, slot: int) -> SlotLease:
+        lease = SlotLease(self, slot)
         with self._cv:
-            self._free.extend(slots)
+            self._donated[slot] = lease
+            self.donations += 1
+        return lease
+
+    def release(self, slots: List[int]) -> None:
+        for s in slots:               # locks first: a slot must never sit
+            self._locks[s].release()  # in _free with its lock still held
+        donated: List[SlotLease] = []
+        with self._cv:
+            back = []
+            for s in slots:
+                lease = self._donated.get(s)
+                if lease is None:
+                    back.append(s)
+                else:
+                    donated.append(lease)
+            self._free.extend(back)
             self._cv.notify_all()
+        for lease in donated:
+            lease._op_release()
+
+    def _return_slot(self, slot: int) -> None:
+        with self._cv:
+            self._donated.pop(slot, None)
+            self._free.append(slot)
+            self._cv.notify_all()
+
+    def donated_slots(self) -> List[int]:
+        with self._cv:
+            return sorted(self._donated)
 
     def offset(self, slot: int) -> int:
         return slot * self.slot_bytes
@@ -125,7 +248,8 @@ class _ServerIO:
                  server_registry: MemoryRegistry, transport: str,
                  tenant: str, control: ControlPlane,
                  crypto: Optional[InlineCrypto] = None,
-                 n_staging_slots: int = 16, legacy: bool = False):
+                 n_staging_slots: int = 16, legacy: bool = False,
+                 zero_copy: bool = True):
         self.container = engine_container
         self.creg = client_registry
         self.sreg = server_registry
@@ -134,10 +258,14 @@ class _ServerIO:
         self.crypto = crypto
         self.transport_kind = transport
         self.legacy = legacy
+        self.zero_copy = zero_copy and not legacy
+        self.host_copy_bytes = 0      # client-side materialization copies
         # server staging ring (bounce buffers) for the engine side; the
         # legacy path uses the same region through `self.staging`
         self.ring = _StagingRing(self.sreg, n_staging_slots, BLOCK, tenant)
         self.staging = self.ring.region
+        if self.zero_copy:
+            self.ring.set_reclaim(self._reclaim_donations)
         if transport == "rdma":
             self.xport = RDMATransport(local=self.creg, remote=self.sreg)
             # session-scoped capability exchange over the control plane
@@ -148,7 +276,8 @@ class _ServerIO:
                             region_id=self.staging.region_id, perms="rw")
             self.staging_rkey = r["rkey"]
         else:
-            self.xport = TCPTransport(local=self.creg, remote=self.sreg)
+            self.xport = TCPTransport(local=self.creg, remote=self.sreg,
+                                      sendmsg_batching=self.zero_copy)
             self.staging_rkey = None
         self._lock = threading.Lock()           # legacy path only
         # concurrency gauge: how many reads are in flight right now / ever
@@ -159,6 +288,42 @@ class _ServerIO:
     @property
     def stats(self):
         return self.xport.stats
+
+    def _reclaim_donations(self, need_bytes: Optional[int] = None) -> None:
+        """Staging-ring pressure: flush media writebacks so leased slots
+        return to the free list (invoked by ring.acquire). Every replica
+        device must release its pin for a slot to come back, so the bound
+        applies per device; the shared-materialization on the lease keeps
+        that at one copy per donated byte total."""
+        for dev in self.container.store.devices:
+            dev.writeback(limit_bytes=need_bytes)
+
+    def data_path_counters(self) -> Dict[str, Any]:
+        """First-class copy/checksum/keystream accounting across the whole
+        data path: transport (wire), engine (checksum + verified cache),
+        media (commit copies vs donations), client (materializations) and
+        crypto (keystream cache). The benchmark's copies/byte, checksum
+        hit rate and keystream hit rate all derive from this one dict."""
+        from dataclasses import asdict
+        store = self.container.store
+        devs = store.devices
+        out = {
+            "transport": asdict(self.xport.stats),
+            "engine": asdict(store.stats),
+            "media": {
+                "host_copy_bytes": sum(d.host_copy_bytes for d in devs),
+                "donated_bytes": sum(d.donated_bytes for d in devs),
+                "writeback_bytes": sum(d.writeback_bytes for d in devs),
+                "bytes_written": sum(d.bytes_written for d in devs),
+                "bytes_read": sum(d.bytes_read for d in devs),
+            },
+            "client": {"host_copy_bytes": self.host_copy_bytes},
+            "staging": {"donations": self.ring.donations,
+                        "reclaims": self.ring.reclaims},
+        }
+        if self.crypto is not None:
+            out["crypto"] = asdict(self.crypto.stats)
+        return out
 
     # -- vectored write path -------------------------------------------------
     def write(self, oid: int, offset: int, data) -> None:
@@ -171,7 +336,15 @@ class _ServerIO:
         """Scatter-gather write: every iovec buffer is registered once
         (zero-copy wrap, no concatenation), moved in ring-sized SG batches
         (one transport op each, descriptors pointing into the caller's own
-        regions), and committed via `update_many` (one epoch per writev)."""
+        regions), and committed via `update_many` (one epoch per writev).
+
+        On the zero-copy path the staged block is encrypted IN PLACE
+        (fused `apply_into`, no temporary) and its ring slot DONATED to
+        media: every replica commits the buffer by reference under a
+        SlotLease, so the op-critical path performs zero post-splice
+        copies; media's deferred writeback (pressure/read-triggered) pays
+        the NAND program later. With `zero_copy=False` the PR-1 behavior
+        (one `tobytes` materialization per block) is preserved."""
         if self.legacy:
             pos = offset
             for a in buffers:
@@ -196,6 +369,7 @@ class _ServerIO:
         try:
             blocks = split_blocks(offset, total)
             pos = 0
+            si = 0          # span cursor: spans and blocks both ascend
             for base in range(0, len(blocks), self.ring.n_slots):
                 batch = blocks[base:base + self.ring.n_slots]
                 slots = self.ring.acquire(len(batch))
@@ -203,27 +377,44 @@ class _ServerIO:
                     iov, p = [], pos
                     for (b, bo, ln), s in zip(batch, slots):
                         # a block may straddle buffer boundaries: one
-                        # descriptor per (block, buffer) overlap
-                        for g0, g1, mr in spans:
+                        # descriptor per (block, buffer) overlap —
+                        # two-pointer walk, O(blocks + buffers) overall
+                        while si < len(spans) and spans[si][1] <= p:
+                            si += 1
+                        j = si
+                        while j < len(spans) and spans[j][0] < p + ln:
+                            g0, g1, mr = spans[j]
                             lo, hi = max(p, g0), min(p + ln, g1)
-                            if lo < hi:
-                                iov.append((self.ring.offset(s) + lo - p,
-                                            mr, lo - g0, hi - lo))
+                            iov.append((self.ring.offset(s) + lo - p,
+                                        mr, lo - g0, hi - lo))
+                            j += 1
                         p += ln
                     if self.transport_kind == "rdma":
                         self.xport.write_sg(self.staging_rkey, self.tenant,
                                             iov)
                     else:
                         self.xport.write_sg(self.staging, iov)
-                    items = []
+                    items, leases = [], []
                     for (b, bo, ln), s in zip(batch, slots):
                         view = self.ring.view(s)[:ln]
                         if self.crypto is not None:
-                            view[:] = self.crypto.apply(
-                                view, nonce=oid * (1 << 20) + b,
-                                offset=bo)
-                        items.append((str(b), AKEY, bo, view.tobytes()))
-                    obj.update_many(items, epoch=epoch)
+                            if self.zero_copy:      # fused in-place XOR
+                                self.crypto.apply_into(
+                                    view, view, nonce=oid * (1 << 20) + b,
+                                    offset=bo)
+                            else:
+                                view[:] = self.crypto.apply(
+                                    view, nonce=oid * (1 << 20) + b,
+                                    offset=bo)
+                        if self.zero_copy:
+                            items.append((str(b), AKEY, bo, view))
+                            leases.append(self.ring.donate(s))
+                        else:
+                            items.append((str(b), AKEY, bo, view.tobytes()))
+                            leases.append(None)
+                            with self._gauge_lock:   # concurrent DPU writers
+                                self.host_copy_bytes += ln
+                    obj.update_many(items, epoch=epoch, leases=leases)
                     pos = p
                 finally:
                     self.ring.release(slots)
@@ -236,12 +427,36 @@ class _ServerIO:
     def _fetch_block(self, obj, oid: int, b: int, bo: int, ln: int,
                      view: np.ndarray) -> None:
         """Stage one block: engine -> ring slot (tests hook this to assert
-        staging-ring concurrency)."""
+        staging-ring concurrency). Decrypt is the fused single-pass
+        `apply_into` on the zero-copy path (PR-1's generate+XOR+copy-back
+        is kept behind `zero_copy=False` for benchmarks)."""
         obj.fetch_into(str(b), AKEY, bo, ln, view)
         if self.crypto is not None:
-            view[:ln] = self.crypto.apply(view[:ln],
-                                          nonce=oid * (1 << 20) + b,
-                                          offset=bo)
+            if self.zero_copy:
+                self.crypto.apply_into(view[:ln], view[:ln],
+                                       nonce=oid * (1 << 20) + b, offset=bo)
+            else:
+                view[:ln] = self.crypto.apply(view[:ln],
+                                              nonce=oid * (1 << 20) + b,
+                                              offset=bo)
+
+    @property
+    def supports_readv_into(self) -> bool:
+        return self.zero_copy
+
+    def readv_into(self, oid: int, offset: int, bufs: Sequence) -> int:
+        """Vectored gather-read filling N caller buffers (np.uint8 arrays)
+        directly from the contiguous file range [offset, offset+total) —
+        the `preadv` fast path. Each buffer is registered once (zero-copy
+        wrap) and the SG descriptors scatter straight into them; no
+        contiguous intermediate `bytes` is ever materialized."""
+        mrs = [self.creg.register(b, self.tenant) for b in bufs]
+        try:
+            return self._gather_into(
+                oid, offset, [(mr, 0, mr.size) for mr in mrs])
+        finally:
+            for mr in mrs:
+                self.creg.deregister(mr)
 
     def read_into(self, oid: int, offset: int, size: int,
                   dst_mr: MemoryRegion, dst_off: int = 0) -> int:
@@ -252,6 +467,24 @@ class _ServerIO:
         analogue's transport leg (core.device_direct builds on it)."""
         if self.legacy:
             return self._read_into_legacy(oid, offset, size, dst_mr, dst_off)
+        return self._gather_into(oid, offset, [(dst_mr, dst_off, size)])
+
+    def _gather_into(self, oid: int, offset: int,
+                     dsts: Sequence) -> int:
+        """Shared gather core: fill destination spans [(mr, mr_off, size)]
+        from the file range. A staged block may straddle destination
+        boundaries: one SG descriptor per (block, destination) overlap,
+        same as writev's source spans."""
+        # destination spans in gather-global byte coordinates (zero-size
+        # destinations occupy no span and produce no descriptor)
+        spans, g = [], 0
+        for mr, moff, sz in dsts:
+            if sz > 0:
+                spans.append((g, g + sz, mr, moff))
+            g += sz
+        size = g
+        if size == 0:
+            return 0
         obj = self.container.object(oid)
         with self._gauge_lock:
             self._active_reads += 1
@@ -260,6 +493,7 @@ class _ServerIO:
         try:
             blocks = split_blocks(offset, size)
             pos = 0
+            si = 0          # span cursor: spans and blocks both ascend
             for base in range(0, len(blocks), self.ring.n_slots):
                 batch = blocks[base:base + self.ring.n_slots]
                 slots = self.ring.acquire(len(batch))
@@ -268,8 +502,15 @@ class _ServerIO:
                     for (b, bo, ln), s in zip(batch, slots):
                         self._fetch_block(obj, oid, b, bo, ln,
                                           self.ring.view(s)[:ln])
-                        iov.append((self.ring.offset(s), dst_mr,
-                                    dst_off + pos, ln))
+                        while si < len(spans) and spans[si][1] <= pos:
+                            si += 1
+                        j = si
+                        while j < len(spans) and spans[j][0] < pos + ln:
+                            g0, g1, mr, moff = spans[j]
+                            lo, hi = max(pos, g0), min(pos + ln, g1)
+                            iov.append((self.ring.offset(s) + lo - pos,
+                                        mr, moff + lo - g0, hi - lo))
+                            j += 1
                         pos += ln
                     if self.transport_kind == "rdma":
                         self.xport.read_sg(self.staging_rkey, self.tenant,
@@ -372,9 +613,13 @@ class ROS2Client:
                  n_devices: int = 4, tenant: str = "default",
                  secret: str = "secret", inline_encryption: bool = False,
                  replication: int = 2, n_dpu_cores: int = 16,
-                 n_staging_slots: int = 16, legacy: bool = False):
+                 n_staging_slots: int = 16, legacy: bool = False,
+                 zero_copy: bool = True,
+                 scrub_interval_s: Optional[float] = 1.0):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
         self.mode, self.transport = mode, transport
+        zero_copy = zero_copy and not legacy
+        self.zero_copy = zero_copy
         # ---- storage server ----
         self.devices = make_nvme_array(n_devices)
         # legacy reproduces the full seed data path, scalar CRC included
@@ -382,10 +627,13 @@ class ROS2Client:
                                  csum=crc32_checksum if legacy else None)
         pool = self.store.create_pool("pool0")
         # DFS reads never pin historical epochs, so the vectored client runs
-        # with epoch aggregation on; legacy keeps seed full-history extents
+        # with epoch aggregation on; legacy keeps seed full-history extents.
+        # zero_copy=False also pins the PR-1 verify-every-read engine.
         self.container = pool.create_container("cont0",
                                                replication=replication,
-                                               aggregate=not legacy)
+                                               aggregate=not legacy,
+                                               verified_cache=zero_copy)
+        self.scrubber = MediaScrubber(self.store)
         self.server_registry = MemoryRegistry("server")
         self.control = ControlPlane(self.store, self.server_registry,
                                     tenants={tenant: secret})
@@ -398,11 +646,16 @@ class ROS2Client:
         if not r["ok"]:
             raise PermissionError(r["error"])
         self.session_id = r["session_id"]
-        crypto = InlineCrypto(0xC0FFEE) if inline_encryption else None
+        crypto = None
+        if inline_encryption:
+            # zero_copy=False disables the keystream cache too (PR-1 cost)
+            crypto = InlineCrypto(0xC0FFEE) if zero_copy \
+                else InlineCrypto(0xC0FFEE, cache_bytes=0)
         self.io = _ServerIO(self.container, self.client_registry,
                             self.server_registry, transport, tenant,
                             self.control, crypto,
-                            n_staging_slots=n_staging_slots, legacy=legacy)
+                            n_staging_slots=n_staging_slots, legacy=legacy,
+                            zero_copy=zero_copy)
         self.dfs = DFSClient(self.control, self.io, self.session_id)
         self.dfs.mount()
         self.tenant = tenant
@@ -416,6 +669,11 @@ class ROS2Client:
             self.dpu.register("readv", self.dfs.preadv)
             self.dpu.register("writev", self.dfs.pwritev)
             self.dpu.start()
+        if zero_copy and scrub_interval_s is not None:
+            # the verified cache is only honest while the scrubber bounds
+            # the silent-corruption window — run it whenever the cache runs.
+            # Started LAST so a failed construction never leaks the thread.
+            self.scrubber.start(interval_s=scrub_interval_s)
 
     # ---- POSIX-ish sync API (host launches; DPU executes in dpu mode) ----
     def _dpu_call(self, op: str, _timeout: float = 120.0, **args):
@@ -488,6 +746,7 @@ class ROS2Client:
         self.dfs.mkdir(path)
 
     def close(self) -> None:
+        self.scrubber.stop()
         if self.dpu:
             self.dpu.stop()
 

@@ -11,6 +11,8 @@ import threading
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.object_store import Container, ObjectStore, StorageError
 
 BLOCK = 1 << 20                    # 1 MiB DFS striping unit
@@ -198,12 +200,22 @@ class DFSClient:
         return self.io.read(h.oid, offset, size)
 
     def preadv(self, fd: int, sizes, offset: int) -> List[bytes]:
-        """Vectored read: one gather op over the contiguous range, sliced
-        into len(sizes) result buffers."""
+        """Vectored read: one gather op over the contiguous range. On the
+        zero-copy path the SG descriptors scatter straight into the
+        per-size result buffers (`readv_into`) — no contiguous
+        intermediate `bytes` is materialized and re-sliced; the only
+        remaining copy is the `bytes` materialization the return type
+        demands. Falls back to the contiguous blob+slice path when the
+        I/O adapter lacks vectored fill (legacy / PR-1 sg mode)."""
         h = self._open.get(fd)
         if h is None:
             raise DFSError("EBADF")
-        total = int(sum(sizes))
+        sizes = [int(s) for s in sizes]
+        if getattr(self.io, "supports_readv_into", False):
+            bufs = [np.empty(s, np.uint8) for s in sizes]
+            self.io.readv_into(h.oid, offset, bufs)
+            return [b.tobytes() for b in bufs]
+        total = sum(sizes)
         blob = self.io.read(h.oid, offset, total)
         out, pos = [], 0
         for s in sizes:

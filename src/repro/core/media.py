@@ -36,8 +36,31 @@ SCM_PERF = MediaPerf(read_bw=30 * GiB, write_bw=20 * GiB,
                      internal_parallelism=8)
 
 
+class _DonatedBlock:
+    """A block whose payload is a caller-donated buffer (a staging-ring
+    slot view): zero host copies at commit. The lease pin keeps the slot
+    out of the ring's free list until `writeback` programs the block into
+    the device's private store ("NAND program" — the DMA a real NVMe
+    performs from the pinned host buffer, not a host-CPU data-path copy)."""
+
+    __slots__ = ("arr", "lease")
+
+    def __init__(self, arr: "np.ndarray", lease) -> None:
+        self.arr = arr
+        self.lease = lease
+
+
 class Device:
-    """A functional block device holding real bytes."""
+    """A functional block device holding real bytes.
+
+    `write` accepts bytes / memoryview / ndarray. With `lease=None`,
+    non-bytes input is materialized (counted in `host_copy_bytes` — the
+    per-replica private copy the zero-copy path eliminates). With a lease,
+    the buffer is DONATED: stored by reference with zero copies, the lease
+    pinned until `writeback()` (triggered by reads of the block, staging-
+    ring pressure, or device failure) lands the bytes in the private store
+    and releases the slot back to the ring. `generation` bumps on every
+    fail/recover so verified-extent caches keyed on it self-invalidate."""
 
     def __init__(self, name: str, capacity: int, perf: MediaPerf,
                  kind: str = "nvme"):
@@ -45,21 +68,69 @@ class Device:
         self.capacity = capacity
         self.perf = perf
         self.kind = kind
-        self._blocks: Dict[int, bytes] = {}
+        self._blocks: Dict[int, object] = {}    # key -> bytes | _DonatedBlock
         self._lock = threading.Lock()
         self.alive = True
+        self.generation = 0
         self.bytes_written = 0
         self.bytes_read = 0
+        self.host_copy_bytes = 0       # data-path copies made at commit
+        self.donated_bytes = 0         # bytes committed by buffer donation
+        self.writeback_bytes = 0       # deferred NAND programs of donations
 
-    def write(self, key: int, data: bytes) -> None:
+    def write(self, key: int, data, lease=None) -> None:
         if not self.alive:
             raise IOError(f"device {self.name} failed")
+        if lease is not None:
+            arr = data if isinstance(data, np.ndarray) \
+                else np.frombuffer(data, np.uint8)
+            lease.pin()
+            with self._lock:
+                self._blocks[key] = _DonatedBlock(arr, lease)
+                self.bytes_written += arr.size
+                self.donated_bytes += arr.size
+            return
         # materialize outside the lock: concurrent writers to one device
         # serialize only on the dict insert, not on the byte copy
-        payload = bytes(data)
+        if isinstance(data, bytes):
+            payload = data
+            copied = 0
+        else:
+            payload = bytes(data)
+            copied = len(payload)
         with self._lock:
             self._blocks[key] = payload
             self.bytes_written += len(payload)
+            self.host_copy_bytes += copied
+
+    def _writeback_entry(self, key: int, entry: _DonatedBlock) -> bytes:
+        """Program a donated buffer into the private store and release its
+        staging-ring lease. Caller holds self._lock. Replicas of the same
+        donation share ONE materialization (stashed on the lease): the
+        bytes leave the ring buffer once, like the single host buffer all
+        replica DMAs source from."""
+        payload = entry.lease.materialized
+        if payload is None:
+            payload = entry.arr.tobytes()
+            entry.lease.materialized = payload
+            self.writeback_bytes += len(payload)
+        self._blocks[key] = payload
+        entry.lease.unpin()
+        return payload
+
+    def writeback(self, limit_bytes: Optional[int] = None) -> int:
+        """Flush donated blocks to the private store (releasing their
+        leases); returns bytes written back. `limit_bytes` bounds the
+        flush for pressure-driven partial reclaims."""
+        done = 0
+        with self._lock:
+            for key, entry in list(self._blocks.items()):
+                if not isinstance(entry, _DonatedBlock):
+                    continue
+                done += len(self._writeback_entry(key, entry))
+                if limit_bytes is not None and done >= limit_bytes:
+                    break
+        return done
 
     def read(self, key: int) -> bytes:
         if not self.alive:
@@ -68,22 +139,34 @@ class Device:
             data = self._blocks.get(key)
             if data is None:
                 raise KeyError(f"{self.name}: no block {key}")
+            if isinstance(data, _DonatedBlock):
+                # first read completes the deferred NAND program, so the
+                # returned bytes never alias the (reusable) ring slot
+                data = self._writeback_entry(key, data)
             self.bytes_read += len(data)
             return data
 
     def delete(self, key: int) -> None:
         with self._lock:
-            self._blocks.pop(key, None)
+            entry = self._blocks.pop(key, None)
+        if isinstance(entry, _DonatedBlock):
+            entry.lease.unpin()
 
     def fail(self) -> None:
+        # land in-flight donations first so their ring slots come back even
+        # while the device is down (the data survives for recover())
+        self.writeback()
+        self.generation += 1
         self.alive = False
 
     def recover(self) -> None:
+        self.generation += 1
         self.alive = True
 
     def used_bytes(self) -> int:
         with self._lock:
-            return sum(len(b) for b in self._blocks.values())
+            return sum(b.arr.size if isinstance(b, _DonatedBlock) else len(b)
+                       for b in self._blocks.values())
 
     # -- performance model -------------------------------------------------
     def stations(self, io_size: int, write: bool) -> List[Station]:

@@ -12,8 +12,9 @@ from __future__ import annotations
 import itertools
 import threading
 from bisect import insort
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +38,85 @@ class Extent:
     block_keys: Dict[str, int]      # device_name -> block key (replicas)
 
 
+def _nbytes(data) -> int:
+    """Byte length of bytes / memoryview / uint8 ndarray payloads."""
+    return data.size if isinstance(data, np.ndarray) else len(data)
+
+
+@dataclass
+class EngineStats:
+    """First-class copy/checksum accounting for the engine side of the
+    data path (the transport side lives in TransportStats)."""
+    checksum_bytes: int = 0          # bytes actually run through the csum
+    checksum_skipped_bytes: int = 0  # bytes served from the verified cache
+    verify_hits: int = 0
+    verify_misses: int = 0
+    vcache_invalidations: int = 0
+    scrub_bytes: int = 0             # bytes re-verified by the MediaScrubber
+    scrub_corruptions: int = 0       # cache entries revoked by the scrubber
+
+
+class VerifiedExtentCache:
+    """Remembers which (device, block-key) replicas have already passed the
+    end-to-end Fletcher-64 verify, so warm re-reads skip the checksum pass
+    (~0.5 ms/MiB). Entries are keyed by extent identity — block keys are
+    globally unique and never reused — and carry the device generation at
+    verify time, so a device fail/recover invalidates all of its entries
+    implicitly. Explicit invalidation happens on epoch aggregation /
+    retire_extents and rebuild; silent in-place corruption (the one thing
+    identity keying cannot see) is bounded by the MediaScrubber's budgeted
+    background re-verification."""
+
+    def __init__(self, stats: EngineStats, max_entries: int = 1 << 16,
+                 enabled: bool = True):
+        self.enabled = enabled
+        self.max_entries = max_entries
+        self.stats = stats
+        self._entries: "OrderedDict[Tuple[str, int], Tuple[int, int, int]]" \
+            = OrderedDict()          # (dev, key) -> (generation, csum, nbytes)
+        self._lock = threading.Lock()
+
+    def check(self, dev_name: str, key: int, generation: int) -> bool:
+        if not self.enabled:
+            return False
+        with self._lock:
+            ent = self._entries.get((dev_name, key))
+            if ent is None or ent[0] != generation:
+                return False
+            self._entries.move_to_end((dev_name, key))
+            return True
+
+    def insert(self, dev_name: str, key: int, generation: int, csum: int,
+               nbytes: int) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self._entries[(dev_name, key)] = (generation, csum, nbytes)
+            self._entries.move_to_end((dev_name, key))
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+    def invalidate_block(self, dev_name: str, key: int) -> None:
+        with self._lock:
+            if self._entries.pop((dev_name, key), None) is not None:
+                self.stats.vcache_invalidations += 1
+
+    def invalidate_device(self, dev_name: str) -> None:
+        with self._lock:
+            stale = [k for k in self._entries if k[0] == dev_name]
+            for k in stale:
+                del self._entries[k]
+            self.stats.vcache_invalidations += len(stale)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def snapshot(self) -> List[Tuple[Tuple[str, int], Tuple[int, int, int]]]:
+        with self._lock:
+            return list(self._entries.items())
+
+
 class DAOSObject:
     """Key-array object: (dkey, akey) -> versioned extent list.
 
@@ -57,41 +137,54 @@ class DAOSObject:
         return self.update_many([(dkey, akey, offset, data)], epoch=epoch)
 
     def update_many(self, items: Iterable[Tuple[str, str, int, bytes]],
-                    epoch: Optional[int] = None) -> int:
+                    epoch: Optional[int] = None,
+                    leases: Optional[Sequence] = None) -> int:
         """Apply a batch of (dkey, akey, offset, data) updates under ONE
         epoch with one extent-table lock acquisition. Replica writes and
         checksums happen outside the lock. On containers with
         `aggregate=True`, superseded extent versions (fully covered by a
         newer write) are pruned at insert — DAOS-style epoch aggregation —
         and their device blocks reclaimed after a short epoch grace window
-        (so in-flight readers holding a pre-insert snapshot still resolve)."""
+        (so in-flight readers holding a pre-insert snapshot still resolve).
+
+        `data` may be bytes, a memoryview, or a uint8 ndarray. `leases`
+        (aligned with `items`) carries staging-ring slot leases: a leased
+        payload is DONATED to every replica device — committed by
+        reference with zero host copies, each device pinning the lease
+        until its deferred writeback (media.py) lands the bytes."""
         cont = self.container
         epoch = cont.next_epoch() if epoch is None else epoch
-        staged: List[Tuple[str, str, int, bytes, List[Device]]] = []
-        for dkey, akey, offset, data in items:
-            payload = data if isinstance(data, bytes) else bytes(data)
+        items = list(items)
+        leases = list(leases) if leases is not None else [None] * len(items)
+        staged: List[tuple] = []
+        for (dkey, akey, offset, data), lease in zip(items, leases):
+            payload = data if isinstance(data, (bytes, np.ndarray)) \
+                else bytes(data)
             live = [t for t in cont.placement(self.oid, dkey) if t.alive]
             if len(live) < 1:                     # validate the whole batch
                 raise StorageError("no live targets for update")
             staged.append((dkey, akey, offset, payload,
-                           live[:cont.replication]))
+                           live[:cont.replication], lease))
         prepped: List[Tuple[Tuple[str, str], Extent]] = []
         written: List[Tuple[Device, int]] = []
         try:
-            for dkey, akey, offset, payload, targets in staged:
+            for dkey, akey, offset, payload, targets, lease in staged:
+                n = _nbytes(payload)
                 csum = cont.store.csum(payload)
+                with cont.store._stats_lock:
+                    cont.store.stats.checksum_bytes += n
                 keys: Dict[str, int] = {}
                 for dev in targets:
                     key = cont.store.new_block_key()
-                    dev.write(key, payload)
+                    dev.write(key, payload, lease=lease)
                     written.append((dev, key))
                     keys[dev.name] = key
                 prepped.append(((dkey, akey),
-                                Extent(offset, len(payload), epoch, csum,
-                                       keys)))
+                                Extent(offset, n, epoch, csum, keys)))
         except Exception:
             # free replica blocks of the aborted batch (no extent points
-            # at them; without this they would leak in Device._blocks)
+            # at them; without this they would leak in Device._blocks, and
+            # their donated leases would pin staging slots forever)
             for dev, key in written:
                 dev.delete(key)
             raise
@@ -161,11 +254,19 @@ class DAOSObject:
                     raise               # genuine replica failure
         return size
 
-    def _read_extent(self, ext: Extent, verify: bool) -> bytes:
+    def _read_extent(self, ext: Extent, verify: bool,
+                     cache: bool = True) -> bytes:
+        """Read one replica of the extent, verifying the end-to-end
+        checksum unless the verified-extent cache already vouches for this
+        (device, block, generation) — the warm-read fast path that skips
+        the Fletcher-64 pass entirely. `cache=False` forces a full verify
+        AND skips cache insertion (rebuild uses it: data about to be
+        re-replicated must never be trusted on faith)."""
         cont = self.container
+        store = cont.store
         last_err: Optional[Exception] = None
         for name, key in ext.block_keys.items():
-            dev = cont.store.device(name)
+            dev = store.device(name)
             if dev is None or not dev.alive:
                 continue
             try:
@@ -173,9 +274,25 @@ class DAOSObject:
             except Exception as e:     # degraded replica
                 last_err = e
                 continue
-            if verify and cont.store.csum(data) != ext.csum:
-                last_err = ChecksumError(f"extent csum mismatch on {name}")
-                continue                # silent-corruption -> next replica
+            if verify:
+                n = _nbytes(data)
+                if cache and cont.vcache.check(name, key, dev.generation):
+                    with store._stats_lock:
+                        store.stats.verify_hits += 1
+                        store.stats.checksum_skipped_bytes += n
+                elif store.csum(data) != ext.csum:
+                    with store._stats_lock:
+                        store.stats.verify_misses += 1
+                        store.stats.checksum_bytes += n
+                    last_err = ChecksumError(f"extent csum mismatch on {name}")
+                    continue            # silent-corruption -> next replica
+                else:
+                    with store._stats_lock:
+                        store.stats.verify_misses += 1
+                        store.stats.checksum_bytes += n
+                    if cache:
+                        cont.vcache.insert(name, key, dev.generation,
+                                           ext.csum, n)
             return data
         raise StorageError(f"extent unreadable from all replicas: {last_err}")
 
@@ -188,7 +305,9 @@ class DAOSObject:
         for ext in all_exts:
             if failed not in ext.block_keys:
                 continue
-            data = self._read_extent(ext, verify=True)
+            # bypass the verified cache: rebuild re-verifies the replica it
+            # copies from, and the failed device's entries are dropped
+            data = self._read_extent(ext, verify=True, cache=False)
             candidates = [d for d in cont.store.devices
                           if d.alive and d.name not in ext.block_keys]
             if not candidates:
@@ -196,7 +315,9 @@ class DAOSObject:
             dev = candidates[(ext.csum + moved) % len(candidates)]
             key = cont.store.new_block_key()
             dev.write(key, data)
-            ext.block_keys.pop(failed, None)
+            old_key = ext.block_keys.pop(failed, None)
+            if old_key is not None:
+                cont.vcache.invalidate_block(failed, old_key)
             ext.block_keys[dev.name] = key
             moved += 1
         return moved
@@ -206,17 +327,25 @@ class Container:
     """`aggregate=True` enables DAOS-style epoch aggregation: a write that
     fully covers older extents retires them (device blocks reclaimed after
     an epoch grace window). Off by default — epoch-snapshot reads below the
-    aggregation horizon then keep full history (the seed semantics)."""
+    aggregation horizon then keep full history (the seed semantics).
+
+    `verified_cache=True` enables the warm-read checksum skip. Off by
+    default for the bare engine primitive (every read verifies, the seed
+    semantics): the cache is only honest when something runs a
+    MediaScrubber against the store, which ROS2Client wires up when it
+    opts in."""
 
     AGGREGATE_GRACE_EPOCHS = 4
 
     def __init__(self, name: str, pool: "Pool", replication: int = 2,
-                 aggregate: bool = False):
+                 aggregate: bool = False, verified_cache: bool = False):
         self.name = name
         self.pool = pool
         self.store = pool.store
         self.replication = max(1, min(replication, len(self.store.devices)))
         self.aggregate = aggregate
+        self.vcache = VerifiedExtentCache(self.store.stats,
+                                         enabled=verified_cache)
         self._objects: Dict[int, DAOSObject] = {}
         self._epoch = itertools.count(1)
         self._epoch_now = 0
@@ -230,8 +359,14 @@ class Container:
 
     def retire_extents(self, epoch: int, extents: List[Extent]) -> None:
         """Queue superseded extents; free their device blocks once the
-        grace window has passed (in-flight snapshot readers drain first)."""
+        grace window has passed (in-flight snapshot readers drain first).
+        A retiring extent's verified-cache entries are dropped IMMEDIATELY
+        (not at reclaim): a stale cache must never vouch for a retired
+        extent, even during the grace window."""
         grace = self.AGGREGATE_GRACE_EPOCHS
+        for ext in extents:
+            for name, key in ext.block_keys.items():
+                self.vcache.invalidate_block(name, key)
         with self._lock:
             self._retired.extend((epoch, e) for e in extents)
             ready = [e for ep, e in self._retired if ep <= epoch - grace]
@@ -272,8 +407,10 @@ class Pool:
         self.containers: Dict[str, Container] = {}
 
     def create_container(self, name: str, replication: int = 2,
-                         aggregate: bool = False) -> Container:
-        c = Container(name, self, replication, aggregate=aggregate)
+                         aggregate: bool = False,
+                         verified_cache: bool = False) -> Container:
+        c = Container(name, self, replication, aggregate=aggregate,
+                      verified_cache=verified_cache)
         self.containers[name] = c
         return c
 
@@ -293,6 +430,12 @@ class ObjectStore:
         self.pools: Dict[str, Pool] = {}
         self._block_keys = itertools.count(1)
         self.csum = csum or checksum
+        self.stats = EngineStats()
+        self._stats_lock = threading.Lock()
+
+    def containers(self) -> List[Container]:
+        return [c for p in self.pools.values()
+                for c in p.containers.values()]
 
     def create_pool(self, name: str) -> Pool:
         p = Pool(name, self)
@@ -319,3 +462,78 @@ class ObjectStore:
             for c in p.containers.values():
                 moved += c.rebuild(failed)
         return moved
+
+
+class MediaScrubber:
+    """Budgeted background re-verification of verified-cache entries.
+
+    The verified-extent cache trades a checksum pass for trust in extent
+    identity; what it cannot see is in-place media corruption AFTER the
+    first verify. The scrubber keeps the cache honest: each cycle it
+    re-reads up to `budget_bytes` of cached replicas (round-robin across
+    cycles via a rotating cursor), recomputes the Fletcher-64, and REVOKES
+    any entry that no longer matches — the next foreground read then takes
+    the verify-miss path and reroutes to a clean replica. Run it
+    synchronously (`scrub_once`, tests/benchmarks) or as a daemon thread
+    (`start(interval_s)`)."""
+
+    def __init__(self, store: ObjectStore, budget_bytes: int = 32 << 20):
+        self.store = store
+        self.budget_bytes = int(budget_bytes)
+        self._cursor: Dict[int, int] = {}     # id(container) -> position
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def scrub_once(self, budget_bytes: Optional[int] = None) -> Dict[str, int]:
+        budget = self.budget_bytes if budget_bytes is None else budget_bytes
+        scanned = revoked = 0
+        for cont in self.store.containers():
+            if scanned >= budget:
+                break
+            entries = cont.vcache.snapshot()
+            if not entries:
+                continue
+            start = self._cursor.get(id(cont), 0) % len(entries)
+            for i in range(len(entries)):
+                if scanned >= budget:
+                    break
+                (name, key), (gen, csum, n) = entries[(start + i)
+                                                      % len(entries)]
+                self._cursor[id(cont)] = (start + i + 1) % len(entries)
+                dev = self.store.device(name)
+                if dev is None or not dev.alive or dev.generation != gen:
+                    cont.vcache.invalidate_block(name, key)
+                    continue
+                try:
+                    data = dev.read(key)
+                except Exception:     # block reclaimed or device failed
+                    cont.vcache.invalidate_block(name, key)
+                    continue
+                scanned += n
+                if self.store.csum(data) != csum:
+                    cont.vcache.invalidate_block(name, key)
+                    revoked += 1
+        with self.store._stats_lock:
+            self.store.stats.scrub_bytes += scanned
+            self.store.stats.scrub_corruptions += revoked
+        return {"scanned_bytes": scanned, "revoked": revoked}
+
+    def start(self, interval_s: float = 1.0) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval_s):
+                self.scrub_once()
+
+        self._thread = threading.Thread(target=loop, name="media-scrub",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5)
+        self._thread = None

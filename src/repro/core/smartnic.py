@@ -14,12 +14,17 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 N_ARM_CORES = 16
+
+GOLDEN32 = 0x9E3779B9
+KEYSTREAM_PAGE = 64 * 1024          # bytes of stream cached per page
+KEYSTREAM_CACHE_BYTES = 128 << 20   # default LRU capacity
 
 
 @dataclass
@@ -37,35 +42,163 @@ class CQE:
     error: str = ""
 
 
-class InlineCrypto:
-    """Chacha-like XOR keystream applied on the DPU data path (the Pallas
-    kernel `stream_cipher` is the TPU-side equivalent; this is the oracle)."""
+@dataclass
+class CryptoStats:
+    keystream_bytes_generated: int = 0   # PRF work actually performed
+    keystream_bytes_served: int = 0      # stream bytes consumed by applies
+    cache_hits: int = 0                  # page-cache hits
+    cache_misses: int = 0
+    xor_bytes: int = 0                   # bytes XORed (fused or not)
 
-    def __init__(self, key: int):
-        self.key = np.uint64(key or 0x9E3779B97F4A7C15)
+
+def _as_u8(data) -> np.ndarray:
+    """Zero-copy uint8 view of bytes / bytearray / memoryview / ndarray.
+    No implicit materialization: contiguous buffers are wrapped in place;
+    only a non-contiguous memoryview (rare) must be compacted."""
+    if isinstance(data, np.ndarray):
+        return data.view(np.uint8) if data.dtype != np.uint8 else data
+    if isinstance(data, memoryview) and not data.contiguous:
+        return np.asarray(data, dtype=np.uint8).reshape(-1)
+    return np.frombuffer(data, np.uint8)
+
+
+class InlineCrypto:
+    """Counter-mode XOR keystream applied on the DPU data path.
+
+    The PRF is the murmur3-finalizer over (u32 word counter + nonce) —
+    bit-identical to the stream_cipher Pallas kernel (`keystream_u32`), so
+    bytes encrypted inline by the DPU can be decrypted on-device by the
+    TPU kernel and vice versa.
+
+    Keystream pages (KEYSTREAM_PAGE bytes of stream per (nonce, page)) are
+    memoized in an LRU so steady-state re-reads of the same blocks pay zero
+    PRF regeneration; `apply_into` fuses the XOR with the splice into the
+    caller's buffer (one pass, no temporary). `cache_bytes=0` disables the
+    cache (the PR-1 regenerate-every-op behavior, kept for benchmarks)."""
+
+    def __init__(self, key: int, cache_bytes: int = KEYSTREAM_CACHE_BYTES):
+        # fold 64-bit keys into the u32 lane the kernel PRF uses (high half
+        # mixed, never discarded: keys equal mod 2^32 stay distinct), and
+        # guard the degenerate zero key AFTER folding
+        key = int(key or GOLDEN32)
+        self.key = np.uint32(((key & 0xFFFFFFFF) ^ self._fmix32(key >> 32))
+                             or GOLDEN32)
+        # a cache that cannot hold one page is a cache that stores nothing
+        # but still pays full-page generation: treat it as disabled
+        self.cache_bytes = int(cache_bytes) if cache_bytes >= KEYSTREAM_PAGE \
+            else 0
+        self._pages: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+        self._cache_lock = threading.Lock()
+        self.stats = CryptoStats()
+
+    # -- PRF ----------------------------------------------------------------
+    @staticmethod
+    def _fmix32(x: int) -> int:
+        """Scalar murmur3 finalizer; fmix32(0) == 0, so nonces < 2^32 keep
+        the plain key (bit-identical to the stream_cipher kernel)."""
+        x &= 0xFFFFFFFF
+        x ^= x >> 16
+        x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+        x ^= x >> 13
+        x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+        x ^= x >> 16
+        return x
+
+    def _prf_words(self, first_word: int, n_words: int,
+                   nonce: int) -> np.ndarray:
+        """murmur3-finalizer keystream words [first_word, first_word+n).
+        Nonce bits >= 32 are folded into the key (fmix32 of the high half)
+        rather than discarded, so two streams whose nonces agree mod 2^32
+        (e.g. oids 4096 apart) never share a keystream; the TPU kernel
+        decrypts such streams by receiving the same folded key."""
+        key = self.key ^ np.uint32(self._fmix32(nonce >> 32))
+        idx = np.arange(first_word, first_word + n_words, dtype=np.uint32)
+        with np.errstate(over="ignore"):
+            x = (idx + np.uint32(nonce & 0xFFFFFFFF)) * np.uint32(GOLDEN32) \
+                + key
+            x ^= x >> np.uint32(16)
+            x *= np.uint32(0x85EBCA6B)
+            x ^= x >> np.uint32(13)
+            x *= np.uint32(0xC2B2AE35)
+            x ^= x >> np.uint32(16)
+        return x
+
+    def _page(self, nonce: int, page: int) -> np.ndarray:
+        """Keystream bytes [page*PAGE, (page+1)*PAGE) of the nonce's stream,
+        served from the LRU when warm."""
+        k = (int(nonce), page)
+        with self._cache_lock:
+            ks = self._pages.get(k)
+            if ks is not None:
+                self._pages.move_to_end(k)
+                self.stats.cache_hits += 1
+                return ks
+            self.stats.cache_misses += 1
+        words = KEYSTREAM_PAGE // 4
+        ks = self._prf_words(page * words, words, nonce).view(np.uint8)
+        with self._cache_lock:
+            self.stats.keystream_bytes_generated += KEYSTREAM_PAGE
+            if self.cache_bytes >= KEYSTREAM_PAGE:
+                self._pages[k] = ks
+                while len(self._pages) * KEYSTREAM_PAGE > self.cache_bytes:
+                    self._pages.popitem(last=False)
+        return ks
 
     def keystream(self, n: int, nonce: int, offset: int = 0) -> np.ndarray:
-        """Keystream bytes [offset, offset+n) of the block's stream."""
-        # splitmix64 over block counters — vectorized, invertible-free PRF
-        first = offset // 8
-        words = (offset + n + 7) // 8 - first
-        idx = np.arange(first, first + words, dtype=np.uint64)
-        x = (idx + np.uint64(nonce)) * np.uint64(0x9E3779B97F4A7C15) + self.key
-        with np.errstate(over="ignore"):
-            x ^= x >> np.uint64(30)
-            x *= np.uint64(0xBF58476D1CE4E5B9)
-            x ^= x >> np.uint64(27)
-            x *= np.uint64(0x94D049BB133111EB)
-            x ^= x >> np.uint64(31)
-        skip = offset - first * 8
-        return x.view(np.uint8)[skip:skip + n]
+        """Keystream bytes [offset, offset+n) of the (nonce-scoped) stream."""
+        if self.cache_bytes <= 0:
+            # uncached: generate exactly the covering word span
+            first = offset // 4
+            words = (offset + n + 3) // 4 - first
+            ks = self._prf_words(first, words, nonce).view(np.uint8)
+            with self._cache_lock:
+                self.stats.keystream_bytes_generated += 4 * words
+            skip = offset - first * 4
+            return ks[skip:skip + n]
+        out = np.empty(n, np.uint8)
+        pos = 0
+        while pos < n:
+            page, po = divmod(offset + pos, KEYSTREAM_PAGE)
+            take = min(n - pos, KEYSTREAM_PAGE - po)
+            out[pos:pos + take] = self._page(nonce, page)[po:po + take]
+            pos += take
+        return out
 
-    def apply(self, data: np.ndarray, nonce: int,
-              offset: int = 0) -> np.ndarray:
+    # -- data-path entry points ---------------------------------------------
+    def apply(self, data, nonce: int, offset: int = 0) -> np.ndarray:
         """XOR with the keystream at byte position `offset` of the (nonce-
         scoped) block stream, so partial-block reads decrypt with the same
-        stream positions the write used."""
-        return data ^ self.keystream(data.size, nonce, offset)
+        stream positions the write used. Accepts ndarray / bytes /
+        memoryview without an implicit copy of the input."""
+        src = _as_u8(data)
+        out = np.empty(src.size, np.uint8)
+        self.apply_into(out, src, nonce, offset)
+        return out
+
+    def apply_into(self, dst, src, nonce: int, offset: int = 0) -> int:
+        """Fused XOR-while-splice: dst[i] = src[i] ^ ks[offset+i] in one
+        pass, directly into the caller's buffer. `dst is src` (or a view of
+        the same memory) performs the in-place transform the staging legs
+        use — no temporary keystream-sized or data-sized allocation beyond
+        the cached pages. Returns the byte count."""
+        d = _as_u8(dst)
+        s = _as_u8(src)
+        n = s.size
+        if self.cache_bytes <= 0:
+            np.bitwise_xor(s, self.keystream(n, nonce, offset), out=d[:n])
+        else:
+            pos = 0
+            while pos < n:
+                page, po = divmod(offset + pos, KEYSTREAM_PAGE)
+                take = min(n - pos, KEYSTREAM_PAGE - po)
+                np.bitwise_xor(s[pos:pos + take],
+                               self._page(nonce, page)[po:po + take],
+                               out=d[pos:pos + take])
+                pos += take
+        with self._cache_lock:
+            self.stats.keystream_bytes_served += n
+            self.stats.xor_bytes += n
+        return n
 
 
 class DPURuntime:

@@ -70,10 +70,13 @@ class FailureInjector:
 
     def corrupt_block(self, device_name: str, which: int = 0) -> bool:
         """Flip a byte in one stored block (silent corruption). The e2e
-        checksum must route the read to a clean replica."""
+        checksum must route the read to a clean replica. Donated (not yet
+        written-back) blocks are flushed first so the corruption lands in
+        the device's private store, never in a live staging-ring slot."""
         d = self.store.device(device_name)
         if d is None or not d._blocks:
             return False
+        d.writeback()
         keys = sorted(d._blocks)
         key = keys[which % len(keys)]
         raw = bytearray(d._blocks[key])

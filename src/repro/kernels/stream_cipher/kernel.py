@@ -2,10 +2,11 @@
 
 TPU-side analogue of the DPU inline-encryption service (core.smartnic.
 InlineCrypto): with device-direct placement, decrypt must run where the
-bytes land. The DPU oracle uses splitmix64; TPUs have no 64-bit vector
-lanes (DESIGN.md hardware-adaptation notes), so the TPU cipher is the
-32-bit counter-mode variant of the same construction — a murmur3-finalizer
-PRF over (block counter + nonce), XORed into the data stream:
+bytes land. The DPU service and this kernel share the SAME PRF — a
+murmur3-finalizer over (u32 word counter + nonce) — so the two sides are
+bit-identical (tests/test_zero_copy_path.py proves `apply_into` against
+`cipher_ref` at arbitrary block-absolute offsets) and bytes encrypted
+inline by the DPU decrypt on-device:
 
     x   = (idx + nonce) * GOLDEN32 + key
     x  ^= x >> 16;  x *= 0x85EBCA6B

@@ -68,6 +68,7 @@ def test_corrupted_leaf_detected():
     # find the step dir leaf and corrupt blocks until restore fails
     corrupted = False
     for dev in c.devices:
+        dev.writeback()               # land donated blocks in private store
         for key in list(dev._blocks):
             raw = bytearray(dev._blocks[key])
             if len(raw) == 1024:          # the 256-float leaf payload

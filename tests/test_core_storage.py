@@ -258,6 +258,7 @@ def test_client_inline_encryption_at_rest():
     assert c.pread(fd, len(payload), 0) == payload       # transparent
     # ciphertext at rest: no device block contains the plaintext
     for dev in c.devices:
+        dev.writeback()               # land donated staging buffers first
         for blk in dev._blocks.values():
             assert b"secret-training-data" not in blk
     c.close()

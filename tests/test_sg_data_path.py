@@ -56,8 +56,26 @@ def test_sg_counters_tcp_two_copies_per_byte():
     assert s.sg_ops == 2
     assert s.copy_bytes == 2 * s.bytes_moved     # kernel staging: 2 copies
     assert s.segments == 2 * -(-BLOCK // MTU) * 2  # MTU frames per block
-    # one request message per descriptor: TCP has no SG offload
-    assert s.control_msgs == s.descriptors
+    # sendmsg iovec batching: ONE request message per bulk op (the
+    # descriptor list ships as a single msghdr), data still double-copied
+    assert s.control_msgs == s.sg_ops
+    assert s.sendmsg_batches == s.sg_ops
+    c.close()
+
+
+def test_tcp_without_sendmsg_batching_pays_per_descriptor():
+    """zero_copy=False reproduces the PR-1 control tax: one request
+    message per descriptor (no iovec coalescing)."""
+    c = ROS2Client(mode="host", transport="tcp", zero_copy=False)
+    fd = c.open("/sg", create=True)
+    data = _payload(2 * BLOCK, seed=1)
+    c.pwrite(fd, data, 0)
+    assert c.pread(fd, len(data), 0) == data
+    s = c.io.stats
+    assert s.sendmsg_batches == 0
+    assert s.control_msgs == s.descriptors == 4
+    # data-side semantics identical either way
+    assert s.copy_bytes == 2 * s.bytes_moved
     c.close()
 
 
