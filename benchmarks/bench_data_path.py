@@ -20,10 +20,19 @@ that pin each path: RDMA rendezvous == 1 per vectored op, TCP still 2
 copies/byte, zero_copy strictly fewer copies/byte than sg, and ~0 checksum
 bytes on the final (warm) read pass.
 
+Control-plane RPCs are a first-class metric (PR 3): every run reports
+`rpc_count`/`rpc_bytes`/`rpc_per_file_op` for its workload plus a measured
+canonical cycle — open(create) → 3 chunked pwrites → close — as
+`cycle_rpcs`, and a warm-cache re-open as `warm_open_rpcs`. The compound +
+lease path must do the cycle in ≤ 2 round-trips (legacy: 1 per step, ≥ 4)
+with warm opens at 0, and control bytes must stay < 1 % of data-plane
+bytes; both are hard gates, including under --smoke.
+
 Run:  PYTHONPATH=src python benchmarks/bench_data_path.py [--out PATH]
       --quick   host/rdma only (all three paths)
       --smoke   ~30 s regression gate: host/rdma, sg vs zero_copy only,
-                exits non-zero if zero_copy regresses below sg
+                exits non-zero if zero_copy regresses below sg or the
+                control path regresses above the compound baseline
 """
 from __future__ import annotations
 
@@ -113,6 +122,28 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
         c.pread(fd2, RAND_IO, int(off))
     rand_read = time.perf_counter() - t
 
+    # control-plane accounting for the workload above: round-trips and
+    # bytes per file op (seq passes + rand ops + the two opens)
+    n_file_ops = (2 + 2 * passes * (SEQ_TOTAL // SEQ_CHUNK) + 1
+                  + 2 * RAND_OPS)
+    rpc_delta = _delta(before, _flat(c.io.data_path_counters()))
+    rpc_count = rpc_delta.get("control.rpc_count", 0)
+    rpc_bytes = rpc_delta.get("control.rpc_bytes", 0)
+
+    # the canonical cycle, measured: open(create) -> 3 chunked pwrites ->
+    # close. Compound+lease: 1 (cold open) + 0 + 1 (piggybacked set_size
+    # at close) = 2. Legacy: 1 + 3 + 0 = 4.
+    n0 = c.control.rpc_count
+    fd3 = c.open("/cycle", create=True)
+    for i in range(3):
+        c.pwrite(fd3, data[:RAND_IO], i * RAND_IO)
+    c.close_fd(fd3)
+    cycle_rpcs = c.control.rpc_count - n0
+    n1 = c.control.rpc_count
+    fd4 = c.open("/cycle")               # warm-cache open: 0 round-trips
+    warm_open_rpcs = c.control.rpc_count - n1
+    c.close_fd(fd4)
+
     # steady state: mean of the last two passes of each phase (after the
     # cold-page/cold-cache passes; fio measures the same way)
     sw = sum(seq_write[-2:]) / 2
@@ -141,6 +172,14 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
                                  sc.get("engine.verify_misses", 0)),
         "warm_read_checksum_bytes": warm_delta.get("engine.checksum_bytes",
                                                    0),
+        # control path as a measured subsystem (rpc round-trips / bytes)
+        "rpc_count": rpc_count,
+        "rpc_bytes": rpc_bytes,
+        "rpc_per_file_op": rpc_count / n_file_ops,
+        "control_data_byte_ratio":
+            rpc_bytes / max(1, sc["transport.bytes_moved"]),
+        "cycle_rpcs": cycle_rpcs,
+        "warm_open_rpcs": warm_open_rpcs,
         "seq_counters": sc,
     }
     if enc:
@@ -158,7 +197,8 @@ def _print_run(r: dict) -> None:
           f"seq_r {r['seq_read_steady_s']*1e3:7.1f} ms  "
           f"rand_r {r['rand_read_iops']:7.0f} iops  "
           f"copies/B {r['copies_per_byte']:.2f}  "
-          f"csum-hit {r['checksum_hit_rate']:.2f}"
+          f"csum-hit {r['checksum_hit_rate']:.2f}  "
+          f"cyc-rpc {r['cycle_rpcs']}/{r['warm_open_rpcs']}"
           + (f"  ks-hit {r['keystream_hit_rate']:.2f}" if "keystream_hit_rate"
              in r else ""))
 
@@ -189,6 +229,20 @@ def _check_semantics(runs_by, mode: str, transport: str) -> list:
     if zc["warm_read_checksum_bytes"] > 0.01 * SEQ_TOTAL:
         fails.append(f"{mode}/{transport} warm read still checksums "
                      f"{zc['warm_read_checksum_bytes']} bytes")
+    # control-path gates: the compound+lease paths must hold the cycle at
+    # ≤ 2 round-trips (warm opens free) and control bytes < 1% of data
+    for r in (zc, sg):
+        tag = f"{r['mode']}/{r['transport']}/{r['path']}"
+        if r["cycle_rpcs"] > 2:
+            fails.append(f"{tag} open→pwrite×3→close cycle took "
+                         f"{r['cycle_rpcs']} RPCs > 2 (compound baseline)")
+        if r["warm_open_rpcs"] != 0:
+            fails.append(f"{tag} warm-cache open cost "
+                         f"{r['warm_open_rpcs']} RPCs != 0")
+        if r["control_data_byte_ratio"] >= 0.01:
+            fails.append(f"{tag} control bytes "
+                         f"{100 * r['control_data_byte_ratio']:.2f}% of "
+                         f"data-plane bytes >= 1%")
     return fails
 
 
@@ -254,6 +308,10 @@ def main(argv=None) -> int:
                               / zc["seq_pass_steady_s"], 2),
             "rand_read_iops": round(zc["rand_read_iops"]
                                     / sg["rand_read_iops"], 2)}
+        entry["cycle_rpcs"] = {p: by[(mode, transport, p)]["cycle_rpcs"]
+                               for p in paths}
+        entry["warm_open_rpcs"] = {p: by[(mode, transport, p)]
+                                   ["warm_open_rpcs"] for p in paths}
         speedups[f"{mode}/{transport}"] = entry
         fails += _check_semantics(by, mode, transport)
         sr = entry["zero_copy_vs_sg"]["seq_read"]
@@ -263,7 +321,9 @@ def main(argv=None) -> int:
             fails.append(f"SMOKE: zero_copy seq read {sr}x slower than sg")
         print(f"{mode}/{transport}: " + ", ".join(
             f"{k} seq read {v['seq_read']}x / pass {v['seq_pass']}x"
-            for k, v in entry.items()))
+            for k, v in entry.items() if k.endswith("_vs_sg")
+            or k.endswith("_vs_legacy")) + "; cycle rpcs " + "/".join(
+            f"{p}={n}" for p, n in entry["cycle_rpcs"].items()))
 
     for f in fails:
         print(f"FAIL: {f}")

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # ~30-second data-path regression gate: runs the sg vs zero_copy pair of
 # the data-path bench (host/rdma) and fails if the zero-copy path regresses
-# below the PR-1 scatter-gather path. Wired into `make bench-smoke`.
+# below the PR-1 scatter-gather path, OR if the control path regresses
+# above the compound+lease baseline (open→pwrite×3→close cycle > 2 RPCs,
+# warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane bytes).
+# Wired into `make bench-smoke`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

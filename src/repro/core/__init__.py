@@ -10,6 +10,7 @@ from repro.core.data_plane import (                         # noqa: F401
     AccessError, MemoryRegistry, RDMATransport, TCPTransport)
 from repro.core.device_direct import DeviceDirectSink       # noqa: F401
 from repro.core.dfs import DFSClient, DFSMeta               # noqa: F401
+from repro.core.metadata_cache import MetadataCache         # noqa: F401
 from repro.core.object_store import (                       # noqa: F401
     MediaScrubber, ObjectStore, VerifiedExtentCache)
 from repro.core.smartnic import DPURuntime, InlineCrypto    # noqa: F401

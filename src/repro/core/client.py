@@ -24,9 +24,17 @@ Data-path anatomy (the zero-copy path, default):
             epoch, one extent lock acquisition. Zero post-splice copies on
             the critical path; media writes back (one shared
             materialization per donation) under ring pressure or on first
-            read. One set_size control RPC per writev.
+            read. Zero control RPCs per writev: the size delegation
+            defers set_size to ONE piggybacked flush at close_fd/fsync.
     preadv: readv_into scatters descriptors straight into the per-buffer
             destinations — no contiguous intermediate bytes.
+
+Control path (PR 3): session bring-up is ONE compound RPC (connect +
+mount + grant_rkey), warm opens are served from the leased MetadataCache
+(0 round-trips), and the staging rkey's lease is renewed before expiry —
+host thread or DPU housekeeping — so long runs never hard-fault on a
+lapsed capability. `legacy=True` keeps the seed's per-step control
+traffic as the measured baseline.
 
 Inline crypto (when enabled) is applied on the staging leg — the DPU-
 adjacent bounce buffer — with per-block nonces and block-absolute
@@ -59,7 +67,9 @@ from repro.core import transport_model as tm
 from repro.core.control_plane import ControlPlane
 from repro.core.data_plane import (MemoryRegion, MemoryRegistry,
                                    RDMATransport, TCPTransport)
-from repro.core.dfs import AKEY, BLOCK, DFSClient, DFSMeta, split_blocks
+from repro.core.dfs import (AKEY, BLOCK, DFSClient, DFSError, DFSMeta,
+                            split_blocks)
+from repro.core.metadata_cache import MetadataCache
 from repro.core.media import (Device, crc32_checksum, make_nvme_array,
                               striped_stations)
 from repro.core.object_store import MediaScrubber, ObjectStore
@@ -268,22 +278,43 @@ class _ServerIO:
             self.ring.set_reclaim(self._reclaim_donations)
         if transport == "rdma":
             self.xport = RDMATransport(local=self.creg, remote=self.sreg)
-            # session-scoped capability exchange over the control plane
-            sid = control.rpc("connect", tenant=tenant,
-                              secret=control.tenants[tenant])["session_id"]
-            self._sid = sid
-            r = control.rpc("grant_rkey", session_id=sid,
-                            region_id=self.staging.region_id, perms="rw")
-            self.staging_rkey = r["rkey"]
         else:
             self.xport = TCPTransport(local=self.creg, remote=self.sreg,
                                       sendmsg_batching=self.zero_copy)
-            self.staging_rkey = None
+        # capability exchange happens in the owner's bring-up compound
+        # (ROS2Client) — attach_session hands us the session + staging rkey
+        self._sid: Optional[int] = None
+        self.staging_rkey: Optional[str] = None
+        self.cache = None               # MetadataCache (rkey lease watch)
         self._lock = threading.Lock()           # legacy path only
         # concurrency gauge: how many reads are in flight right now / ever
         self._gauge_lock = threading.Lock()
         self._active_reads = 0
         self.max_concurrent_reads = 0
+
+    def attach_session(self, session_id: int, rkey: Optional[str] = None,
+                       rkey_ttl_s: Optional[float] = None,
+                       cache=None) -> None:
+        """Adopt the control-plane session (and, over RDMA, the staging
+        rkey) the owner established — in the compound bring-up, connect +
+        mount + grant_rkey arrive in ONE round-trip and this wires the
+        results in. The cache tracks the rkey's lease so it is renewed
+        BEFORE expiry instead of hard-faulting mid-run."""
+        self._sid = session_id
+        self.cache = cache
+        if rkey is not None:
+            self.staging_rkey = rkey
+            if cache is not None and rkey_ttl_s is not None:
+                cache.put_rkey(rkey, rkey_ttl_s)
+
+    def _staging_token(self) -> str:
+        """Hot-path rkey accessor: one dict-lookup freshness check; the
+        slow path (lease inside its skew margin) renews synchronously so
+        the data plane NEVER presents an expired capability."""
+        tok = self.staging_rkey
+        if self.cache is not None and not self.cache.rkey_fresh(tok):
+            self.cache.renew_due()
+        return tok
 
     @property
     def stats(self):
@@ -320,7 +351,16 @@ class _ServerIO:
             "client": {"host_copy_bytes": self.host_copy_bytes},
             "staging": {"donations": self.ring.donations,
                         "reclaims": self.ring.reclaims},
+            # the control path is a measured subsystem, not an uncounted
+            # tax: round-trips, payload bytes, compound batching and lease
+            # traffic all show up next to the per-byte data-plane costs
+            "control": {"rpc_count": self.cp.rpc_count,
+                        "rpc_bytes": self.cp.rpc_bytes,
+                        "compound_ops": self.cp.compound_ops,
+                        "invalidations_sent": self.cp.invalidations_sent},
         }
+        if self.cache is not None:
+            out["meta_cache"] = asdict(self.cache.stats)
         if self.crypto is not None:
             out["crypto"] = asdict(self.crypto.stats)
         return out
@@ -390,7 +430,7 @@ class _ServerIO:
                             j += 1
                         p += ln
                     if self.transport_kind == "rdma":
-                        self.xport.write_sg(self.staging_rkey, self.tenant,
+                        self.xport.write_sg(self._staging_token(), self.tenant,
                                             iov)
                     else:
                         self.xport.write_sg(self.staging, iov)
@@ -513,7 +553,7 @@ class _ServerIO:
                             j += 1
                         pos += ln
                     if self.transport_kind == "rdma":
-                        self.xport.read_sg(self.staging_rkey, self.tenant,
+                        self.xport.read_sg(self._staging_token(), self.tenant,
                                            iov)
                     else:
                         self.xport.read_sg(self.staging, iov)
@@ -550,7 +590,7 @@ class _ServerIO:
                                          self.tenant)
                 try:
                     if self.transport_kind == "rdma":
-                        self.xport.write(self.staging_rkey, self.tenant, 0,
+                        self.xport.write(self._staging_token(), self.tenant, 0,
                                          src, 0, ln)
                     else:
                         self.xport.write(self.staging, 0, src, 0, ln)
@@ -573,7 +613,7 @@ class _ServerIO:
                         self.staging.buf[:ln], nonce=oid * (1 << 20) + b,
                         offset=bo)
                 if self.transport_kind == "rdma":
-                    self.xport.read(self.staging_rkey, self.tenant, 0,
+                    self.xport.read(self._staging_token(), self.tenant, 0,
                                     dst_mr, dst_off + pos, ln)
                 else:
                     self.xport.read(self.staging, 0, dst_mr,
@@ -592,7 +632,7 @@ class _ServerIO:
                 dst = self.creg.register(ln, self.tenant)
                 try:
                     if self.transport_kind == "rdma":
-                        self.xport.read(self.staging_rkey, self.tenant, 0,
+                        self.xport.read(self._staging_token(), self.tenant, 0,
                                         dst, 0, ln)
                     else:
                         self.xport.read(self.staging, 0, dst, 0, ln)
@@ -615,7 +655,11 @@ class ROS2Client:
                  replication: int = 2, n_dpu_cores: int = 16,
                  n_staging_slots: int = 16, legacy: bool = False,
                  zero_copy: bool = True,
-                 scrub_interval_s: Optional[float] = 1.0):
+                 scrub_interval_s: Optional[float] = 1.0,
+                 rkey_ttl_s: float = 3600.0,
+                 meta_lease_s: float = 30.0,
+                 lease_skew: float = 0.25,
+                 renew_interval_s: Optional[float] = None):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
         self.mode, self.transport = mode, transport
         zero_copy = zero_copy and not legacy
@@ -636,16 +680,13 @@ class ROS2Client:
         self.scrubber = MediaScrubber(self.store)
         self.server_registry = MemoryRegistry("server")
         self.control = ControlPlane(self.store, self.server_registry,
-                                    tenants={tenant: secret})
+                                    tenants={tenant: secret},
+                                    meta_lease_s=meta_lease_s)
         self.meta = DFSMeta(self.store)
         self.control.bind_dfs(self.meta)
         # ---- client side (host or DPU) ----
         self.client_registry = MemoryRegistry("dpu" if mode == "dpu"
                                               else "host")
-        r = self.control.rpc("connect", tenant=tenant, secret=secret)
-        if not r["ok"]:
-            raise PermissionError(r["error"])
-        self.session_id = r["session_id"]
         crypto = None
         if inline_encryption:
             # zero_copy=False disables the keystream cache too (PR-1 cost)
@@ -656,19 +697,70 @@ class ROS2Client:
                             self.control, crypto,
                             n_staging_slots=n_staging_slots, legacy=legacy,
                             zero_copy=zero_copy)
-        self.dfs = DFSClient(self.control, self.io, self.session_id)
-        self.dfs.mount()
+        # ---- session bring-up ----
+        rkey, rkey_ttl = None, None
+        if legacy:
+            # the seed's one-RPC-per-step bring-up (the ≥4-round-trip
+            # baseline the compound path is measured against)
+            r = self.control.rpc("connect", tenant=tenant, secret=secret)
+            if not r["ok"]:
+                raise PermissionError(r["error"])
+            self.session_id = r["session_id"]
+            self.control.rpc("mount", session_id=self.session_id,
+                             pool="pool0", container="cont0")
+            if transport == "rdma":
+                g = self.control.rpc("grant_rkey",
+                                     session_id=self.session_id,
+                                     region_id=self.io.staging.region_id,
+                                     perms="rw", ttl_s=rkey_ttl_s)
+                rkey = g["rkey"]
+            self.cache = None
+        else:
+            # connect + mount + grant_rkey in ONE compound round-trip
+            ops = [{"method": "connect",
+                    "args": {"tenant": tenant, "secret": secret}},
+                   {"method": "mount",
+                    "args": {"pool": "pool0", "container": "cont0"}}]
+            if transport == "rdma":
+                ops.append({"method": "grant_rkey",
+                            "args": {"region_id": self.io.staging.region_id,
+                                     "perms": "rw", "ttl_s": rkey_ttl_s}})
+            r = self.control.rpc("compound", ops=ops)
+            if r["completed"] < len(ops):
+                raise PermissionError(r["results"][-1]["error"])
+            self.session_id = r["session_id"]
+            self.cache = MetadataCache(self.control, self.session_id,
+                                       skew_margin=lease_skew)
+            if transport == "rdma":
+                rkey, rkey_ttl = r["results"][2]["rkey"], rkey_ttl_s
+        self.io.attach_session(self.session_id, rkey, rkey_ttl, self.cache)
+        self.dfs = DFSClient(self.control, self.io, self.session_id,
+                             cache=self.cache)
         self.tenant = tenant
+        # lease renewal runs where the client runs: DPU housekeeping on an
+        # Arm core in dpu mode, a plain thread on the host
+        renew_s = renew_interval_s if renew_interval_s is not None \
+            else min(1.0, max(0.02, rkey_ttl_s / 10))
         self.dpu: Optional[DPURuntime] = None
         if mode == "dpu":
             self.dpu = DPURuntime(n_cores=n_dpu_cores)
             self.dpu.register("read", self.dfs.pread)
             self.dpu.register("write", self.dfs.pwrite)
             self.dpu.register("open", self.dfs.open)
+            self.dpu.register("close_fd", self.dfs.close)
+            self.dpu.register("stat", self.dfs.stat)
+            self.dpu.register("unlink", self.dfs.unlink)
+            self.dpu.register("truncate", self.dfs.truncate)
+            self.dpu.register("fsync", self.dfs.fsync)
             self.dpu.register("read_into", self.dfs.pread_into)
             self.dpu.register("readv", self.dfs.preadv)
             self.dpu.register("writev", self.dfs.pwritev)
             self.dpu.start()
+            if self.cache is not None:
+                self.dpu.start_housekeeping("lease-renew",
+                                            self.cache.renew_due, renew_s)
+        elif self.cache is not None:
+            self.cache.start_renewal(renew_s)
         if zero_copy and scrub_interval_s is not None:
             # the verified cache is only honest while the scrubber bounds
             # the silent-corruption window — run it whenever the cache runs.
@@ -745,7 +837,43 @@ class ROS2Client:
     def mkdir(self, path: str) -> None:
         self.dfs.mkdir(path)
 
+    def close_fd(self, fd: int) -> None:
+        """POSIX close: drops the handle and flushes the file's delegated
+        size (ONE piggybacked set_size, the cycle's second round-trip)."""
+        if self.dpu:
+            self._dpu_call("close_fd", fd=fd)
+        else:
+            self.dfs.close(fd)
+
+    def stat(self, path: str) -> Dict[str, Any]:
+        if self.dpu:
+            return self._dpu_call("stat", path=path)
+        return self.dfs.stat(path)
+
+    def unlink(self, path: str) -> None:
+        if self.dpu:
+            self._dpu_call("unlink", path=path)
+        else:
+            self.dfs.unlink(path)
+
+    def truncate(self, path: str, size: int) -> Dict[str, Any]:
+        if self.dpu:
+            return self._dpu_call("truncate", path=path, size=size)
+        return self.dfs.truncate(path, size)
+
+    def fsync(self, fd: int) -> None:
+        if self.dpu:
+            self._dpu_call("fsync", fd=fd)
+        else:
+            self.dfs.fsync(fd)
+
     def close(self) -> None:
+        try:                         # delegated sizes must land before exit
+            self.dfs.flush_meta()
+        except DFSError:
+            pass                     # e.g. every pending path was unlinked
+        if self.cache is not None:
+            self.cache.stop_renewal()
         self.scrubber.stop()
         if self.dpu:
             self.dpu.stop()

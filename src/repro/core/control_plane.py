@@ -4,6 +4,18 @@ Small, latency-insensitive messages only: session setup, authentication,
 mount/open/close, directory ops, capability (rkey) exchange, QoS tokens.
 Bulk data NEVER flows here — tests assert control traffic stays tiny
 relative to the data plane (the paper's design point).
+
+Round-trip economy (PR 3): the control plane speaks NFSv4-style COMPOUND —
+`rpc("compound", ops=[...])` executes an ordered op list in ONE round-trip,
+stopping at the first failure and returning per-op results. A `connect` op
+inside a compound establishes the implicit session for the ops after it
+(EXCHANGE_ID-style), so a client brings a session up — connect + mount +
+grant_rkey — in a single RPC. Namespace reads (`lookup`/`stat`/`create`)
+carry a metadata lease TTL the client-side MetadataCache may serve from;
+the server pushes invalidations to OTHER sessions' caches on `create`/
+`unlink`/`set_size`/`truncate` so delegated entries never go stale, and
+`renew_rkey` extends a capability's expiry in place (the data plane keeps
+validating expiry on every access — renewal is what makes long runs safe).
 """
 from __future__ import annotations
 
@@ -11,10 +23,12 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.data_plane import AccessError, MemoryRegistry
 from repro.core.object_store import ObjectStore
+
+META_LEASE_S = 30.0          # default namespace-entry delegation TTL
 
 
 @dataclass
@@ -30,15 +44,25 @@ class ControlPlane:
     to mimic a gRPC channel; every call is counted."""
 
     def __init__(self, store: ObjectStore, registry: MemoryRegistry,
-                 tenants: Optional[Dict[str, str]] = None):
+                 tenants: Optional[Dict[str, str]] = None,
+                 meta_lease_s: float = META_LEASE_S):
         self.store = store
         self.registry = registry
         self.tenants = tenants or {"default": "secret"}
+        self.meta_lease_s = float(meta_lease_s)
         self._sessions: Dict[int, Session] = {}
         self._ids = itertools.count(1)
+        # `_lock` guards the RPC counters only; the session table has its
+        # own lock so handlers (dispatched while no lock is held) can touch
+        # it without deadlocking against the counter path.
         self._lock = threading.Lock()
+        self._sessions_lock = threading.Lock()
+        # session_id -> cache-invalidation push channel (MetadataCache hook)
+        self._subs: Dict[int, Callable[[str], None]] = {}
         self.rpc_count = 0
         self.rpc_bytes = 0
+        self.compound_ops = 0           # ops carried inside compound RPCs
+        self.invalidations_sent = 0     # server->client lease recalls
 
     # -- transport shim ------------------------------------------------------
     def rpc(self, method: str, **payload) -> Dict[str, Any]:
@@ -56,22 +80,93 @@ class ControlPlane:
             return {"ok": False, "error": f"{type(e).__name__}: {e}"}
 
     def _session(self, session_id: int) -> Session:
-        s = self._sessions.get(session_id)
+        with self._sessions_lock:
+            s = self._sessions.get(session_id)
         if s is None:
             raise AccessError("invalid session")
         return s
+
+    # -- compound (NFSv4-style, ONE round-trip for an ordered op list) -------
+    def rpc_compound(self, ops: Sequence[Dict[str, Any]],
+                     session_id: Optional[int] = None) -> Dict[str, Any]:
+        """Execute `ops` — [{"method": m, "args": {...}}, ...] — in order,
+        in this single round-trip. Short-circuit semantics: execution stops
+        at the first failing op; `results` holds one entry per ATTEMPTED op
+        (the last one carrying the error). A successful `connect` op sets
+        the implicit session for the ops after it; ops whose args omit
+        `session_id` inherit the compound's current session."""
+        results: List[Dict[str, Any]] = []
+        sid = session_id
+        with self._lock:
+            self.compound_ops += len(ops)
+        for op in ops:
+            method = op.get("method")
+            args = dict(op.get("args") or {})
+            if method == "compound":              # no recursion
+                res = {"ok": False, "error": "nested compound"}
+            else:
+                fn = getattr(self, f"rpc_{method}", None)
+                if fn is None:
+                    res = {"ok": False, "error": f"no method {method}"}
+                elif (method != "connect" and "session_id" not in args
+                        and sid is None):
+                    # every op but connect runs under a session; a compound
+                    # that never established one fails the op cleanly
+                    # instead of TypeError-ing inside the handler
+                    res = {"ok": False,
+                           "error": f"missing session_id for {method}"}
+                else:
+                    if sid is not None and method != "connect":
+                        args.setdefault("session_id", sid)
+                    try:
+                        out = fn(**args)
+                        res = {"ok": True, **(out or {})}
+                    except (AccessError, KeyError, ValueError) as e:
+                        res = {"ok": False,
+                               "error": f"{type(e).__name__}: {e}"}
+            results.append(res)
+            if not res["ok"]:
+                break
+            if method == "connect":
+                sid = res["session_id"]
+        return {"results": results,
+                "completed": sum(r["ok"] for r in results),
+                "session_id": sid}
 
     # -- session / auth --------------------------------------------------
     def rpc_connect(self, tenant: str, secret: str):
         if self.tenants.get(tenant) != secret:
             raise AccessError("authentication failed")
         s = Session(next(self._ids), tenant)
-        self._sessions[s.session_id] = s
-        return {"session_id": s.session_id}
+        with self._sessions_lock:
+            self._sessions[s.session_id] = s
+        return {"session_id": s.session_id,
+                "meta_lease_s": self.meta_lease_s}
 
     def rpc_disconnect(self, session_id: int):
-        self._sessions.pop(session_id, None)
+        with self._sessions_lock:
+            self._sessions.pop(session_id, None)
+            self._subs.pop(session_id, None)
         return {}
+
+    # -- lease push channel (MetadataCache registration; not an RPC) ---------
+    def subscribe(self, session_id: int,
+                  callback: Callable[[str], None]) -> None:
+        """Register the session's client-side cache for server-driven
+        invalidation pushes (the lease-recall channel a real server keeps
+        per client). Dropped automatically on disconnect."""
+        with self._sessions_lock:
+            self._subs[session_id] = callback
+
+    def _notify(self, path: str, origin_session: Optional[int]) -> None:
+        """Recall `path` leases from every OTHER session's cache."""
+        with self._sessions_lock:
+            subs = [(sid, cb) for sid, cb in self._subs.items()
+                    if sid != origin_session]
+        for _sid, cb in subs:
+            with self._lock:
+                self.invalidations_sent += 1
+            cb(path)
 
     # -- capability exchange ----------------------------------------------
     def rpc_grant_rkey(self, session_id: int, region_id: int,
@@ -84,6 +179,21 @@ class ControlPlane:
             raise AccessError("cannot grant rkey across protection domains")
         rk = self.registry.grant(mr, perms, ttl_s)
         return {"rkey": rk.token, "expires_in": ttl_s}
+
+    def rpc_renew_rkey(self, session_id: int, rkey: str,
+                       ttl_s: float = 3600.0):
+        """Extend a live capability's lease IN PLACE (same token, so NIC
+        translation caches holding the key stay valid). Renewal is the
+        client's job to do before expiry; the data plane still hard-fails
+        an expired or revoked key on every access."""
+        s = self._session(session_id)
+        rk = self.registry._rkeys.get(rkey)
+        if rk is None:
+            raise KeyError("unknown rkey")
+        if rk.tenant != s.tenant:      # check BEFORE mutating the lease
+            raise AccessError("cannot renew rkey across protection domains")
+        self.registry.renew(rkey, ttl_s)
+        return {"rkey": rkey, "expires_in": ttl_s}
 
     def rpc_revoke_rkey(self, session_id: int, rkey: str):
         self._session(session_id)
@@ -100,15 +210,25 @@ class ControlPlane:
 
     def rpc_lookup(self, session_id: int, path: str):
         self._session(session_id)
-        return self._dfs.lookup(path)
+        out = self._dfs.lookup(path)
+        out["lease_ttl_s"] = self.meta_lease_s
+        return out
 
     def rpc_create(self, session_id: int, path: str, is_dir: bool = False):
         self._session(session_id)
-        return self._dfs.create(path, is_dir)
+        out = self._dfs.create(path, is_dir)
+        out["lease_ttl_s"] = self.meta_lease_s
+        # recall other sessions' leases only when something actually
+        # changed — create-of-existing is a no-op and their leases are fine
+        if out.pop("created", False):
+            self._notify(out["path"], session_id)
+        return out
 
     def rpc_unlink(self, session_id: int, path: str):
         self._session(session_id)
-        return self._dfs.unlink(path)
+        out = self._dfs.unlink(path)
+        self._notify(self._dfs._norm(path), session_id)
+        return out
 
     def rpc_readdir(self, session_id: int, path: str):
         self._session(session_id)
@@ -116,8 +236,18 @@ class ControlPlane:
 
     def rpc_stat(self, session_id: int, path: str):
         self._session(session_id)
-        return self._dfs.stat(path)
+        out = self._dfs.stat(path)
+        out["lease_ttl_s"] = self.meta_lease_s
+        return out
 
     def rpc_set_size(self, session_id: int, path: str, size: int):
         self._session(session_id)
-        return self._dfs.set_size(path, size)
+        out = self._dfs.set_size(path, size)
+        self._notify(self._dfs._norm(path), session_id)
+        return out
+
+    def rpc_truncate(self, session_id: int, path: str, size: int):
+        self._session(session_id)
+        out = self._dfs.truncate(path, size)
+        self._notify(self._dfs._norm(path), session_id)
+        return out

@@ -94,6 +94,20 @@ class MemoryRegistry:
         self._rkeys[rk.token] = rk
         return rk
 
+    def renew(self, token: str, ttl_s: float = 3600.0) -> RKey:
+        """Lease renewal: extend a live key's expiry IN PLACE. The token —
+        and any NIC translation-cache entry holding the same RKey object —
+        stays valid, which is what lets a client renew ahead of expiry
+        without invalidating its cached resolutions. Revoked keys are not
+        resurrectable: revocation is a security decision, renewal is not."""
+        rk = self._rkeys.get(token)
+        if rk is None:
+            raise KeyError("unknown rkey")
+        if rk.revoked:
+            raise AccessError("rkey revoked")
+        rk.expires_at = time.monotonic() + ttl_s
+        return rk
+
     def revoke(self, token: str) -> None:
         rk = self._rkeys.get(token)
         if rk:

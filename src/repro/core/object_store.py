@@ -296,6 +296,86 @@ class DAOSObject:
             return data
         raise StorageError(f"extent unreadable from all replicas: {last_err}")
 
+    # -- punch (truncate / unlink reclaim) -----------------------------------
+    def _free_extent(self, ext: Extent) -> int:
+        """Release an extent's replica blocks back to media (verified-cache
+        entries dropped first: a stale entry must never vouch for a freed
+        block key if it were ever reused). Returns logical bytes freed."""
+        for name, key in ext.block_keys.items():
+            self.container.vcache.invalidate_block(name, key)
+            dev = self.container.store.device(name)
+            if dev is not None:
+                dev.delete(key)
+        return ext.size
+
+    def punch(self, dkey: str, akey: str) -> int:
+        """Drop EVERY extent version under (dkey, akey) and free the device
+        blocks immediately — truncate/unlink reclaim, not aggregation, so
+        no grace window: a concurrent snapshot reader racing the punch
+        retries onto the post-punch state (holes read as zeros), which is
+        the documented semantics of racing a truncate."""
+        with self._lock:
+            exts = self._extents.pop((dkey, akey), [])
+        return sum(self._free_extent(e) for e in exts)
+
+    def punch_range(self, dkey: str, akey: str, keep_upto: int) -> int:
+        """Trim (dkey, akey) to [0, keep_upto): extents fully beyond are
+        freed; an extent straddling the boundary is rewritten to its kept
+        prefix (fresh replica blocks + checksum) so a later re-grow reads
+        zeros, not resurrected bytes. Returns logical bytes freed."""
+        with self._lock:
+            lst = self._extents.get((dkey, akey))
+            snapshot = list(lst) if lst else []
+        dead = [e for e in snapshot if e.offset >= keep_upto]
+        straddle = [e for e in snapshot
+                    if e.offset < keep_upto < e.offset + e.size]
+        if not dead and not straddle:
+            return 0
+        cont = self.container
+        replacements: List[Extent] = []
+        for ext in straddle:
+            keep = keep_upto - ext.offset
+            data = memoryview(self._read_extent(ext, verify=True,
+                                                cache=False))[:keep]
+            payload = bytes(data)
+            keys: Dict[str, int] = {}
+            for name in ext.block_keys:
+                dev = cont.store.device(name)
+                if dev is None or not dev.alive:
+                    continue
+                key = cont.store.new_block_key()
+                dev.write(key, payload)
+                keys[name] = key
+            replacements.append(Extent(ext.offset, keep, ext.epoch,
+                                       cont.store.csum(payload), keys))
+        gone = set(map(id, dead)) | set(map(id, straddle))
+        with self._lock:
+            lst = self._extents.get((dkey, akey), [])
+            kept = [e for e in lst if id(e) not in gone]
+            for r in replacements:
+                insort(kept, r, key=lambda e: e.epoch)
+            if kept:
+                self._extents[(dkey, akey)] = kept
+            else:
+                self._extents.pop((dkey, akey), None)
+        freed = sum(self._free_extent(e) for e in dead)
+        for ext in straddle:
+            freed += self._free_extent(ext) - (keep_upto - ext.offset)
+        return freed
+
+    def dkeys(self, akey: str) -> List[str]:
+        """Distribution keys that currently hold extents under `akey`
+        (truncate punches by what EXISTS, not by what metadata says)."""
+        with self._lock:
+            return [dk for (dk, ak) in self._extents if ak == akey]
+
+    def punch_all(self) -> int:
+        """Free every extent of the object (unlink reclaim)."""
+        with self._lock:
+            all_lists = list(self._extents.values())
+            self._extents.clear()
+        return sum(self._free_extent(e) for lst in all_lists for e in lst)
+
     def rebuild(self, failed: str) -> int:
         """Re-replicate extents that lived on a failed device."""
         cont = self.container
@@ -347,6 +427,7 @@ class Container:
         self.vcache = VerifiedExtentCache(self.store.stats,
                                          enabled=verified_cache)
         self._objects: Dict[int, DAOSObject] = {}
+        self._destroyed: set = set()      # oids gone for good (never reused)
         self._epoch = itertools.count(1)
         self._epoch_now = 0
         self._lock = threading.Lock()
@@ -384,9 +465,25 @@ class Container:
 
     def object(self, oid: int) -> DAOSObject:
         with self._lock:
+            if oid in self._destroyed:
+                # lazily re-creating a destroyed object would resurrect an
+                # unreferenced orphan whose extents leak forever (writes on
+                # an fd that outlived its unlink land here — ESTALE)
+                raise StorageError(f"object {oid} destroyed")
             if oid not in self._objects:
                 self._objects[oid] = DAOSObject(oid, self)
             return self._objects[oid]
+
+    def destroy_object(self, oid: int) -> int:
+        """Unlink reclaim: drop the object and free all its device blocks
+        (capacity returns to the array immediately — the bug this fixes is
+        extents living forever after the namespace entry is gone). The oid
+        is tombstoned so late writers cannot resurrect an orphan. Returns
+        logical bytes freed; 0 for an object that was never written."""
+        with self._lock:
+            obj = self._objects.pop(oid, None)
+            self._destroyed.add(oid)
+        return obj.punch_all() if obj is not None else 0
 
     def placement(self, oid: int, dkey: str) -> List[Device]:
         """Consistent-hash-style placement over targets."""

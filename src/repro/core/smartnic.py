@@ -217,9 +217,31 @@ class DPURuntime:
         self._lock = threading.Lock()
         self._claimed: Dict[int, CQE] = {}
         self._claim_lock = threading.Lock()
+        self._services: List[tuple] = []     # (thread, stop_event) pairs
+        self.housekeeping_runs = 0
 
     def register(self, op: str, fn: Callable[..., Any]) -> None:
         self._handlers[op] = fn
+
+    def start_housekeeping(self, name: str, fn: Callable[[], Any],
+                           interval_s: float = 1.0) -> None:
+        """Run `fn` periodically on a dedicated Arm-core service thread —
+        the DPU-resident background work the paper's offload model keeps
+        near the NIC (lease renewal, scrub pacing). Stopped by stop()."""
+        stop = threading.Event()
+
+        def loop():
+            while not stop.wait(interval_s):
+                try:
+                    fn()
+                except Exception:    # noqa: housekeeping must never die loud
+                    pass
+                with self._lock:
+                    self.housekeeping_runs += 1
+
+        t = threading.Thread(target=loop, name=f"dpu-{name}", daemon=True)
+        t.start()
+        self._services.append((t, stop))
 
     def start(self) -> None:
         if self._started:
@@ -306,6 +328,11 @@ class DPURuntime:
         return {c.tag: c for c in (self.poll(timeout) for _ in range(n))}
 
     def stop(self) -> None:
+        for _t, ev in self._services:
+            ev.set()
+        for t, _ev in self._services:
+            t.join(timeout=5)
+        self._services.clear()
         for _ in self._workers:
             self.sq.put(None)
         for t in self._workers:

@@ -293,11 +293,15 @@ def test_pwritev_preadv_roundtrip_one_set_size_rpc(mode):
     before = c.control.rpc_count
     n = c.pwritev(fd, bufs, 0)
     assert n == sum(len(b) for b in bufs)
-    # one set_size for the whole writev, no other control traffic
-    assert c.control.rpc_count == before + 1
+    # the size delegation (PR 3) holds the update locally: the writev
+    # itself is RPC-free, and ONE piggybacked set_size lands at close
+    assert c.control.rpc_count == before
     got = c.preadv(fd, [len(b) for b in bufs], 0)
     assert got == bufs
-    assert c.dfs.stat("/v")["size"] == n
+    assert c.dfs.stat("/v")["size"] == n        # local delegation overlay
+    c.close_fd(fd)
+    assert c.control.rpc_count == before + 1    # the piggybacked flush
+    assert c.dfs.stat("/v")["size"] == n        # durable on the server
     c.close()
 
 
