@@ -20,6 +20,14 @@ that pin each path: RDMA rendezvous == 1 per vectored op, TCP still 2
 copies/byte, zero_copy strictly fewer copies/byte than sg, and ~0 checksum
 bytes on the final (warm) read pass.
 
+PR-4 one-copy gates (enforced in every mode, --smoke included): the
+zero_copy RDMA read phase must show read copies/byte <= 1.0 with ZERO
+staging-ring acquires (direct splice — the engine->ring bounce, now
+counted in `staging.bounce_bytes`, must not exist), quorum-ack write p50
+must beat full-fan-out p50 with a straggler replica (with
+quorum_acks/background_commits reported), and batched `read_tensors`
+device-direct placement must meet or beat the per-tensor baseline.
+
 Control-plane RPCs are a first-class metric (PR 3): every run reports
 `rpc_count`/`rpc_bytes`/`rpc_per_file_op` for its workload plus a measured
 canonical cycle — open(create) → 3 chunked pwrites → close — as
@@ -99,6 +107,7 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
         seq_write.append(time.perf_counter() - t)
     seq_read = []
     warm_delta = {}
+    read_before = _flat(c.io.data_path_counters())
     for i in range(passes):
         if i == passes - 1:              # instrument the warmest pass
             warm_before = _flat(c.io.data_path_counters())
@@ -107,6 +116,7 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
             c.pread_into(fd, SEQ_CHUNK, off, sink, off)
         seq_read.append(time.perf_counter() - t)
     warm_delta = _delta(warm_before, _flat(c.io.data_path_counters()))
+    read_delta = _delta(read_before, _flat(c.io.data_path_counters()))
     assert bytes(sink.buf) == data, "seq roundtrip mismatch"
     seq_counters = _delta(before, _flat(c.io.data_path_counters()))
 
@@ -163,10 +173,22 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
         "rand_write_iops": RAND_OPS / rand_write,
         "rand_read_iops": RAND_OPS / rand_read,
         # first-class copy accounting: wire splices + every host-side
-        # materialization (client tobytes + per-replica media copies)
+        # materialization (client tobytes + per-replica media copies +
+        # the engine->ring staging bounce on staged reads — PR 4 makes
+        # the bounce visible AND removes it from the direct-splice path)
         "copies_per_byte":
             (sc["transport.copy_bytes"] + sc["client.host_copy_bytes"]
-             + sc["media.host_copy_bytes"]) / moved,
+             + sc["media.host_copy_bytes"]
+             + sc["staging.bounce_bytes"]) / moved,
+        # the read phase alone: the PR-4 one-copy claim is gated on this
+        "read_copies_per_byte":
+            (read_delta["transport.copy_bytes"]
+             + read_delta["client.host_copy_bytes"]
+             + read_delta["media.host_copy_bytes"]
+             + read_delta["staging.bounce_bytes"])
+            / max(1, read_delta["transport.bytes_moved"]),
+        "read_staging_acquires": read_delta["staging.acquires"],
+        "read_placements": read_delta["transport.placements"],
         "checksum_hit_rate": csum_skip / max(1, csum_skip + csum_done),
         "verify_hit_rate": _rate(sc.get("engine.verify_hits", 0),
                                  sc.get("engine.verify_misses", 0)),
@@ -191,6 +213,74 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
     return out
 
 
+def _bench_quorum(n_ops: int = 40, straggler_delay_s: float = 0.002) -> dict:
+    """Quorum-ack vs full-fan-out write latency with one slow replica:
+    p50 of a 1 MiB pwrite must track the fastest majority (quorum) instead
+    of the straggler (full fan-out). Ops are issued one at a time with the
+    background straggler drained between them, so each sample is a clean
+    per-op latency."""
+    import numpy as np
+
+    def run(write_quorum):
+        c = ROS2Client(mode="host", transport="rdma", n_devices=3,
+                       replication=3, write_quorum=write_quorum,
+                       scrub_interval_s=None)
+        c.devices[0].commit_delay_s = straggler_delay_s
+        fd = c.open("/q", create=True)
+        data = bytes(1 * MiB)
+        lats = []
+        for i in range(n_ops):
+            bg0 = c.store.stats.background_commits
+            t = time.perf_counter()
+            c.pwrite(fd, data, i * MiB)
+            lats.append(time.perf_counter() - t)
+            if write_quorum is None:      # drain the straggler between ops
+                deadline = time.monotonic() + 5.0
+                while (c.store.stats.background_commits == bg0
+                       and time.monotonic() < deadline):
+                    time.sleep(0.0005)
+        st = c.store.stats
+        out = {"p50_s": float(np.median(lats)),
+               "quorum_acks": st.quorum_acks,
+               "background_commits": st.background_commits,
+               "replica_demotions": st.replica_demotions}
+        c.devices[0].commit_delay_s = 0.0
+        c.close()
+        return out
+
+    quorum, full = run(None), run(3)
+    return {"straggler_delay_s": straggler_delay_s, "io_bytes": MiB,
+            "quorum": quorum, "full_fanout": full,
+            "p50_speedup": full["p50_s"] / max(quorum["p50_s"], 1e-9)}
+
+
+def _bench_device_direct(n_tensors: int = 96,
+                         tensor_bytes: int = 16 * 1024,
+                         trials: int = 3) -> dict:
+    """Batched `read_tensors` vs the per-tensor `read_tensor` baseline
+    (the shared benchmarks/common.device_direct_compare protocol,
+    min-of-N trials): packing ~32 token-batch-sized tensors into each
+    ring slot — one splice batch, ONE device_put, one carve per slot —
+    must beat one placement + device_put per tensor. The gated config is
+    dpu/rdma, the paper's design point, where batching also collapses 96
+    doorbell round-trips into one per slot; host/rdma is reported
+    alongside."""
+    try:
+        from benchmarks.common import device_direct_compare
+    except ImportError:                  # run as a bare script
+        from common import device_direct_compare
+
+    def run(mode):
+        c = ROS2Client(mode=mode, transport="rdma", scrub_interval_s=None)
+        out = device_direct_compare(c, n_tensors, tensor_bytes,
+                                    slot_bytes=512 * 1024, trials=trials)
+        c.close()
+        return out
+
+    return {"n_tensors": n_tensors, "tensor_bytes": tensor_bytes,
+            "host": run("host"), "dpu": run("dpu")}
+
+
 def _print_run(r: dict) -> None:
     print(f"{r['mode']:4s}/{r['transport']:4s} {r['path']:13s} "
           f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
@@ -212,8 +302,21 @@ def _check_semantics(runs_by, mode: str, transport: str) -> list:
     if transport == "rdma":
         if sc["transport.rendezvous"] != sc["transport.sg_ops"]:
             fails.append(f"{mode}/rdma rendezvous != sg_ops")
-        if sc["transport.rkey_resolves"] > 1:
-            fails.append(f"{mode}/rdma rkey_resolves > 1")
+        # one translation per REGION ever: staging rkey (writes) + the
+        # sink's destination rkey (direct-splice reads)
+        if sc["transport.rkey_resolves"] > 2:
+            fails.append(f"{mode}/rdma rkey_resolves > 2")
+        # the PR-4 tentpole gates: steady-state reads are ONE copy per
+        # byte end-to-end with ZERO staging-ring acquires
+        if zc["read_copies_per_byte"] > 1.0 + 1e-9:
+            fails.append(f"{mode}/rdma zero_copy read copies/byte "
+                         f"{zc['read_copies_per_byte']:.3f} > 1.0")
+        if zc["read_staging_acquires"] != 0:
+            fails.append(f"{mode}/rdma zero_copy read phase acquired "
+                         f"{zc['read_staging_acquires']} staging slots")
+        if zc["read_placements"] == 0:
+            fails.append(f"{mode}/rdma zero_copy read phase performed no "
+                         f"direct placements")
     else:
         tcp_copies = sc["transport.copy_bytes"] / \
             max(1, sc["transport.bytes_moved"])
@@ -280,6 +383,21 @@ def main(argv=None) -> int:
             runs.append(r)
             _print_run(r)
 
+    # PR-4 micro-benches (also gated under --smoke): quorum-ack write
+    # latency vs full fan-out, and batched vs per-tensor device-direct
+    quorum = _bench_quorum()
+    print(f"quorum write p50 {quorum['quorum']['p50_s']*1e3:.2f} ms vs "
+          f"full fan-out {quorum['full_fanout']['p50_s']*1e3:.2f} ms "
+          f"({quorum['p50_speedup']:.1f}x, "
+          f"{quorum['quorum']['quorum_acks']} acks / "
+          f"{quorum['quorum']['background_commits']} bg commits)")
+    device_direct = _bench_device_direct()
+    for m in ("host", "dpu"):
+        dd = device_direct[m]
+        print(f"device-direct {m}/rdma: {dd['single_tensors_per_s']:.0f} "
+              f"tensors/s single vs {dd['batched_tensors_per_s']:.0f} "
+              f"batched ({dd['batched_speedup']:.2f}x)")
+
     by = {(r["mode"], r["transport"], r["path"]): r for r in runs}
     speedups = {}
     fails = []
@@ -325,12 +443,28 @@ def main(argv=None) -> int:
             or k.endswith("_vs_legacy")) + "; cycle rpcs " + "/".join(
             f"{p}={n}" for p, n in entry["cycle_rpcs"].items()))
 
+    # PR-4 gates: quorum p50 strictly under full fan-out p50; batched
+    # device-direct at or above the per-tensor baseline
+    if quorum["quorum"]["p50_s"] >= quorum["full_fanout"]["p50_s"]:
+        fails.append(
+            f"quorum write p50 {quorum['quorum']['p50_s']*1e3:.2f} ms not "
+            f"< full fan-out {quorum['full_fanout']['p50_s']*1e3:.2f} ms")
+    if quorum["quorum"]["quorum_acks"] == 0:
+        fails.append("quorum run recorded no quorum acks")
+    dd = device_direct["dpu"]            # the offloaded-client design point
+    if dd["batched_tensors_per_s"] < dd["single_tensors_per_s"]:
+        fails.append(f"device-direct dpu batched "
+                     f"{dd['batched_tensors_per_s']:.0f} tensors/s below "
+                     f"per-tensor baseline "
+                     f"{dd['single_tensors_per_s']:.0f}")
+
     for f in fails:
         print(f"FAIL: {f}")
     payload = {"bench": "data_path", "seq_total_bytes": SEQ_TOTAL,
                "seq_chunk_bytes": SEQ_CHUNK, "seq_passes": passes,
                "rand_io_bytes": RAND_IO, "rand_ops": RAND_OPS,
                "block_bytes": BLOCK, "runs": runs, "speedups": speedups,
+               "quorum": quorum, "device_direct": device_direct,
                "failures": fails}
     Path(args.out).write_text(json.dumps(payload, indent=1))
     print(f"wrote {args.out}")

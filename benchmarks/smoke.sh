@@ -3,7 +3,11 @@
 # the data-path bench (host/rdma) and fails if the zero-copy path regresses
 # below the PR-1 scatter-gather path, OR if the control path regresses
 # above the compound+lease baseline (open→pwrite×3→close cycle > 2 RPCs,
-# warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane bytes).
+# warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane bytes), OR if
+# a PR-4 one-copy gate trips: read phase must show copies/byte <= 1.0 with
+# ZERO staging-ring acquires (direct splice), quorum-ack write p50 must
+# beat full-fan-out p50 under a straggler replica, and batched
+# device-direct read_tensors must meet the per-tensor baseline (dpu/rdma).
 # Wired into `make bench-smoke`.
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -12,22 +12,32 @@ transport:   "rdma" (zero-copy, rkey-checked) or "tcp" (two-copy, segmented).
 
 Data-path anatomy (the zero-copy path, default):
 
-    pread:  object store --fetch_into--> staging-ring slots (per-slot
-            locks, N concurrent ops; warm re-reads skip the Fletcher-64
-            via the verified-extent cache) --ONE read_sg splice per
-            batch--> caller's registered region. One rkey resolution per
-            transport lifetime (cached), one rendezvous per SG op.
+    pread:  DIRECT SPLICE (RDMA): the engine scatters the verified extent
+            overlay STRAIGHT into the caller's registered region through
+            the views `place_sg` hands back after validating the caller's
+            destination rkey — a server-initiated RDMA WRITE. ONE copy per
+            byte end-to-end, ZERO staging-ring acquires; warm re-reads
+            skip the Fletcher-64 via the verified-extent cache. TCP and
+            unregistered callers keep the staged path (fetch_into a ring
+            slot, then the SG splice — the bounce is now counted in
+            `staging.bounce_bytes`).
     pwrite: each iovec buffer registered once per writev (zero-copy wrap,
             no MR churn per block) --ONE write_sg per batch--> staging
             slots, encrypted IN PLACE (fused apply_into), then DONATED to
             every replica device under a SlotLease --update_many--> one
-            epoch, one extent lock acquisition. Zero post-splice copies on
-            the critical path; media writes back (one shared
-            materialization per donation) under ring pressure or on first
-            read. Zero control RPCs per writev: the size delegation
-            defers set_size to ONE piggybacked flush at close_fd/fsync.
-    preadv: readv_into scatters descriptors straight into the per-buffer
-            destinations — no contiguous intermediate bytes.
+            epoch, one extent lock acquisition, replica commits fanned out
+            ASYNCHRONOUSLY with the op returning at the container's write
+            quorum (majority by default) — latency tracks the fastest
+            majority; stragglers land in the background and a post-ack
+            replica failure demotes + re-replicates via the rebuild path.
+            Zero post-splice copies on the critical path; media writes
+            back (one shared materialization per donation) under ring
+            pressure or on first read. Zero control RPCs per writev: the
+            size delegation defers set_size to ONE piggybacked flush at
+            close_fd/fsync.
+    preadv: readv_into scatters the direct splice straight into the
+            per-buffer destinations — no contiguous intermediate bytes,
+            no staging bounce.
 
 Control path (PR 3): session bring-up is ONE compound RPC (connect +
 mount + grant_rkey), warm opens are served from the leased MetadataCache
@@ -58,8 +68,10 @@ same calibrated model the paper-figure benchmarks use.
 from __future__ import annotations
 
 import threading
+import time
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -160,6 +172,8 @@ class _StagingRing:
         self._reclaim = None          # callback: flush media writebacks
         self.donations = 0
         self.reclaims = 0
+        self.acquires = 0             # slot-batch acquisitions (bounce gauge:
+        # steady-state direct-splice reads must never touch the ring)
 
     def set_reclaim(self, cb) -> None:
         self._reclaim = cb
@@ -193,6 +207,8 @@ class _StagingRing:
         for s in slots:
             acquired = self._locks[s].acquire(blocking=False)
             assert acquired, "staging slot handed out twice"
+        with self._cv:
+            self.acquires += 1
         return slots
 
     def donate(self, slot: int) -> SlotLease:
@@ -269,7 +285,21 @@ class _ServerIO:
         self.transport_kind = transport
         self.legacy = legacy
         self.zero_copy = zero_copy and not legacy
+        # direct read splice: server-initiated placement straight into the
+        # caller's registered destination (RDMA only — TCP has no way to
+        # land bytes in caller memory without the kernel staging them)
+        self.direct_reads = self.zero_copy and transport == "rdma"
         self.host_copy_bytes = 0      # client-side materialization copies
+        self.bounce_bytes = 0         # engine->ring staging on STAGED reads
+        # destination-capability cache: one granted rkey per registered
+        # destination region, reused across reads (persistent
+        # registrations — device-direct rings — never re-grant; leases
+        # are renewed IN PLACE inside a skew margin, so a sink that
+        # outlives the TTL never presents an expired capability)
+        self._dst_rkeys: "OrderedDict[int, Tuple[str, MemoryRegion, float]]"\
+            = OrderedDict()
+        self._dst_rkey_ttl = 3600.0
+        self._dst_rkey_lock = threading.Lock()
         # server staging ring (bounce buffers) for the engine side; the
         # legacy path uses the same region through `self.staging`
         self.ring = _StagingRing(self.sreg, n_staging_slots, BLOCK, tenant)
@@ -350,7 +380,9 @@ class _ServerIO:
             },
             "client": {"host_copy_bytes": self.host_copy_bytes},
             "staging": {"donations": self.ring.donations,
-                        "reclaims": self.ring.reclaims},
+                        "reclaims": self.ring.reclaims,
+                        "acquires": self.ring.acquires,
+                        "bounce_bytes": self.bounce_bytes},
             # the control path is a measured subsystem, not an uncounted
             # tax: round-trips, payload bytes, compound batching and lease
             # traffic all show up next to the per-byte data-plane costs
@@ -467,10 +499,14 @@ class _ServerIO:
     def _fetch_block(self, obj, oid: int, b: int, bo: int, ln: int,
                      view: np.ndarray) -> None:
         """Stage one block: engine -> ring slot (tests hook this to assert
-        staging-ring concurrency). Decrypt is the fused single-pass
-        `apply_into` on the zero-copy path (PR-1's generate+XOR+copy-back
-        is kept behind `zero_copy=False` for benchmarks)."""
+        staging-ring concurrency). This bounce is a real host copy the
+        direct-splice path eliminates — counted in `bounce_bytes` so
+        copies/byte stays honest on the staged path. Decrypt is the fused
+        single-pass `apply_into` on the zero-copy path (PR-1's
+        generate+XOR+copy-back is kept behind `zero_copy=False`)."""
         obj.fetch_into(str(b), AKEY, bo, ln, view)
+        with self._gauge_lock:
+            self.bounce_bytes += ln
         if self.crypto is not None:
             if self.zero_copy:
                 self.crypto.apply_into(view[:ln], view[:ln],
@@ -496,25 +532,169 @@ class _ServerIO:
                 oid, offset, [(mr, 0, mr.size) for mr in mrs])
         finally:
             for mr in mrs:
+                self.drop_dst_rkey(mr)    # per-op capability dies with MR
                 self.creg.deregister(mr)
 
     def read_into(self, oid: int, offset: int, size: int,
                   dst_mr: MemoryRegion, dst_off: int = 0) -> int:
-        """Device-direct gather-read: blocks are staged into ring slots
-        (concurrently with other readers — per-slot locks, no engine-wide
-        lock) and land in the caller's registered region with ONE
-        scatter-gather splice per batch. This is the GPUDirect-RDMA
-        analogue's transport leg (core.device_direct builds on it)."""
+        """Device-direct gather-read into the caller's registered region:
+        over RDMA the engine scatters straight into it (ONE copy per byte,
+        zero staging acquires); over TCP blocks stage through ring slots
+        (per-slot locks, no engine-wide lock) and land with one SG splice
+        per batch. This is the GPUDirect-RDMA analogue's transport leg
+        (core.device_direct builds on it)."""
         if self.legacy:
             return self._read_into_legacy(oid, offset, size, dst_mr, dst_off)
         return self._gather_into(oid, offset, [(dst_mr, dst_off, size)])
 
+    def _dst_rkey(self, mr: MemoryRegion) -> str:
+        """Destination capability for server-initiated placement: the
+        client grants a write-scoped rkey on ITS registered region (once
+        per registration — persistent registrations like device-direct
+        rings reuse the token across every read) and conveys it with the
+        read request; the transport re-checks revocation/expiry/tenant on
+        every placement, cached translation or not. A cached lease inside
+        its expiry margin is renewed IN PLACE (same token — NIC caches
+        stay valid), so long-lived sinks never hard-fault on TTL; a
+        REVOKED key is never resurrected (renewal refused, the placement
+        fails at the capability check as it must)."""
+        ttl = self._dst_rkey_ttl
+        with self._dst_rkey_lock:
+            ent = self._dst_rkeys.get(mr.region_id)
+            if ent is not None and ent[1] is mr:
+                self._dst_rkeys.move_to_end(mr.region_id)
+                token, _mr, expires_at = ent
+                if time.monotonic() < expires_at - 0.25 * ttl:
+                    return token
+                try:
+                    self.creg.renew(token, ttl)
+                    self._dst_rkeys[mr.region_id] = \
+                        (token, mr, time.monotonic() + ttl)
+                except Exception:     # revoked/gone: hard-fails at use
+                    pass
+                return token
+        rk = self.creg.grant(mr, "w", ttl_s=ttl)
+        dead = []
+        with self._dst_rkey_lock:
+            ent = self._dst_rkeys.get(mr.region_id)
+            if ent is not None and ent[1] is mr:
+                dead.append(rk.token)             # lost a concurrent grant
+                token = ent[0]
+            else:
+                self._dst_rkeys[mr.region_id] = \
+                    (rk.token, mr, time.monotonic() + ttl)
+                token = rk.token
+            # sweep entries whose region was deregistered behind our back
+            # (the normal read()/readv_into()/sink-close paths retire via
+            # drop_dst_rkey; this catches direct registry deregisters).
+            # LIVE regions are never evicted — an entry per persistent
+            # registration is exactly the bound we want, and evicting one
+            # would retire a capability another thread is about to use.
+            stale = [rid for rid, (tok, m, _e) in self._dst_rkeys.items()
+                     if self.creg._regions.get(rid) is not m]
+            for rid in stale:
+                dead.append(self._dst_rkeys.pop(rid)[0])
+        for tok in dead:
+            self._retire_dst_token(tok)
+        return token
+
+    def _retire_dst_token(self, token: str) -> None:
+        """Kill a placement capability for good: gone from the registry
+        (not merely revoked — per-op grants must not grow the key table)
+        and flushed from the NIC translation cache."""
+        self.creg.retire(token)
+        if hasattr(self.xport, "invalidate_rkey_cache"):
+            self.xport.invalidate_rkey_cache(token)
+
+    def drop_dst_rkey(self, mr: MemoryRegion) -> None:
+        """Retire a destination region's placement capability (transient
+        read buffers at deregister, sink teardown): the token dies with
+        the registration, so a stale NIC cache entry can never land bytes
+        in recycled memory — and neither the registry key table nor the
+        translation cache accumulates one entry per pread()."""
+        with self._dst_rkey_lock:
+            ent = self._dst_rkeys.pop(mr.region_id, None)
+        if ent is not None and ent[1] is mr:
+            self._retire_dst_token(ent[0])
+
+    def _fill_direct(self, obj, oid: int, b: int, bo: int, ln: int,
+                     subs: Sequence) -> None:
+        """Direct-splice fill of one block's destination sub-views (the
+        hook point tests use to assert read concurrency, mirroring
+        `_fetch_block` on the staged path). `subs` is [(view, lo, hi)] in
+        block-relative coordinates. Decrypt is fused IN PLACE in the
+        destination memory — one pass, zero staging."""
+        obj.fetch_scatter(str(b), AKEY, bo, ln, subs)
+        if self.crypto is not None:
+            for view, lo, hi in subs:
+                self.crypto.apply_into(view, view,
+                                       nonce=oid * (1 << 20) + b,
+                                       offset=bo + lo)
+
+    def _gather_direct(self, oid: int, offset: int, dsts: Sequence) -> int:
+        """ONE-copy gather: the engine scatters the extent overlay straight
+        into the caller's registered destinations through the views the
+        transport's `place_sg` validated — no staging-ring slot is ever
+        acquired. One placement op (one capability check + one rendezvous)
+        per destination region; descriptors mirror the (block, destination)
+        overlaps exactly as the staged SG path's iovecs did."""
+        spans, g = [], 0
+        for mr, moff, sz in dsts:
+            if sz > 0:
+                spans.append((g, g + sz, mr, moff))
+            g += sz
+        size = g
+        if size == 0:
+            return 0
+        obj = self.container.object(oid)
+        blocks = split_blocks(offset, size)
+        per_block = []      # (b, bo, ln, [(view_ref, lo_rel, hi_rel)])
+        by_mr: "OrderedDict[int, tuple]" = OrderedDict()
+        pos, si = 0, 0
+        for b, bo, ln in blocks:
+            subs = []
+            while si < len(spans) and spans[si][1] <= pos:
+                si += 1
+            j = si
+            while j < len(spans) and spans[j][0] < pos + ln:
+                g0, g1, mr, moff = spans[j]
+                lo, hi = max(pos, g0), min(pos + ln, g1)
+                ent = by_mr.setdefault(id(mr), (mr, [], []))
+                ent[1].append((moff + lo - g0, hi - lo))
+                ref = [None]          # placed view lands here below
+                ent[2].append(ref)
+                subs.append((ref, lo - pos, hi - pos))
+                j += 1
+            per_block.append((b, bo, ln, subs))
+            pos += ln
+        with self._gauge_lock:
+            self._active_reads += 1
+            self.max_concurrent_reads = max(self.max_concurrent_reads,
+                                            self._active_reads)
+        try:
+            for mr, descs, refs in by_mr.values():
+                views = self.xport.place_sg(self._dst_rkey(mr), self.tenant,
+                                            descs)
+                for ref, view in zip(refs, views):
+                    ref[0] = view
+            for b, bo, ln, subs in per_block:
+                self._fill_direct(obj, oid, b, bo, ln,
+                                  [(ref[0], lo, hi) for ref, lo, hi in subs])
+        finally:
+            with self._gauge_lock:
+                self._active_reads -= 1
+        return size
+
     def _gather_into(self, oid: int, offset: int,
                      dsts: Sequence) -> int:
-        """Shared gather core: fill destination spans [(mr, mr_off, size)]
-        from the file range. A staged block may straddle destination
+        """Shared gather core: direct splice when the transport supports
+        server-initiated placement (RDMA zero-copy — the default), else
+        fill destination spans [(mr, mr_off, size)] from the file range
+        through the staging ring. A staged block may straddle destination
         boundaries: one SG descriptor per (block, destination) overlap,
         same as writev's source spans."""
+        if self.direct_reads:
+            return self._gather_direct(oid, offset, dsts)
         # destination spans in gather-global byte coordinates (zero-size
         # destinations occupy no span and produce no descriptor)
         spans, g = [], 0
@@ -572,6 +752,7 @@ class _ServerIO:
             self.read_into(oid, offset, size, dst, 0)
             return dst.buf.tobytes()
         finally:
+            self.drop_dst_rkey(dst)       # per-op capability dies with MR
             self.creg.deregister(dst)
 
     # -- seed per-block path (kept verbatim for `legacy=True` benchmarks) ----
@@ -652,7 +833,8 @@ class ROS2Client:
     def __init__(self, mode: str = "host", transport: str = "rdma",
                  n_devices: int = 4, tenant: str = "default",
                  secret: str = "secret", inline_encryption: bool = False,
-                 replication: int = 2, n_dpu_cores: int = 16,
+                 replication: int = 2, write_quorum: Optional[int] = None,
+                 n_dpu_cores: int = 16,
                  n_staging_slots: int = 16, legacy: bool = False,
                  zero_copy: bool = True,
                  scrub_interval_s: Optional[float] = 1.0,
@@ -676,8 +858,11 @@ class ROS2Client:
         self.container = pool.create_container("cont0",
                                                replication=replication,
                                                aggregate=not legacy,
-                                               verified_cache=zero_copy)
-        self.scrubber = MediaScrubber(self.store)
+                                               verified_cache=zero_copy,
+                                               write_quorum=write_quorum)
+        # idle-aware: the paced scrub cycles spend only media bandwidth the
+        # foreground provably leaves on the table (free on loaded runs)
+        self.scrubber = MediaScrubber(self.store, idle_aware=True)
         self.server_registry = MemoryRegistry("server")
         self.control = ControlPlane(self.store, self.server_registry,
                                     tenants={tenant: secret},
@@ -753,6 +938,7 @@ class ROS2Client:
             self.dpu.register("truncate", self.dfs.truncate)
             self.dpu.register("fsync", self.dfs.fsync)
             self.dpu.register("read_into", self.dfs.pread_into)
+            self.dpu.register("read_into_many", self.dfs.pread_into_many)
             self.dpu.register("readv", self.dfs.preadv)
             self.dpu.register("writev", self.dfs.pwritev)
             self.dpu.start()
@@ -765,7 +951,15 @@ class ROS2Client:
             # the verified cache is only honest while the scrubber bounds
             # the silent-corruption window — run it whenever the cache runs.
             # Started LAST so a failed construction never leaks the thread.
-            self.scrubber.start(interval_s=scrub_interval_s)
+            # In dpu mode the pacing runs as DPU housekeeping on an Arm
+            # core (the near-NIC background work the offload model keeps
+            # off the host), same as lease renewal.
+            if self.dpu is not None:
+                self.dpu.start_housekeeping("media-scrub",
+                                            self.scrubber.run_paced_cycle,
+                                            scrub_interval_s)
+            else:
+                self.scrubber.start(interval_s=scrub_interval_s)
 
     # ---- POSIX-ish sync API (host launches; DPU executes in dpu mode) ----
     def _dpu_call(self, op: str, _timeout: float = 120.0, **args):
@@ -820,6 +1014,17 @@ class ROS2Client:
                                   offset=offset, dst_mr=dst_mr,
                                   dst_off=dst_off)
         return self.dfs.pread_into(fd, size, offset, dst_mr, dst_off)
+
+    def pread_into_many(self, descs: Sequence, dst_mr) -> int:
+        """Vectored device-direct read: one descriptor list — [(fd, size,
+        offset, dst_off)] — lands N file ranges in one registered region.
+        In dpu mode the WHOLE list rides a single SQE (one doorbell, one
+        completion), the batched-placement leg DeviceDirectSink uses."""
+        if self.dpu:
+            return self._dpu_call("read_into_many",
+                                  descs=[tuple(d) for d in descs],
+                                  dst_mr=dst_mr)
+        return self.dfs.pread_into_many(descs, dst_mr)
 
     def register_region(self, nbytes: int):
         """Register a client-side memory region (loader rings, sinks)."""
@@ -877,6 +1082,7 @@ class ROS2Client:
         self.scrubber.stop()
         if self.dpu:
             self.dpu.stop()
+        self.store.close()     # drain background replica commits
 
     # ---- calibrated performance model ----
     def stations(self, io_size: int, write: bool,

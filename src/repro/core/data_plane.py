@@ -20,6 +20,15 @@ the offload-engine scatter-gather the paper's data path depends on. Over
 TCP each descriptor remains an independently requested, MTU-segmented,
 double-copied stream, so the counters still discriminate the transports.
 
+Server-initiated placement (`place_sg`, PR 4): the GPUDirect-style direct
+splice. The initiator registers its destination memory, grants an rkey on
+it, and conveys the token with the read request; the server validates the
+capability (tenant/perms/expiry/bounds — revocation bites even on cached
+translations) and then scatters engine bytes STRAIGHT into the initiator's
+region, one copy per byte, no staging bounce. The storage engine performs
+the fill through the views `place_sg` hands back — the "NIC DMA" of a
+server-side RDMA WRITE into caller memory.
+
 Counters (copies, segments, control messages, sg_ops, descriptors,
 rkey_resolves, bytes) let tests assert these semantics; throughput numbers
 come from the MVA model (core/sim.py), not wall-clock.
@@ -113,6 +122,13 @@ class MemoryRegistry:
         if rk:
             rk.revoked = True
 
+    def retire(self, token: str) -> None:
+        """Forget a key entirely (capability teardown for short-lived
+        grants): the token resolves as unknown afterwards — the same hard
+        failure as revocation — and, unlike revoke, the entry does not
+        linger in the table, so per-op grants cannot grow it unboundedly."""
+        self._rkeys.pop(token, None)
+
     def lookup(self, token: str) -> Tuple[RKey, MemoryRegion]:
         """Translate a token to its key + region (the cacheable MPT/MTT
         lookup); key-state/PD/bounds checks happen in `check_access`."""
@@ -161,6 +177,8 @@ class TransportStats:
     rkey_resolves: int = 0         # registry translations actually performed
     rkey_cache_hits: int = 0       # translations served from the NIC cache
     sendmsg_batches: int = 0       # TCP iovec batches (1 syscall-equivalent)
+    placements: int = 0            # server-initiated direct-splice ops
+    placed_bytes: int = 0          # bytes landed by direct placement
 
 
 # One scatter-gather descriptor: (remote_offset, local_mr, local_offset, size)
@@ -181,7 +199,11 @@ class RDMATransport:
         self.local = local
         self.remote = remote
         self.stats = TransportStats()
-        self._rkey_cache: Dict[str, Tuple[RKey, MemoryRegion]] = {}
+        # token -> (key, region, owning registry): one cache serves both
+        # directions (initiator-side rkeys for server-initiated placement
+        # live in `local`, target-side rkeys in `remote`)
+        self._rkey_cache: Dict[str, Tuple[RKey, MemoryRegion,
+                                          MemoryRegistry]] = {}
         self._stats_lock = threading.Lock()
 
     def _splice(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
@@ -192,26 +214,31 @@ class RDMATransport:
             self.stats.copy_bytes += size
             self.stats.bytes_moved += size
 
-    def _resolve_cached(self, rkey: str, tenant: str,
-                        op: str) -> MemoryRegion:
+    def _resolve_cached(self, rkey: str, tenant: str, op: str,
+                        registry: Optional[MemoryRegistry] = None
+                        ) -> MemoryRegion:
         """Cached rkey translation; key-state/PD checks still run on every
         use (revocation/expiry must bite even on cache hits), and the
         cached entry is dropped if its region was deregistered (MPT
         invalidation on dereg). Per-descriptor bounds checks happen in
-        _sg_setup."""
+        _sg_setup. `registry` selects which side's keys translate: the
+        target's (`remote`, default — initiator-driven verbs) or the
+        initiator's (`local` — server-initiated placement)."""
+        reg = registry if registry is not None else self.remote
         with self._stats_lock:
             ent = self._rkey_cache.get(rkey)
             if ent is None:
-                ent = self.remote.lookup(rkey)
+                rk, mr = reg.lookup(rkey)
+                ent = (rk, mr, reg)
                 self._rkey_cache[rkey] = ent
                 self.stats.rkey_resolves += 1
             else:
                 self.stats.rkey_cache_hits += 1
-        rk, mr = ent
-        if self.remote._regions.get(rk.region_id) is not mr:
+        rk, mr, reg = ent
+        if reg._regions.get(rk.region_id) is not mr:
             self.invalidate_rkey_cache(rkey)
             raise AccessError("rkey region deregistered")
-        self.remote.check_access(rk, mr, tenant, 0, 0, op)
+        reg.check_access(rk, mr, tenant, 0, 0, op)
         return mr
 
     def invalidate_rkey_cache(self, rkey: Optional[str] = None) -> None:
@@ -280,6 +307,40 @@ class RDMATransport:
         for roff, lmr, loff, size in iov:
             self._splice(lmr.buf, loff, mr.buf, roff, size)
         return sum(d[3] for d in iov)
+
+    # -- server-initiated placement (direct read splice) ---------------------
+    def place_sg(self, rkey: str, tenant: str,
+                 spans: Sequence[Tuple[int, int]]) -> List[np.ndarray]:
+        """Server-initiated scatter placement: validate the initiator's
+        destination capability ONCE for the op (cached translation, checks
+        on every use) and hand back one writable view per (offset, size)
+        span. The storage engine scatters the extent overlay straight into
+        these views — the single "NIC DMA" copy per byte of a server-side
+        RDMA WRITE into caller-registered memory; no staging bounce ever
+        exists for the op. Accounting mirrors read_sg: one op, one
+        eager-or-rendezvous decision for the summed length, one descriptor
+        per span, and exactly one counted copy per byte (charged here, at
+        placement grant time — the fill IS the DMA)."""
+        mr = self._resolve_cached(rkey, tenant, "w", registry=self.local)
+        total = sum(s for _, s in spans)
+        for roff, size in spans:
+            if roff < 0 or roff + size > mr.size:
+                raise AccessError("sg descriptor outside registered region")
+        with self._stats_lock:
+            self.stats.ops += 1
+            self.stats.sg_ops += 1
+            self.stats.descriptors += len(spans)
+            self.stats.placements += 1
+            self.stats.placed_bytes += total
+            if total > EAGER_LIMIT:
+                self.stats.rendezvous += 1        # ONE RTS/CTS for the op
+                self.stats.control_msgs += 2
+            else:
+                self.stats.eager += 1
+            self.stats.copies += len(spans)
+            self.stats.copy_bytes += total
+            self.stats.bytes_moved += total
+        return [mr.buf[roff:roff + size] for roff, size in spans]
 
 
 class TCPTransport:

@@ -6,27 +6,67 @@ rkeys) to the DPU/server, and on reads the storage server RDMA-writes
 straight into GPU memory — same control/data-plane split, no DAOS engine
 changes.
 
-TPU adaptation (DESIGN.md §2): there is no peer-to-peer PCIe write into
-TPU HBM from here, so the minimal-copy equivalent is a *pinned, registered
-host ring* that the data plane splices into (the "NIC DMA"), followed by a
-single `jax.device_put` (on real hardware, the host->HBM DMA the runtime
-performs from pinned memory). Relative to the staged `pread()` path this
-removes the per-block client staging copy and the bytes->array
-materialization — the same copies GPUDirect removes on the GPU side.
+TPU adaptation (post-PR-4): there is no peer-to-peer PCIe write into TPU
+HBM from here, so the minimal-copy equivalent is a *pinned, registered
+host ring* the server places into DIRECTLY — `place_sg` validates the
+ring's write-scoped rkey and the engine scatters the verified extent
+overlay straight into the ring slots (the server-initiated "NIC DMA";
+since PR 4 there is no staging bounce anywhere on this path) — followed by
+the host->HBM DMA of a `jax.device_put` from pinned memory.
 
-The control-plane leg is faithful: the ring is registered and its rkey is
-granted through `grant_rkey`, so server-initiated placement respects the
-same capability checks (tests assert a revoked/cross-tenant rkey cannot
-land data in a device ring).
-"""
+Two placement shapes:
+
+  * `read_tensor`: one tensor, one slot, one device transfer — the
+    latency-sensitive single-fetch.
+  * `read_tensors`: BATCHED placement for LLM ingest (weight shards,
+    token batches). Tensors are packed back-to-back into ring slots; each
+    slot costs one vectored splice batch (`pread_into_many` — a single
+    DPU doorbell in dpu mode) and ONE `jax.device_put` for the whole
+    packed slot instead of one per tensor, with per-tensor arrays carved
+    on-device (bitcast + reshape — no host copies). The ring is
+    double-buffered: while slot k's host->device DMA is in flight, slot
+    k+1's splice proceeds, so placement and device transfer overlap
+    across the batch.
+
+The ring registration is persistent: registered once at construction, its
+placement rkey granted once and served from the NIC translation cache for
+every subsequent read. The capability leg is faithful: a revoked or
+cross-tenant destination rkey cannot receive a direct splice (tests assert
+it), and `close()` revokes the capability with the registration so a stale
+NIC cache entry can never land bytes in recycled memory. The sink rides
+the owning client's session — it issues NO control RPCs of its own
+(constructing one used to leak a second, never-disconnected session)."""
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from functools import partial
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _carve_packed(packed: jax.Array, layout: Tuple) -> Tuple[jax.Array, ...]:
+    """Carve every tensor of a packed slot out of its on-device uint8
+    buffer in ONE dispatched (and layout-cached) computation: slice +
+    bitcast + reshape per tensor, fused by XLA — no host copies and no
+    per-tensor dispatch. `layout` is a static tuple of (start_byte, shape,
+    dtype_name); steady-state ingest reuses layouts, so this compiles
+    once per pack shape."""
+    out = []
+    for start, shape, dtype_name in layout:
+        np_dtype = np.dtype(dtype_name)
+        nbytes = int(np.prod(shape)) * np_dtype.itemsize
+        seg = packed[start:start + nbytes]
+        if np_dtype.itemsize > 1:
+            seg = jax.lax.bitcast_convert_type(
+                seg.reshape(-1, np_dtype.itemsize), np_dtype)
+        else:
+            seg = jax.lax.bitcast_convert_type(seg, np_dtype)
+        out.append(seg.reshape(shape))
+    return tuple(out)
 
 
 @dataclass
@@ -34,6 +74,7 @@ class DirectStats:
     reads: int = 0
     bytes: int = 0
     device_puts: int = 0
+    batches: int = 0               # packed slots shipped by read_tensors
 
 
 class DeviceDirectSink:
@@ -43,21 +84,49 @@ class DeviceDirectSink:
         self.client = client
         self.slot_bytes = int(slot_bytes)
         self.n_slots = int(n_slots)
+        # persistent registration: one region, one (cached) placement rkey
         self.ring = client.register_region(self.slot_bytes * self.n_slots)
-        # capability exchange: the server-visible descriptor of our ring
-        r = client.control.rpc("connect", tenant=client.tenant,
-                               secret=client.control.tenants[client.tenant])
-        self._sid = r["session_id"]
+        # the sink rides the client's established session/capability path;
+        # a raw `connect` here would leak an undisconnected second session
+        # and bypass the compound/MetadataCache accounting
+        self._sid = client.session_id
         self.stats = DirectStats()
         self._free = list(range(self.n_slots))
         self._cv = threading.Condition()
+        # slot -> jax arrays whose device DMA still sources from it; the
+        # wait happens at slot REUSE (in _acquire), so up to n_slots
+        # placements + transfers stay in flight at once
+        self._inflight: dict = {}
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Tear down the sink: revoke the placement capability and drop
+        the ring registration (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self.client.io.drop_dst_rkey(self.ring)
+        self.client.client_registry.deregister(self.ring)
+
+    def __enter__(self) -> "DeviceDirectSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- slot lifecycle ------------------------------------------------------
     def _acquire(self) -> int:
         with self._cv:
             while not self._free:
                 self._cv.wait()
-            return self._free.pop()
+            slot = self._free.pop()
+            pending = self._inflight.pop(slot, None)
+        if pending is not None:
+            # the slot's previous tensors must be materialized before its
+            # ring memory can be refilled (the DMA source is still live)
+            jax.block_until_ready(pending)
+        return slot
 
     def _release(self, slot: int) -> None:
         with self._cv:
@@ -87,6 +156,72 @@ class DeviceDirectSink:
             return arr
         finally:
             self._release(slot)
+
+    # -- batched placement ----------------------------------------------------
+    def read_tensors(self, reqs: Sequence[Tuple[int, int, Tuple, Any]], *,
+                     sharding: Optional[Any] = None) -> List[jax.Array]:
+        """Batched device-direct placement: `reqs` is [(fd, offset, shape,
+        dtype), ...]. Tensors are packed back-to-back into ring slots; per
+        slot this costs ONE vectored splice batch (`pread_into_many` — a
+        single DPU doorbell in dpu mode) and ONE `jax.device_put`, with
+        per-tensor arrays carved on-device. Double-buffered: slot k+1's
+        splice overlaps slot k's host->device DMA; a slot is only reused
+        after its carved tensors materialized (so the DMA source is never
+        overwritten in flight). With `sharding`, carved tensors are
+        re-placed onto it (one extra device-side put per tensor — the host
+        path stays batched). Returns arrays in request order."""
+        parsed = [(fd, off, tuple(shape), np.dtype(dtype))
+                  for fd, off, shape, dtype in reqs]
+        for _fd, _off, shape, np_dtype in parsed:
+            size = int(np.prod(shape)) * np_dtype.itemsize
+            if size > self.slot_bytes:
+                raise ValueError(
+                    f"tensor {size}B exceeds slot {self.slot_bytes}B")
+        out: List[Optional[jax.Array]] = [None] * len(parsed)
+        i = 0
+        while i < len(parsed):
+            # greedy pack: as many consecutive tensors as fit in one slot
+            pack, used = [], 0
+            while i < len(parsed):
+                fd, off, shape, np_dtype = parsed[i]
+                size = int(np.prod(shape)) * np_dtype.itemsize
+                if used + size > self.slot_bytes:
+                    break
+                pack.append((i, fd, off, shape, np_dtype, used, size))
+                used += size
+                i += 1
+            slot = self._acquire()          # blocks iff the slot's previous
+            try:                            # tensors are still in flight
+                base = slot * self.slot_bytes
+                self.client.pread_into_many(
+                    [(fd, size, off, base + pos)
+                     for _ix, fd, off, _sh, _dt, pos, size in pack],
+                    self.ring)
+                packed = jax.device_put(self.ring.buf[base:base + used])
+                layout = tuple((pos, shape, np_dtype.name)
+                               for _ix, _fd, _off, shape, np_dtype, pos,
+                               _size in pack)
+                carved = _carve_packed(packed, layout)
+                for (ix, *_rest), arr in zip(pack, carved):
+                    if sharding is not None:
+                        arr = jax.device_put(arr, sharding)
+                        self.stats.device_puts += 1
+                    out[ix] = arr
+                self.stats.device_puts += 1
+                self.stats.batches += 1
+                self.stats.reads += len(pack)
+                self.stats.bytes += used
+                # hand the slot back immediately; the NEXT user of this
+                # slot blocks on these arrays (in _acquire) before
+                # refilling it, so up to n_slots pipelines overlap
+                with self._cv:
+                    self._inflight[slot] = [out[p[0]] for p in pack]
+            finally:
+                self._release(slot)
+        # the returned batch is fully materialized (callers may mutate or
+        # re-read the files immediately)
+        jax.block_until_ready([a for a in out if a is not None])
+        return out
 
 
 def staged_read_tensor(client, fd: int, offset: int, shape, dtype,

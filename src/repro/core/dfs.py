@@ -381,6 +381,20 @@ class DFSClient:
             raise DFSError("EBADF")
         return self.io.read_into(h.oid, offset, size, dst_mr, dst_off)
 
+    def pread_into_many(self, descs, dst_mr) -> int:
+        """Vectored zero-copy read: a descriptor list — [(fd, size,
+        offset, dst_off)] — landing N file ranges (possibly from N
+        different files) in one registered region. On the DPU this whole
+        list arrives in a single SQE; each range is its own direct-splice
+        placement. Returns total bytes read."""
+        total = 0
+        for fd, size, offset, dst_off in descs:
+            h = self._open.get(fd)
+            if h is None:
+                raise DFSError("EBADF")
+            total += self.io.read_into(h.oid, offset, size, dst_mr, dst_off)
+        return total
+
     def fsync(self, fd: int) -> None:
         """Data is durable at extent write; fsync flushes the METADATA
         delegation (the deferred set_size) so other sessions observe the

@@ -15,6 +15,7 @@ import threading
 import zlib
 from dataclasses import dataclass, field
 from functools import lru_cache
+from time import sleep as time_sleep
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -77,14 +78,28 @@ class Device:
         self.host_copy_bytes = 0       # data-path copies made at commit
         self.donated_bytes = 0         # bytes committed by buffer donation
         self.writeback_bytes = 0       # deferred NAND programs of donations
+        # injectable per-commit latency (seconds): benchmarks/tests make
+        # THIS device the slow replica to show quorum-ack writes tracking
+        # the fastest majority instead of the straggler
+        self.commit_delay_s = 0.0
 
-    def write(self, key: int, data, lease=None) -> None:
+    def write(self, key: int, data, lease=None, pre_pinned: bool = False)\
+            -> None:
+        """Commit a block. `pre_pinned=True` means the caller already took
+        this device's pin on the lease (the quorum committer pins every
+        planned replica up front on the op thread, so a donated slot can
+        never be freed between the op returning at quorum and a straggler
+        replica starting its background commit). On ANY failure the pin is
+        left untouched — the committer owns releasing it, exactly once."""
+        if self.commit_delay_s:
+            time_sleep(self.commit_delay_s)
         if not self.alive:
             raise IOError(f"device {self.name} failed")
         if lease is not None:
             arr = data if isinstance(data, np.ndarray) \
                 else np.frombuffer(data, np.uint8)
-            lease.pin()
+            if not pre_pinned:
+                lease.pin()
             with self._lock:
                 self._blocks[key] = _DonatedBlock(arr, lease)
                 self.bytes_written += arr.size

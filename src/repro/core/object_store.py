@@ -11,8 +11,10 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from bisect import insort
 from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -36,6 +38,88 @@ class Extent:
     epoch: int
     csum: int
     block_keys: Dict[str, int]      # device_name -> block key (replicas)
+    # asynchronous replica fan-out bookkeeping (quorum-ack writes); None
+    # once every replica landed or for synchronously-committed extents
+    pending: Optional["_PendingCommit"] = None
+
+
+class _PendingCommit:
+    """One extent's asynchronous replica fan-out: the op thread returns at
+    quorum; straggler replicas land (or demote) in the background.
+
+    The condition variable carries three facts: per-replica completions
+    (`ok`/`done`), the op-thread handoff (`acked` — set atomically with the
+    collection of pre-ack failures, so op thread and workers never both
+    demote the same replica), and cancellation (extent freed/batch aborted
+    — a worker that lost the race deletes its own just-written block)."""
+
+    __slots__ = ("quorum", "total", "ok", "done", "failed", "cancelled",
+                 "acked", "cv")
+
+    def __init__(self, quorum: int, total: int):
+        self.quorum = quorum
+        self.total = total
+        self.ok = 0
+        self.done = 0
+        self.failed: List[Tuple[str, int, Exception]] = []  # (dev, key, err)
+        self.cancelled = False
+        self.acked = False
+        self.cv = threading.Condition()
+
+    def record(self, success: bool, dev_name: str = "", key: int = 0,
+               err: Optional[Exception] = None) -> Tuple[bool, bool]:
+        """Record one replica completion; returns (acked, cancelled) read
+        in the SAME atomic instant, so worker and op thread can never both
+        (or neither) own a failure's demotion: a failure lands on the
+        `failed` list iff the op thread has not acked yet (it will claim
+        the list in ack()); once acked, the returning worker demotes."""
+        with self.cv:
+            self.done += 1
+            if success:
+                self.ok += 1
+            elif err is not None and not self.acked and not self.cancelled:
+                self.failed.append((dev_name, key, err))
+            self.cv.notify_all()
+            return self.acked, self.cancelled
+
+    def wait_quorum(self, timeout: float = 120.0) -> bool:
+        """Block until `quorum` replicas landed (True) or every commit
+        finished with fewer successes (False)."""
+        deadline = time.monotonic() + timeout
+        with self.cv:
+            while self.ok < self.quorum and self.done < self.total:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self.cv.wait(remaining):
+                    raise StorageError("replica commit quorum timeout")
+            return self.ok >= self.quorum
+
+    def wait_complete(self, timeout: float = 120.0) -> None:
+        """Block until every submitted replica commit finished (the abort
+        path drains stragglers so cleanup is deterministic)."""
+        deadline = time.monotonic() + timeout
+        with self.cv:
+            while self.done < self.total:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self.cv.wait(remaining):
+                    raise StorageError("replica commit drain timeout")
+
+    def ack(self) -> List[Tuple[str, int, Exception]]:
+        """Op-thread handoff: mark the op returned and claim every failure
+        recorded so far (the op thread demotes those; failures recorded
+        AFTER this instant are demoted by the worker that hit them)."""
+        with self.cv:
+            self.acked = True
+            claimed, self.failed = self.failed, []
+            return claimed
+
+    def cancel(self) -> None:
+        with self.cv:
+            self.cancelled = True
+
+    @property
+    def complete(self) -> bool:
+        with self.cv:
+            return self.done >= self.total
 
 
 def _nbytes(data) -> int:
@@ -54,6 +138,9 @@ class EngineStats:
     vcache_invalidations: int = 0
     scrub_bytes: int = 0             # bytes re-verified by the MediaScrubber
     scrub_corruptions: int = 0       # cache entries revoked by the scrubber
+    quorum_acks: int = 0             # writes acked before every replica landed
+    background_commits: int = 0      # straggler replicas landed post-ack
+    replica_demotions: int = 0       # failed replicas dropped + re-replicated
 
 
 class VerifiedExtentCache:
@@ -151,8 +238,21 @@ class DAOSObject:
         (aligned with `items`) carries staging-ring slot leases: a leased
         payload is DONATED to every replica device — committed by
         reference with zero host copies, each device pinning the lease
-        until its deferred writeback (media.py) lands the bytes."""
+        until its deferred writeback (media.py) lands the bytes.
+
+        Replica fan-out is ASYNCHRONOUS (PR 4): every replica commit of
+        every item is submitted to the store's commit pool at once, and
+        the op returns when each extent reaches its container's write
+        quorum (default: majority of its replicas) — write latency tracks
+        the fastest majority, not the slowest replica. Straggler commits
+        finish in the background; a replica that fails after the ack is
+        DEMOTED (dropped from the extent, verified-cache invalidated) and
+        re-replicated onto a spare via the rebuild path's per-extent move.
+        Donated leases are pre-pinned once per planned replica on THIS
+        thread, so a slot can never return to the ring while a background
+        commit still sources from it."""
         cont = self.container
+        store = cont.store
         epoch = cont.next_epoch() if epoch is None else epoch
         items = list(items)
         leases = list(leases) if leases is not None else [None] * len(items)
@@ -166,28 +266,83 @@ class DAOSObject:
             staged.append((dkey, akey, offset, payload,
                            live[:cont.replication], lease))
         prepped: List[Tuple[Tuple[str, str], Extent]] = []
-        written: List[Tuple[Device, int]] = []
+        planned: List[Tuple[Device, int]] = []    # every (dev, key) submitted
         try:
             for dkey, akey, offset, payload, targets, lease in staged:
                 n = _nbytes(payload)
-                csum = cont.store.csum(payload)
-                with cont.store._stats_lock:
-                    cont.store.stats.checksum_bytes += n
+                csum = store.csum(payload)
+                with store._stats_lock:
+                    store.stats.checksum_bytes += n
+                rec = _PendingCommit(cont.commit_quorum(len(targets)),
+                                     len(targets))
                 keys: Dict[str, int] = {}
-                for dev in targets:
-                    key = cont.store.new_block_key()
-                    dev.write(key, payload, lease=lease)
-                    written.append((dev, key))
-                    keys[dev.name] = key
-                prepped.append(((dkey, akey),
-                                Extent(offset, n, epoch, csum, keys)))
+                ext = Extent(offset, n, epoch, csum, keys, pending=rec)
+                prepped.append(((dkey, akey), ext))
+                # quorum == width means the op must wait for every replica
+                # anyway: commit inline, no pool hop (the replication=2
+                # default keeps its PR-3 latency). A sub-width quorum fans
+                # out so the op can return while stragglers are in flight.
+                fan_out = rec.quorum < len(targets)
+                pinned = submitted = 0
+                try:
+                    if lease is not None:
+                        for _ in targets:         # pre-pin: one per replica
+                            lease.pin()
+                            pinned += 1
+                    for dev in targets:
+                        key = store.new_block_key()
+                        keys[dev.name] = key
+                        planned.append((dev, key))
+                        if fan_out:
+                            store.commit_pool.submit(
+                                self._commit_replica, dev, key, payload,
+                                lease, rec, ext)
+                        else:
+                            self._commit_replica(dev, key, payload, lease,
+                                                 rec, ext)
+                        submitted += 1
+                except Exception:
+                    # replicas never handed to a worker (pool shut down
+                    # mid-batch, etc.): release their pre-pins ourselves
+                    # and shrink the record so the abort drain converges
+                    if lease is not None:
+                        for _ in range(pinned - submitted):
+                            lease.unpin()
+                    with rec.cv:
+                        rec.total -= len(targets) - submitted
+                    raise
         except Exception:
-            # free replica blocks of the aborted batch (no extent points
-            # at them; without this they would leak in Device._blocks, and
-            # their donated leases would pin staging slots forever)
-            for dev, key in written:
-                dev.delete(key)
+            self._abort_commit_batch(prepped, planned)
             raise
+        # wait for every item's quorum before ANY extent becomes visible
+        # (batch atomicity: a batch either inserts all its extents or none)
+        failed_item = None
+        for _k, ext in prepped:
+            try:
+                if not ext.pending.wait_quorum():
+                    failed_item = ext
+                    break
+            except StorageError:
+                failed_item = ext
+                break
+        if failed_item is not None:
+            self._abort_commit_batch(prepped, planned)
+            errs = failed_item.pending.failed
+            raise StorageError(
+                f"replica commit quorum failed: "
+                f"{errs[-1][2] if errs else 'commit timeout'}")
+        for _k, ext in prepped:
+            # op-thread handoff: demote replicas that failed pre-ack (the
+            # quorum still succeeded), count a quorum ack if stragglers
+            # are still in flight
+            pre_ack_failures = ext.pending.ack()
+            if not ext.pending.complete:
+                with store._stats_lock:
+                    store.stats.quorum_acks += 1
+            if ext.pending.complete and not pre_ack_failures:
+                ext.pending = None                # fully landed: no tracking
+            for dev_name, key, _err in pre_ack_failures:
+                self._demote_replica(ext, dev_name, key)
         retired: List[Extent] = []
         with self._lock:
             for k, ext in prepped:
@@ -207,6 +362,122 @@ class DAOSObject:
             cont.retire_extents(epoch, retired)
         return epoch
 
+    def _abort_commit_batch(self, prepped, planned) -> None:
+        """Abort an update_many batch: cancel the fan-outs, DRAIN the
+        workers (so every pre-pin is deterministically released), then
+        free whatever landed — without this the blocks would leak in
+        Device._blocks and donated leases would pin staging slots."""
+        for _k, ext in prepped:
+            ext.pending.cancel()
+        for _k, ext in prepped:
+            ext.pending.wait_complete()
+        for dev, key in planned:
+            dev.delete(key)
+
+    def _commit_replica(self, dev: Device, key: int, payload, lease,
+                        rec: _PendingCommit, ext: Extent) -> None:
+        """One replica's media commit, run on the store's commit pool.
+        Post-write it re-checks cancellation (the batch may have aborted,
+        or the extent may have been punched, while we were writing) and
+        deletes its own block if it lost that race — a cancelled extent
+        must never resurrect. A failure AFTER the op-thread ack demotes
+        the replica from here (pre-ack failures are the op thread's)."""
+        store = self.container.store
+        with rec.cv:
+            cancelled = rec.cancelled
+        if cancelled:
+            if lease is not None:
+                lease.unpin()                     # release our pre-pin
+            rec.record(False)
+            return
+        try:
+            dev.write(key, payload, lease=lease,
+                      pre_pinned=lease is not None)
+        except Exception as e:                    # degraded replica
+            if lease is not None:
+                lease.unpin()                     # write never consumed it
+            acked, cancelled = rec.record(False, dev.name, key, e)
+            if acked and not cancelled:
+                # post-ack failure on a LIVE extent: ours to demote (a
+                # pre-ack failure was claimed by the op thread in ack();
+                # a cancelled extent is already being freed — demoting or
+                # re-replicating it would resurrect reclaimed data)
+                self._demote_replica(ext, dev.name, key)
+            return
+        acked, cancelled = rec.record(True)
+        if cancelled:
+            dev.delete(key)                       # late write: take it back
+            return
+        if acked:
+            with store._stats_lock:
+                store.stats.background_commits += 1
+
+    def _demote_replica(self, ext: Extent, dev_name: str, key: int) -> None:
+        """A replica commit failed while the op already (or concurrently)
+        succeeded at quorum: drop the dead replica from the extent — a
+        reader must never wait on a block that will never land — and feed
+        the rebuild path's per-extent move to restore replication width.
+        A cancelled extent (punched/retired while the straggler was in
+        flight) is never demoted or re-replicated: that would resurrect
+        reclaimed data; if the cancel lands DURING our re-replication, the
+        fresh block is taken back (the free loop snapshotted the key list
+        before we added it, so nobody else will)."""
+        cont = self.container
+        rec = ext.pending
+        if rec is not None:
+            with rec.cv:
+                if rec.cancelled:
+                    return
+        if ext.block_keys.get(dev_name) != key:
+            return                                # already demoted/rebuilt
+        ext.block_keys.pop(dev_name, None)
+        cont.vcache.invalidate_block(dev_name, key)
+        with cont.store._stats_lock:
+            cont.store.stats.replica_demotions += 1
+        try:
+            # never re-replicate onto the device that just failed the
+            # commit — it is suspect even while it still reports alive
+            new_name = self._rereplicate(ext, exclude=(dev_name,))
+        except StorageError:
+            return        # no spare right now: degraded until rebuild runs
+        if rec is not None:
+            with rec.cv:
+                cancelled = rec.cancelled
+            if cancelled:
+                new_key = ext.block_keys.pop(new_name, None)
+                if new_key is not None:
+                    cont.vcache.invalidate_block(new_name, new_key)
+                    dev = cont.store.device(new_name)
+                    if dev is not None:
+                        dev.delete(new_key)
+
+    def _rereplicate(self, ext: Extent, salt: int = 0,
+                     exclude: Sequence[str] = ()) -> str:
+        """Copy one extent onto a spare device from a verified surviving
+        replica (shared by rebuild and post-ack demotion). Candidates that
+        fail the write are skipped for the next spare. Returns the chosen
+        device name; raises StorageError when no spare accepts."""
+        cont = self.container
+        data = self._read_extent(ext, verify=True, cache=False)
+        candidates = [d for d in cont.store.devices
+                      if d.alive and d.name not in ext.block_keys
+                      and d.name not in exclude]
+        if not candidates:
+            raise StorageError("no spare target for rebuild")
+        start = (ext.csum + salt) % len(candidates)
+        last_err: Optional[Exception] = None
+        for i in range(len(candidates)):
+            dev = candidates[(start + i) % len(candidates)]
+            key = cont.store.new_block_key()
+            try:
+                dev.write(key, data)
+            except Exception as e:
+                last_err = e
+                continue
+            ext.block_keys[dev.name] = key
+            return dev.name
+        raise StorageError(f"no spare accepted the rebuild write: {last_err}")
+
     # -- read ----------------------------------------------------------------
     def fetch(self, dkey: str, akey: str, offset: int, size: int,
               epoch: Optional[int] = None, verify: bool = True) -> bytes:
@@ -220,32 +491,56 @@ class DAOSObject:
                    verify: bool = True) -> int:
         """Fill a caller-provided buffer (np.uint8 array / bytearray /
         writable memoryview) with the extent overlay — no intermediate
-        `bytes(size)` materialization. Returns `size`.
+        `bytes(size)` materialization. Returns `size`."""
+        dst = (out if isinstance(out, np.ndarray)
+               else np.frombuffer(out, np.uint8))
+        view = dst[out_off:out_off + size]
+        return self.fetch_scatter(dkey, akey, offset, size,
+                                  [(view, 0, size)],
+                                  epoch=epoch, verify=verify)
+
+    def fetch_scatter(self, dkey: str, akey: str, offset: int, size: int,
+                      dsts: Sequence[Tuple[np.ndarray, int, int]],
+                      epoch: Optional[int] = None,
+                      verify: bool = True) -> int:
+        """Scatter the extent overlay for [offset, offset+size) STRAIGHT
+        into caller-provided destination spans — the direct-splice read
+        path: no staging bounce exists between the verified replica bytes
+        and the caller's (registered) memory. `dsts` is [(view, lo, hi)]
+        where [lo, hi) are range-relative byte coordinates covering
+        [0, size) and `view` is a writable uint8 view of length hi-lo
+        (e.g. the views a transport `place_sg` handed back). Checksum
+        verification runs per replica read, with the verified-extent cache
+        intact, exactly as on the staged path. Returns `size`.
 
         If a concurrent writer aggregates away an extent from our snapshot
         (its device blocks reclaimed after the grace window), the read
         restarts on a fresh snapshot — the superseding extent is newer than
         ours, so the retry observes a consistent, more recent state."""
-        dst = (out if isinstance(out, np.ndarray)
-               else np.frombuffer(out, np.uint8))
-        view = dst[out_off:out_off + size]
         for attempt in range(8):
             with self._lock:
                 exts = list(self._extents.get((dkey, akey), ()))
-            view[:] = 0                 # holes read as zeros
+            for view, lo, hi in dsts:
+                view[:hi - lo] = 0      # holes read as zeros
             try:
                 # epoch-sorted at insert: newer writes overlay older
                 for ext in exts:
                     if epoch is not None and ext.epoch > epoch:
                         continue
-                    lo = max(offset, ext.offset)
-                    hi = min(offset + size, ext.offset + ext.size)
-                    if lo >= hi:
+                    elo = max(offset, ext.offset) - offset
+                    ehi = min(offset + size, ext.offset + ext.size) - offset
+                    if elo >= ehi:
                         continue
-                    data = self._read_extent(ext, verify)
-                    src = memoryview(data)[lo - ext.offset:hi - ext.offset]
-                    view[lo - offset:hi - offset] = np.frombuffer(src,
-                                                                  np.uint8)
+                    src: Optional[memoryview] = None
+                    for view, lo, hi in dsts:
+                        s0, s1 = max(elo, lo), min(ehi, hi)
+                        if s0 >= s1:
+                            continue
+                        if src is None:         # one replica read per extent
+                            src = memoryview(self._read_extent(ext, verify))
+                        span = src[s0 + offset - ext.offset:
+                                   s1 + offset - ext.offset]
+                        view[s0 - lo:s1 - lo] = np.frombuffer(span, np.uint8)
                 return size
             except StorageError:
                 with self._lock:
@@ -265,7 +560,9 @@ class DAOSObject:
         cont = self.container
         store = cont.store
         last_err: Optional[Exception] = None
-        for name, key in ext.block_keys.items():
+        # snapshot: a post-ack demotion/re-replication may mutate the
+        # replica map concurrently from a commit-pool worker
+        for name, key in list(ext.block_keys.items()):
             dev = store.device(name)
             if dev is None or not dev.alive:
                 continue
@@ -300,8 +597,13 @@ class DAOSObject:
     def _free_extent(self, ext: Extent) -> int:
         """Release an extent's replica blocks back to media (verified-cache
         entries dropped first: a stale entry must never vouch for a freed
-        block key if it were ever reused). Returns logical bytes freed."""
-        for name, key in ext.block_keys.items():
+        block key if it were ever reused). An in-flight background commit
+        is cancelled first, so a straggler replica landing after the free
+        deletes its own block instead of resurrecting the extent.
+        Returns logical bytes freed."""
+        if ext.pending is not None:
+            ext.pending.cancel()
+        for name, key in list(ext.block_keys.items()):
             self.container.vcache.invalidate_block(name, key)
             dev = self.container.store.device(name)
             if dev is not None:
@@ -339,7 +641,7 @@ class DAOSObject:
                                                 cache=False))[:keep]
             payload = bytes(data)
             keys: Dict[str, int] = {}
-            for name in ext.block_keys:
+            for name in list(ext.block_keys):
                 dev = cont.store.device(name)
                 if dev is None or not dev.alive:
                     continue
@@ -385,20 +687,12 @@ class DAOSObject:
         for ext in all_exts:
             if failed not in ext.block_keys:
                 continue
-            # bypass the verified cache: rebuild re-verifies the replica it
-            # copies from, and the failed device's entries are dropped
-            data = self._read_extent(ext, verify=True, cache=False)
-            candidates = [d for d in cont.store.devices
-                          if d.alive and d.name not in ext.block_keys]
-            if not candidates:
-                raise StorageError("no spare target for rebuild")
-            dev = candidates[(ext.csum + moved) % len(candidates)]
-            key = cont.store.new_block_key()
-            dev.write(key, data)
             old_key = ext.block_keys.pop(failed, None)
             if old_key is not None:
                 cont.vcache.invalidate_block(failed, old_key)
-            ext.block_keys[dev.name] = key
+            # bypass the verified cache: rebuild re-verifies the replica it
+            # copies from, and the failed device's entries are dropped
+            self._rereplicate(ext, salt=moved)
             moved += 1
         return moved
 
@@ -413,16 +707,26 @@ class Container:
     default for the bare engine primitive (every read verifies, the seed
     semantics): the cache is only honest when something runs a
     MediaScrubber against the store, which ROS2Client wires up when it
-    opts in."""
+    opts in.
+
+    `write_quorum` is the replica-ack threshold for quorum writes: None
+    (default) means majority of an extent's replicas — with replication 2
+    that is both replicas, preserving the seed's wait-for-all semantics;
+    with replication 3 a write returns at 2 and the straggler lands in the
+    background. Pass an explicit int (capped at the replica count) to
+    widen or narrow it; `write_quorum=replication` restores full fan-out
+    latency for comparison."""
 
     AGGREGATE_GRACE_EPOCHS = 4
 
     def __init__(self, name: str, pool: "Pool", replication: int = 2,
-                 aggregate: bool = False, verified_cache: bool = False):
+                 aggregate: bool = False, verified_cache: bool = False,
+                 write_quorum: Optional[int] = None):
         self.name = name
         self.pool = pool
         self.store = pool.store
         self.replication = max(1, min(replication, len(self.store.devices)))
+        self.write_quorum = write_quorum
         self.aggregate = aggregate
         self.vcache = VerifiedExtentCache(self.store.stats,
                                          enabled=verified_cache)
@@ -438,6 +742,13 @@ class Container:
             self._epoch_now = next(self._epoch)
             return self._epoch_now
 
+    def commit_quorum(self, n_targets: int) -> int:
+        """Replica-ack threshold for an extent with `n_targets` replicas:
+        the configured write_quorum (capped) or a majority."""
+        q = self.write_quorum if self.write_quorum is not None \
+            else n_targets // 2 + 1
+        return max(1, min(n_targets, q))
+
     def retire_extents(self, epoch: int, extents: List[Extent]) -> None:
         """Queue superseded extents; free their device blocks once the
         grace window has passed (in-flight snapshot readers drain first).
@@ -446,7 +757,7 @@ class Container:
         extent, even during the grace window."""
         grace = self.AGGREGATE_GRACE_EPOCHS
         for ext in extents:
-            for name, key in ext.block_keys.items():
+            for name, key in list(ext.block_keys.items()):
                 self.vcache.invalidate_block(name, key)
         with self._lock:
             self._retired.extend((epoch, e) for e in extents)
@@ -454,7 +765,9 @@ class Container:
             self._retired = [(ep, e) for ep, e in self._retired
                              if ep > epoch - grace]
         for ext in ready:
-            for name, key in ext.block_keys.items():
+            if ext.pending is not None:     # straggler commits must not
+                ext.pending.cancel()        # resurrect a reclaimed extent
+            for name, key in list(ext.block_keys.items()):
                 dev = self.store.device(name)
                 if dev is not None:
                     dev.delete(key)
@@ -505,9 +818,11 @@ class Pool:
 
     def create_container(self, name: str, replication: int = 2,
                          aggregate: bool = False,
-                         verified_cache: bool = False) -> Container:
+                         verified_cache: bool = False,
+                         write_quorum: Optional[int] = None) -> Container:
         c = Container(name, self, replication, aggregate=aggregate,
-                      verified_cache=verified_cache)
+                      verified_cache=verified_cache,
+                      write_quorum=write_quorum)
         self.containers[name] = c
         return c
 
@@ -529,6 +844,26 @@ class ObjectStore:
         self.csum = csum or checksum
         self.stats = EngineStats()
         self._stats_lock = threading.Lock()
+        self._commit_pool: Optional[ThreadPoolExecutor] = None
+        self._commit_pool_lock = threading.Lock()
+
+    @property
+    def commit_pool(self) -> ThreadPoolExecutor:
+        """Shared replica-commit pool (quorum-ack write fan-out): sized so
+        every replica of a staging-ring-wide batch can be in flight on
+        media at once."""
+        with self._commit_pool_lock:
+            if self._commit_pool is None:
+                self._commit_pool = ThreadPoolExecutor(
+                    max_workers=max(4, 2 * len(self.devices)),
+                    thread_name_prefix="replica-commit")
+            return self._commit_pool
+
+    def close(self) -> None:
+        with self._commit_pool_lock:
+            pool, self._commit_pool = self._commit_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     def containers(self) -> List[Container]:
         return [c for p in self.pools.values()
@@ -572,14 +907,79 @@ class MediaScrubber:
     any entry that no longer matches — the next foreground read then takes
     the verify-miss path and reroutes to a clean replica. Run it
     synchronously (`scrub_once`, tests/benchmarks) or as a daemon thread
-    (`start(interval_s)`)."""
+    (`start(interval_s)`).
 
-    def __init__(self, store: ObjectStore, budget_bytes: int = 32 << 20):
+    With `idle_aware=True` the paced cycles tie their budget to device
+    idle time: each cycle samples the array's recent busy-time fraction
+    (per-device bytes over the same `MediaPerf` bandwidth constants the
+    MVA stations use) and squeezes the byte budget linearly to ZERO at
+    `util_threshold` — background re-verification only spends media
+    bandwidth the foreground provably is not using, so scrubbing is free
+    on loaded runs. Starvation is bounded: after `max_deferrals`
+    consecutive skipped cycles a cycle runs anyway at `floor_frac` of the
+    budget, so sustained load degrades the re-verification RATE but never
+    unbounds the silent-corruption window the cache's honesty depends on.
+    Direct `scrub_once()` calls stay unconditional (deterministic
+    tests/benchmarks)."""
+
+    def __init__(self, store: ObjectStore, budget_bytes: int = 32 << 20,
+                 idle_aware: bool = False, util_threshold: float = 0.5,
+                 max_deferrals: int = 8, floor_frac: float = 0.25,
+                 clock: Callable[[], float] = time.monotonic):
         self.store = store
         self.budget_bytes = int(budget_bytes)
+        self.idle_aware = idle_aware
+        self.util_threshold = float(util_threshold)
+        self.max_deferrals = int(max_deferrals)
+        self.floor_frac = float(floor_frac)
+        self.clock = clock
+        self.deferred_cycles = 0         # paced cycles skipped under load
+        self._consecutive_deferrals = 0
+        self._last_sample: Optional[Tuple[float, float]] = None
         self._cursor: Dict[int, int] = {}     # id(container) -> position
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+
+    # -- idle pacing ---------------------------------------------------------
+    def device_utilization(self) -> float:
+        """Busy-time fraction of the array since the previous sample: each
+        device's transferred bytes over its modeled read/write bandwidth
+        (MediaPerf — the same constants the MVA stations use), averaged
+        across devices. The first call primes the sampler and reports
+        idle."""
+        now = self.clock()
+        busy = sum(d.bytes_read / d.perf.read_bw
+                   + d.bytes_written / d.perf.write_bw
+                   for d in self.store.devices)
+        last, self._last_sample = self._last_sample, (now, busy)
+        if last is None or now <= last[0]:
+            return 0.0
+        n = max(1, len(self.store.devices))
+        return (busy - last[1]) / ((now - last[0]) * n)
+
+    def idle_budget(self) -> int:
+        """This cycle's byte budget given recent utilization: the full
+        budget when idle, linearly squeezed to zero at util_threshold."""
+        util = self.device_utilization()
+        return int(self.budget_bytes
+                   * max(0.0, 1.0 - util / self.util_threshold))
+
+    def run_paced_cycle(self) -> Dict[str, int]:
+        """One pacing decision + scrub cycle — the body both the host
+        daemon thread and the DPU housekeeping service run."""
+        if self.idle_aware:
+            budget = self.idle_budget()
+            if budget <= 0:
+                if self._consecutive_deferrals < self.max_deferrals:
+                    self._consecutive_deferrals += 1
+                    self.deferred_cycles += 1
+                    return {"scanned_bytes": 0, "revoked": 0, "deferred": 1}
+                # starvation bound: the foreground has pinned the array
+                # for max_deferrals cycles — scrub a floor anyway
+                budget = max(1, int(self.budget_bytes * self.floor_frac))
+            self._consecutive_deferrals = 0
+            return self.scrub_once(budget)
+        return self.scrub_once()
 
     def scrub_once(self, budget_bytes: Optional[int] = None) -> Dict[str, int]:
         budget = self.budget_bytes if budget_bytes is None else budget_bytes
@@ -622,7 +1022,7 @@ class MediaScrubber:
 
         def loop():
             while not self._stop.wait(interval_s):
-                self.scrub_once()
+                self.run_paced_cycle()
 
         self._thread = threading.Thread(target=loop, name="media-scrub",
                                         daemon=True)

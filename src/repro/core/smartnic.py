@@ -8,6 +8,14 @@ Functional model: a pool of worker threads ("Arm cores", 16 by default)
 consumes SQEs from a bounded ring, executes DFS ops (including transport
 and optional inline services: per-tenant encryption + checksum close to the
 NIC), and posts CQEs. Host<->DPU interaction is only ring writes/reads.
+
+SQEs carry whole descriptor lists where the op is vectored: the
+`read_into_many` op ships [(fd, size, offset, dst_off), ...] in ONE SQE —
+one doorbell, one completion for an entire batched device-direct placement
+(DeviceDirectSink.read_tensors packs a ring slot per SQE this way).
+Background services (`start_housekeeping`) run near-NIC periodic work on
+an Arm core: capability lease renewal and the idle-aware MediaScrubber's
+pacing both ride it in dpu mode.
 """
 from __future__ import annotations
 

@@ -34,14 +34,24 @@ def test_sg_counters_rdma_one_rendezvous_per_preadv():
     assert s.descriptors == 4                    # one per 1 MiB block
     assert s.rendezvous == 1                     # ONE RTS/CTS for the bulk op
     assert s.rkey_resolves == 1                  # first translation only
-    got = c.pread(fd, len(data), 0)              # 1 readv = 1 SG op
+    got = c.pread(fd, len(data), 0)              # 1 direct placement op
     assert got == data
     assert s.sg_ops == 2
+    assert s.placements == 1                     # server-initiated splice
     assert s.descriptors == 8
     assert s.rendezvous == 2                     # still 1 per vectored op
-    assert s.rkey_resolves == 1                  # served from the NIC cache
-    assert s.rkey_cache_hits == 1
+    # the read translated its DESTINATION rkey (a different capability
+    # than the staging rkey): one more resolve, still one per region ever
+    assert s.rkey_resolves == 2
     assert s.copy_bytes == s.bytes_moved         # exactly 1 copy per byte
+    # a second read over the same destination region: every translation
+    # (staging + destination) now comes from the NIC cache
+    dst = c.register_region(len(data))
+    c.pread_into(fd, len(data), 0, dst, 0)
+    c.pread_into(fd, len(data), 0, dst, 0)
+    assert s.rkey_resolves == 3                  # dst region granted once
+    assert s.rkey_cache_hits >= 1
+    assert s.copy_bytes == s.bytes_moved         # STILL 1 copy per byte
     c.close()
 
 
@@ -183,20 +193,20 @@ def test_dpu_16_workers_sustain_4_concurrent_preads():
     fd = c.open("/conc", create=True)
     data = _payload(16 * BLOCK, seed=2)
     c.pwrite(fd, data, 0)
-    # every staged block rendezvouses at a 4-party barrier: if a global
-    # lock serialized the preads, fewer than 4 readers could ever be inside
-    # the staging section at once and the barrier would break (-> IOError)
+    # every direct-splice block fill rendezvouses at a 4-party barrier: if
+    # a global lock serialized the preads, fewer than 4 readers could ever
+    # be inside the engine fill at once and the barrier would break
     barrier = threading.Barrier(4, timeout=60)
-    orig = c.io._fetch_block
+    orig = c.io._fill_direct
 
-    def hooked(obj, oid, b, bo, ln, view):
+    def hooked(obj, oid, b, bo, ln, subs):
         barrier.wait()
-        orig(obj, oid, b, bo, ln, view)
+        orig(obj, oid, b, bo, ln, subs)
 
-    c.io._fetch_block = hooked
+    c.io._fill_direct = hooked
     tags = [c.submit_read(fd, 4 * BLOCK, i * 4 * BLOCK) for i in range(4)]
     done = c.dpu.wait_all(tags, timeout=120)
-    c.io._fetch_block = orig
+    c.io._fill_direct = orig
     for i, tag in enumerate(tags):
         assert done[tag].ok, done[tag].error
         assert done[tag].result == data[i * 4 * BLOCK:(i + 1) * 4 * BLOCK]

@@ -330,11 +330,12 @@ def test_update_many_abort_releases_donated_leases():
     originals = {d.name: d.write for d in c.devices}
 
     def failing_write(dev):
-        def w(key, data, lease=None):
+        def w(key, data, lease=None, pre_pinned=False):
             calls["n"] += 1
             if calls["n"] > 1:
                 raise IOError("injected media failure")
-            return originals[dev.name](key, data, lease=lease)
+            return originals[dev.name](key, data, lease=lease,
+                                       pre_pinned=pre_pinned)
         return w
 
     for d in c.devices:
