@@ -1,7 +1,7 @@
 # Dev workflow targets (see ROADMAP.md "Dev workflow").
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-smoke
+.PHONY: test bench bench-smoke check
 
 test:                 ## tier-1 verify
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -11,3 +11,8 @@ bench:                ## full data-path benchmark -> BENCH_data_path.json
 
 bench-smoke:          ## ~30s gate: fails if zero_copy regresses below sg
 	bash benchmarks/smoke.sh
+
+# check = tier-1 tests + the smoke gate (2-target pool map: data-path,
+# control-path and cluster-routing regressions all fail fast) — run it
+# before landing anything that touches the stack.
+check: test bench-smoke  ## tier-1 tests + smoke gate in one shot

@@ -36,11 +36,22 @@ lease path must do the cycle in ≤ 2 round-trips (legacy: 1 per step, ≥ 4)
 with warm opens at 0, and control bytes must stay < 1 % of data-plane
 bytes; both are hard gates, including under --smoke.
 
+Cluster section (PR 5): a 2-target pool-map run against the 1-target
+baseline — striped sequential reads over per-target data-plane sessions.
+Hard gates: bit-exact roundtrip, BOTH targets serve placements (a routing
+regression collapses the spread and fails), read copies/byte <= 1.0 with
+zero staging acquires on the striped path, and fleet striped-read capacity
+(one target's calibrated network+server+media MVA pipeline multiplied by
+the MEASURED placement spread) >= 1.6x the 1-target run. Under --smoke the
+main sg/zero_copy runs ALSO ride a 2-target pool map, so every existing
+gate (copies/byte, cycle RPCs, warm opens) re-proves on the routed stack.
+
 Run:  PYTHONPATH=src python benchmarks/bench_data_path.py [--out PATH]
       --quick   host/rdma only (all three paths)
-      --smoke   ~30 s regression gate: host/rdma, sg vs zero_copy only,
-                exits non-zero if zero_copy regresses below sg or the
-                control path regresses above the compound baseline
+      --smoke   ~30 s regression gate: host/rdma, sg vs zero_copy only
+                (on a 2-target pool map), exits non-zero if zero_copy
+                regresses below sg, the control path regresses above the
+                compound baseline, or a cluster gate trips
 """
 from __future__ import annotations
 
@@ -54,6 +65,12 @@ import numpy as np
 
 from repro.core.client import ROS2Client
 from repro.core.dfs import BLOCK
+
+try:
+    from benchmarks.common import (delta_counters, flatten_counters,
+                                   merge_counters)
+except ImportError:                  # run as a bare script
+    from common import delta_counters, flatten_counters, merge_counters
 
 MiB = 1 << 20
 SEQ_TOTAL = 64 * MiB
@@ -70,18 +87,11 @@ PATHS = {
 }
 
 
-def _flat(d, prefix=""):
-    out = {}
-    for k, v in d.items():
-        if isinstance(v, dict):
-            out.update(_flat(v, f"{prefix}{k}."))
-        else:
-            out[f"{prefix}{k}"] = v
-    return out
-
-
-def _delta(before, after):
-    return {k: after[k] - before.get(k, 0) for k in after}
+# the counter-shaping helpers live in benchmarks/common.py (one
+# implementation, shared with every other benchmark and — for the fleet
+# merge — with the cluster router itself)
+_flat = flatten_counters
+_delta = delta_counters
 
 
 def _rate(hits, misses):
@@ -90,9 +100,9 @@ def _rate(hits, misses):
 
 
 def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
-               passes: int = SEQ_PASSES) -> dict:
+               passes: int = SEQ_PASSES, n_targets: int = 1) -> dict:
     c = ROS2Client(mode=mode, transport=transport, inline_encryption=enc,
-                   **PATHS[path])
+                   n_targets=n_targets, **PATHS[path])
     fd = c.open("/bench", create=True)
     rng = np.random.default_rng(0)
     data = rng.integers(0, 256, SEQ_TOTAL, dtype=np.uint8).tobytes()
@@ -163,7 +173,7 @@ def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
     csum_done = sc["engine.checksum_bytes"]
     csum_skip = sc["engine.checksum_skipped_bytes"]
     out = {
-        "mode": mode, "transport": transport,
+        "mode": mode, "transport": transport, "n_targets": n_targets,
         "path": path + ("+enc" if enc else ""),
         "seq_write_s": seq_write, "seq_read_s": seq_read,
         "seq_write_steady_s": sw, "seq_read_steady_s": sr,
@@ -281,6 +291,94 @@ def _bench_device_direct(n_tensors: int = 96,
             "host": run("host"), "dpu": run("dpu")}
 
 
+def _bench_cluster(passes: int = 4) -> dict:
+    """Striped sequential reads on a 2-target pool map vs the 1-target
+    baseline (host/rdma). Measures the real routed data path end to end —
+    bit-exact roundtrip, per-target placement spread, one-copy/zero-
+    acquire read gates on the striped path — and reports fleet striped-
+    read capacity: ONE target's calibrated network+server+media pipeline
+    (the same MVA model the paper figures use) multiplied by the MEASURED
+    placement spread (1 / max target share). Perfect striping doubles the
+    fleet's capacity; a routing regression that collapses onto one target
+    leaves it at 1x and FAILS the >= 1.6x gate. (Wall-clock per pass is
+    reported for reference; on a shared 2-core CI host the functional
+    simulator is GIL-bound, so capacity scaling is gated on the
+    calibrated model + measured spread, exactly like figs 3-5.)"""
+    from repro.core import transport_model as tm
+    from repro.core.media import striped_stations
+    from repro.core.sim import mva
+
+    total, chunk = 64 * MiB, 16 * MiB
+    out = {"io_bytes": total, "chunk_bytes": chunk, "gates": []}
+    rng = np.random.default_rng(7)
+    data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+    for n in (1, 2):
+        c = ROS2Client(mode="host", transport="rdma", n_targets=n,
+                       n_devices=2, scrub_interval_s=None)
+        fd = c.open("/stripe", create=True)
+        for off in range(0, total, chunk):
+            c.pwrite(fd, data[off:off + chunk], off)
+        sink = c.register_region(total)
+        before = _flat(c.io.data_path_counters())
+        times = []
+        for _ in range(passes):
+            t0 = time.perf_counter()
+            for off in range(0, total, chunk):
+                c.pread_into(fd, chunk, off, sink, off)
+            times.append(time.perf_counter() - t0)
+        read_delta = _delta(before, _flat(c.io.data_path_counters()))
+        if bytes(sink.buf) != data:
+            out["gates"].append(f"cluster {n}-target striped read roundtrip"
+                                f" mismatch")
+        # placement spread, measured at the per-target transport endpoints
+        sessions = c.io.sessions if n > 1 else {0: c.io}
+        placed = {tid: s.stats.placed_bytes for tid, s in sessions.items()}
+        shares = {tid: p / max(1, sum(placed.values()))
+                  for tid, p in placed.items()}
+        if n > 1 and min(placed.values()) == 0:
+            out["gates"].append(
+                f"cluster routing regression: target placements {placed}")
+        copies = (read_delta["transport.copy_bytes"]
+                  + read_delta["client.host_copy_bytes"]
+                  + read_delta["media.host_copy_bytes"]
+                  + read_delta["staging.bounce_bytes"]) \
+            / max(1, read_delta["transport.bytes_moved"])
+        if copies > 1.0 + 1e-9:
+            out["gates"].append(f"cluster {n}-target striped read "
+                                f"copies/byte {copies:.3f} > 1.0")
+        if read_delta["staging.acquires"] != 0:
+            out["gates"].append(f"cluster {n}-target striped read acquired "
+                                f"{read_delta['staging.acquires']} slots")
+        # fleet capacity: per-target calibrated pipeline x measured spread
+        per_target_devs = c.cluster.targets[0].store.devices
+        st = (tm.network_stations(BLOCK)
+              + tm.server_stations("rdma", BLOCK, False)
+              + striped_stations(per_target_devs, BLOCK, False))
+        x, _ = mva(st, 32)
+        pipeline_bw = x * BLOCK
+        striped_bw = pipeline_bw / max(shares.values())
+        out[f"{n}_target"] = {
+            "wall_read_s": times,
+            "wall_read_MiBps": total / MiB / (sum(times[-2:]) / 2),
+            "placed_bytes_per_target": placed,
+            "placement_shares": shares,
+            "read_copies_per_byte": copies,
+            "read_staging_acquires": read_delta["staging.acquires"],
+            "pipeline_GiBps": pipeline_bw / (1 << 30),
+            "striped_read_GiBps": striped_bw / (1 << 30),
+            "map_version": (c.io.data_path_counters().get("cluster") or
+                            {}).get("map_version", 1),
+        }
+        c.close()
+    out["read_speedup"] = (out["2_target"]["striped_read_GiBps"]
+                           / out["1_target"]["striped_read_GiBps"])
+    if out["read_speedup"] < 1.6:
+        out["gates"].append(
+            f"cluster 2-target striped read {out['read_speedup']:.2f}x "
+            f"< 1.6x the 1-target run")
+    return out
+
+
 def _print_run(r: dict) -> None:
     print(f"{r['mode']:4s}/{r['transport']:4s} {r['path']:13s} "
           f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
@@ -302,10 +400,13 @@ def _check_semantics(runs_by, mode: str, transport: str) -> list:
     if transport == "rdma":
         if sc["transport.rendezvous"] != sc["transport.sg_ops"]:
             fails.append(f"{mode}/rdma rendezvous != sg_ops")
-        # one translation per REGION ever: staging rkey (writes) + the
-        # sink's destination rkey (direct-splice reads)
-        if sc["transport.rkey_resolves"] > 2:
-            fails.append(f"{mode}/rdma rkey_resolves > 2")
+        # one translation per REGION per target session ever: a staging
+        # rkey per target (writes) + the sink's destination rkey per
+        # placing session (direct-splice reads)
+        if sc["transport.rkey_resolves"] > 2 * zc.get("n_targets", 1):
+            fails.append(f"{mode}/rdma rkey_resolves "
+                         f"{sc['transport.rkey_resolves']} > "
+                         f"{2 * zc.get('n_targets', 1)}")
         # the PR-4 tentpole gates: steady-state reads are ONE copy per
         # byte end-to-end with ZERO staging-ring acquires
         if zc["read_copies_per_byte"] > 1.0 + 1e-9:
@@ -365,16 +466,19 @@ def main(argv=None) -> int:
     paths = list(PATHS)
     passes = SEQ_PASSES
     enc_runs = not args.smoke
+    n_targets = 1
     if args.quick or args.smoke:
         combos = [("host", "rdma")]
     if args.smoke:
         paths = ["sg", "zero_copy"]
         passes = 4
+        n_targets = 2   # every existing gate re-proves on a 2-target map
 
     runs = []
     for mode, transport in combos:
         for path in paths:
-            r = _bench_one(mode, transport, path, passes=passes)
+            r = _bench_one(mode, transport, path, passes=passes,
+                           n_targets=n_targets)
             runs.append(r)
             _print_run(r)
     if enc_runs:
@@ -391,6 +495,13 @@ def main(argv=None) -> int:
           f"({quorum['p50_speedup']:.1f}x, "
           f"{quorum['quorum']['quorum_acks']} acks / "
           f"{quorum['quorum']['background_commits']} bg commits)")
+    cluster = _bench_cluster()
+    shares = [round(s, 2) for s in
+              cluster["2_target"]["placement_shares"].values()]
+    print(f"cluster striped read: 1-target "
+          f"{cluster['1_target']['striped_read_GiBps']:.1f} GiB/s -> "
+          f"2-target {cluster['2_target']['striped_read_GiBps']:.1f} GiB/s "
+          f"({cluster['read_speedup']:.2f}x, shares {shares})")
     device_direct = _bench_device_direct()
     for m in ("host", "dpu"):
         dd = device_direct[m]
@@ -457,6 +568,7 @@ def main(argv=None) -> int:
                      f"{dd['batched_tensors_per_s']:.0f} tensors/s below "
                      f"per-tensor baseline "
                      f"{dd['single_tensors_per_s']:.0f}")
+    fails += cluster.pop("gates")        # routing/striping/scaling gates
 
     for f in fails:
         print(f"FAIL: {f}")
@@ -465,6 +577,10 @@ def main(argv=None) -> int:
                "rand_io_bytes": RAND_IO, "rand_ops": RAND_OPS,
                "block_bytes": BLOCK, "runs": runs, "speedups": speedups,
                "quorum": quorum, "device_direct": device_direct,
+               "cluster": cluster,
+               # fleet totals across every run (the shared merge_counters)
+               "counter_totals": merge_counters(
+                   [r["seq_counters"] for r in runs]),
                "failures": fails}
     Path(args.out).write_text(json.dumps(payload, indent=1))
     print(f"wrote {args.out}")

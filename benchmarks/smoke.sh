@@ -1,14 +1,18 @@
 #!/usr/bin/env bash
 # ~30-second data-path regression gate: runs the sg vs zero_copy pair of
-# the data-path bench (host/rdma) and fails if the zero-copy path regresses
-# below the PR-1 scatter-gather path, OR if the control path regresses
-# above the compound+lease baseline (open→pwrite×3→close cycle > 2 RPCs,
-# warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane bytes), OR if
-# a PR-4 one-copy gate trips: read phase must show copies/byte <= 1.0 with
-# ZERO staging-ring acquires (direct splice), quorum-ack write p50 must
-# beat full-fan-out p50 under a straggler replica, and batched
-# device-direct read_tensors must meet the per-tensor baseline (dpu/rdma).
-# Wired into `make bench-smoke`.
+# the data-path bench (host/rdma) — ON A 2-TARGET POOL MAP, so cluster
+# routing regressions fail here too — and fails if the zero-copy path
+# regresses below the PR-1 scatter-gather path, OR if the control path
+# regresses above the compound+lease baseline (open→pwrite×3→close cycle
+# > 2 RPCs, warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane
+# bytes), OR if a PR-4 one-copy gate trips: read phase must show
+# copies/byte <= 1.0 with ZERO staging-ring acquires (direct splice),
+# quorum-ack write p50 must beat full-fan-out p50 under a straggler
+# replica, and batched device-direct read_tensors must meet the per-tensor
+# baseline (dpu/rdma). The PR-5 cluster section then gates striped reads:
+# bit-exact roundtrip, both targets serving placements, and 2-target
+# striped read capacity >= 1.6x the 1-target run (calibrated pipeline x
+# measured placement spread). Wired into `make bench-smoke` / `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

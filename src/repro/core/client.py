@@ -70,8 +70,9 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,9 +85,30 @@ from repro.core.dfs import (AKEY, BLOCK, DFSClient, DFSError, DFSMeta,
 from repro.core.metadata_cache import MetadataCache
 from repro.core.media import (Device, crc32_checksum, make_nvme_array,
                               striped_stations)
-from repro.core.object_store import MediaScrubber, ObjectStore
+from repro.core.object_store import (MediaScrubber, ObjectStore,
+                                     StorageCluster, StorageError,
+                                     TargetDownError, placement_order)
 from repro.core.sim import Station, mva
 from repro.core.smartnic import DPURuntime, InlineCrypto
+
+
+def merge_counters(dicts: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Fleet-aware counter merge: sum numeric leaves across a sequence of
+    (possibly nested) counter dicts, recursing into sub-dicts; the first
+    occurrence wins for non-numeric values. This is THE counter-merge used
+    everywhere counters from more than one source meet — the cluster
+    router merging per-target sessions, and the benchmarks merging run
+    deltas (benchmarks/common.py re-exports it)."""
+    out: Dict[str, Any] = {}
+    for d in dicts:
+        for k, v in d.items():
+            if isinstance(v, dict):
+                out[k] = merge_counters([out.get(k, {}), v])
+            elif isinstance(v, bool) or not isinstance(v, (int, float)):
+                out.setdefault(k, v)
+            else:
+                out[k] = out.get(k, 0) + v
+    return out
 
 
 class SlotLease:
@@ -254,13 +276,22 @@ class _StagingRing:
 
 
 class _ServerIO:
-    """Transport-aware server I/O adapter used by DFSClient.
+    """ONE engine target's data-plane session (and, for a single-target
+    deployment, the whole transport-aware I/O adapter DFSClient uses).
+    Each session owns its target's staging ring, transport endpoint and
+    rkey grants; a multi-target client runs one per target behind a
+    _ClusterRouter that stripes block ranges across them.
 
     Default path is vectored: `writev`/`read_into` coalesce the
     `split_blocks` output into one scatter-gather transport op per staging
     batch, stage through the per-slot-locked ring (no global lock), and
     commit/fetch through the engine's batched `update_many`/`fetch_into`.
     `legacy=True` preserves the seed per-block path for comparison.
+
+    `target_up` (cluster sessions) is the server-side admission check: an
+    op routed here by a STALE client map while the pool map says this
+    target is down raises TargetDownError before touching any state — the
+    router reacts with one map refresh and a re-route.
 
     Concurrency semantics: with the global lock gone, overlapping reads
     and writes from different callers are NOT atomic against each other —
@@ -275,8 +306,10 @@ class _ServerIO:
                  tenant: str, control: ControlPlane,
                  crypto: Optional[InlineCrypto] = None,
                  n_staging_slots: int = 16, legacy: bool = False,
-                 zero_copy: bool = True):
+                 zero_copy: bool = True,
+                 target_up: Optional[Callable[[], bool]] = None):
         self.container = engine_container
+        self._target_up = target_up
         self.creg = client_registry
         self.sreg = server_registry
         self.tenant = tenant
@@ -345,6 +378,12 @@ class _ServerIO:
         if self.cache is not None and not self.cache.rkey_fresh(tok):
             self.cache.renew_due()
         return tok
+
+    def _admit(self) -> None:
+        """Server-side admission: reject ops a stale client map routed to
+        a target the pool map marks down (one refresh fixes the client)."""
+        if self._target_up is not None and not self._target_up():
+            raise TargetDownError("engine target is down in the pool map")
 
     @property
     def stats(self):
@@ -424,6 +463,7 @@ class _ServerIO:
                 self._write_legacy(oid, pos, b)
                 pos += len(b)
             return pos - offset
+        self._admit()
         arrs = [a if isinstance(a, np.ndarray)
                 else np.frombuffer(bytes(a), np.uint8) for a in buffers]
         arrs = [a for a in arrs if a.size]
@@ -693,6 +733,7 @@ class _ServerIO:
         through the staging ring. A staged block may straddle destination
         boundaries: one SG descriptor per (block, destination) overlap,
         same as writev's source spans."""
+        self._admit()
         if self.direct_reads:
             return self._gather_direct(oid, offset, dsts)
         # destination spans in gather-global byte coordinates (zero-size
@@ -829,6 +870,316 @@ class _ServerIO:
         return out.tobytes()
 
 
+class _ClusterRouter:
+    """Thin client-side router over per-target data-plane sessions.
+
+    The monolithic `_ServerIO` of the single-server stack is now the PER-
+    TARGET session; this router is everything cluster-shaped on the client:
+
+      * placement — the same jump-consistent `placement_order` the server
+        uses, evaluated per 1 MiB block with ZERO per-op metadata lookups;
+        consecutive same-target blocks coalesce into one session call, so
+        a striped `readv_into`/`writev` costs one SG/placement op per
+        contiguous per-target run.
+      * parallel striping — runs for different targets execute
+        concurrently (one pool task per target), which is where the
+        1→N-target sequential-bandwidth scaling comes from.
+      * map lease discipline — the router holds a VERSIONED map snapshot;
+        a server push (or a TargetDownError from a session whose target
+        went down under a stale map) marks it stale, and the next op pays
+        exactly ONE `get_pool_map` refresh then re-routes. Target ADD is
+        discovered the same way; sessions for new targets are built
+        lazily via the owner's factory.
+      * fleet counters — `data_path_counters()` merges every session's
+        transport/engine/media/staging/client counters with the cluster-
+        level stats (cross-target heals, fleet scrubs) via
+        `merge_counters`, plus a `cluster` section (map version/refreshes/
+        retries).
+
+    The API up (write/writev/read/read_into/readv_into/drop_dst_rkey/
+    data_path_counters) is exactly `_ServerIO`'s, so DFS, device-direct
+    sinks and the DPU runtime ride it unchanged."""
+
+    def __init__(self, sessions: Dict[int, _ServerIO], control: ControlPlane,
+                 client_registry: MemoryRegistry, tenant: str,
+                 make_session: Callable[[int], _ServerIO],
+                 cluster_stats: Callable[[], Any],
+                 zero_copy: bool = True):
+        self.sessions = sessions
+        self.cp = control
+        self.creg = client_registry
+        self.tenant = tenant
+        self._make_session = make_session
+        self._cluster_stats = cluster_stats
+        self.zero_copy = zero_copy
+        self._sid: Optional[int] = None
+        self.cache = None
+        self._map_lock = threading.Lock()
+        self._map_version = 0
+        self._tids: List[int] = []
+        self._up: Dict[int, bool] = {}
+        self._map_stale = True
+        self.map_refreshes = 0        # get_pool_map RPCs paid
+        self.map_invalidations = 0    # server pushes received
+        self.target_retries = 0       # ops re-routed after a refresh
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
+
+    # -- session / map lifecycle ---------------------------------------------
+    def attach_session(self, session_id: int,
+                       rkeys: Optional[Dict[int, str]] = None,
+                       rkey_ttl_s: Optional[float] = None,
+                       cache=None, pool_map: Optional[Dict] = None) -> None:
+        """Adopt the compound bring-up's results: the control session, one
+        staging rkey per target, and the pool-map snapshot fetched in the
+        SAME round-trip. Subscribes to map pushes (lease recalls)."""
+        self._sid = session_id
+        self.cache = cache
+        rkeys = rkeys or {}
+        for tid, sess in self.sessions.items():
+            sess.attach_session(session_id, rkeys.get(tid), rkey_ttl_s,
+                                cache)
+        if pool_map is not None:
+            self._adopt(pool_map)
+        self.cp.subscribe_map(session_id, self._on_map_push)
+
+    def _on_map_push(self, version: int) -> None:
+        with self._map_lock:
+            self._map_stale = True
+            self.map_invalidations += 1
+
+    def _adopt(self, m: Dict) -> None:
+        with self._map_lock:
+            self._map_version = m["version"]
+            self._up = {t["target_id"]: t["up"] for t in m["targets"]}
+            self._tids = sorted(self._up)
+            self._map_stale = False
+            missing = [tid for tid in self._tids
+                       if tid not in self.sessions]
+        for tid in missing:           # target ADD: session built lazily
+            self.sessions[tid] = self._make_session(tid)
+
+    def _refresh_map(self) -> None:
+        r = self.cp.rpc("get_pool_map", session_id=self._sid)
+        if not r["ok"]:
+            raise StorageError(f"pool map refresh failed: {r['error']}")
+        self._adopt(r)
+        with self._map_lock:
+            self.map_refreshes += 1
+
+    def _ensure_map(self) -> None:
+        with self._map_lock:
+            stale = self._map_stale or not self._tids
+        if stale:                     # a stale map is ONE refresh, ever
+            self._refresh_map()
+
+    def _route_block(self, oid: int, b: int) -> int:
+        """First UP target in the block's deterministic placement order."""
+        with self._map_lock:
+            tids, up = self._tids, dict(self._up)
+        for idx in placement_order(len(tids), oid, str(b)):
+            tid = tids[idx]
+            if up.get(tid):
+                return tid
+        raise StorageError("no live targets in pool map")
+
+    # -- striped dispatch core -----------------------------------------------
+    def _get_pool(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=8, thread_name_prefix="cluster-router")
+            return self._pool
+
+    @staticmethod
+    def _merge_runs(items: List[Tuple[int, int, list]]) -> List[Tuple[int,
+                                                                      list]]:
+        """Coalesce file-contiguous fragments (already in ascending file
+        order) into single session calls: one SG/placement op per run."""
+        runs: List[List] = []
+        for fo, ln, payload in items:
+            if runs and runs[-1][0] + runs[-1][1] == fo:
+                runs[-1][1] += ln
+                runs[-1][2].extend(payload)
+            else:
+                runs.append([fo, ln, list(payload)])
+        return [(fo, payload) for fo, _ln, payload in runs]
+
+    def _dispatch(self, oid: int, frags: List[Tuple[int, int, int, list]],
+                  call) -> None:
+        """Route block fragments [(block, file_off, len, payload)] to their
+        targets and execute per-target batches — in parallel when the op
+        stripes across more than one target. A TargetDownError (stale map
+        hit a dead target) costs ONE refresh and ONE re-route, not a
+        failure."""
+        self._ensure_map()
+        for attempt in (0, 1):
+            groups: Dict[int, List[Tuple[int, int, list]]] = {}
+            for b, fo, ln, payload in frags:
+                groups.setdefault(self._route_block(oid, b), []).append(
+                    (fo, ln, payload))
+            batches = {tid: self._merge_runs(items)
+                       for tid, items in groups.items()}
+            try:
+                if len(batches) == 1:
+                    (tid, runs), = batches.items()
+                    self._run_batch(tid, oid, runs, call)
+                else:
+                    pool = self._get_pool()
+                    futs = [pool.submit(self._run_batch, tid, oid, runs,
+                                        call)
+                            for tid, runs in batches.items()]
+                    errs = [e for e in (f.exception() for f in futs)
+                            if e is not None]
+                    if errs:
+                        down = next((e for e in errs
+                                     if isinstance(e, TargetDownError)),
+                                    None)
+                        raise down if down is not None else errs[0]
+                return
+            except TargetDownError:
+                if attempt:
+                    raise
+                self._refresh_map()
+                with self._map_lock:
+                    self.target_retries += 1
+
+    def _run_batch(self, tid: int, oid: int, runs, call) -> None:
+        sess = self.sessions[tid]
+        for fo, payload in runs:
+            call(sess, oid, fo, payload)
+
+    # -- vectored write path -------------------------------------------------
+    def write(self, oid: int, offset: int, data) -> None:
+        self.writev(oid, offset, [data])
+
+    def writev(self, oid: int, offset: int, buffers: Sequence) -> int:
+        """Striped scatter-gather write: each 1 MiB block routes to its
+        placement target; per-target runs commit through that target's own
+        session (ring, transport, epoch) concurrently."""
+        arrs = [a if isinstance(a, np.ndarray)
+                else np.frombuffer(bytes(a), np.uint8) for a in buffers]
+        arrs = [a for a in arrs if a.size]
+        total = int(sum(a.size for a in arrs))
+        if total == 0:
+            return 0
+        spans, g = [], 0
+        for a in arrs:
+            spans.append((g, g + a.size, a))
+            g += a.size
+        frags, pos, si = [], 0, 0
+        for b, bo, ln in split_blocks(offset, total):
+            parts = []
+            while si < len(spans) and spans[si][1] <= pos:
+                si += 1
+            j = si
+            while j < len(spans) and spans[j][0] < pos + ln:
+                g0, _g1, a = spans[j]
+                lo, hi = max(pos, spans[j][0]), min(pos + ln, spans[j][1])
+                parts.append(a[lo - g0:hi - g0])
+                j += 1
+            frags.append((b, b * BLOCK + bo, ln, parts))
+            pos += ln
+        self._dispatch(oid, frags,
+                       lambda s, o, fo, bufs: s.writev(o, fo, bufs))
+        return total
+
+    # -- vectored read path --------------------------------------------------
+    @property
+    def supports_readv_into(self) -> bool:
+        return self.zero_copy
+
+    def _gather_into(self, oid: int, offset: int, dsts: Sequence) -> int:
+        spans, g = [], 0
+        for mr, moff, sz in dsts:
+            if sz > 0:
+                spans.append((g, g + sz, mr, moff))
+            g += sz
+        size = g
+        if size == 0:
+            return 0
+        frags, pos, si = [], 0, 0
+        for b, bo, ln in split_blocks(offset, size):
+            subs = []
+            while si < len(spans) and spans[si][1] <= pos:
+                si += 1
+            j = si
+            while j < len(spans) and spans[j][0] < pos + ln:
+                g0, _g1, mr, moff = spans[j]
+                lo, hi = max(pos, spans[j][0]), min(pos + ln, spans[j][1])
+                subs.append((mr, moff + lo - g0, hi - lo))
+                j += 1
+            frags.append((b, b * BLOCK + bo, ln, subs))
+            pos += ln
+        self._dispatch(oid, frags,
+                       lambda s, o, fo, d: s._gather_into(o, fo, d))
+        return size
+
+    def read_into(self, oid: int, offset: int, size: int,
+                  dst_mr: MemoryRegion, dst_off: int = 0) -> int:
+        return self._gather_into(oid, offset, [(dst_mr, dst_off, size)])
+
+    def readv_into(self, oid: int, offset: int, bufs: Sequence) -> int:
+        mrs = [self.creg.register(b, self.tenant) for b in bufs]
+        try:
+            return self._gather_into(
+                oid, offset, [(mr, 0, mr.size) for mr in mrs])
+        finally:
+            for mr in mrs:
+                self.drop_dst_rkey(mr)
+                self.creg.deregister(mr)
+
+    def read(self, oid: int, offset: int, size: int) -> bytes:
+        dst = self.creg.register(np.empty(size, np.uint8), self.tenant)
+        try:
+            self.read_into(oid, offset, size, dst, 0)
+            return dst.buf.tobytes()
+        finally:
+            self.drop_dst_rkey(dst)
+            self.creg.deregister(dst)
+
+    def drop_dst_rkey(self, mr: MemoryRegion) -> None:
+        """Retire the destination capability on EVERY target session (each
+        grants its own placement rkey on the shared client region)."""
+        for sess in list(self.sessions.values()):
+            sess.drop_dst_rkey(mr)
+
+    # -- fleet-wide counters -------------------------------------------------
+    def data_path_counters(self) -> Dict[str, Any]:
+        """Every per-target session's counters merged fleet-wide (the
+        shared `merge_counters`), the singleton subsystems (control, meta
+        cache, crypto) counted ONCE, plus the router's own `cluster`
+        section."""
+        from dataclasses import asdict
+        per = [s.data_path_counters()
+               for _tid, s in sorted(self.sessions.items())]
+        out = {k: merge_counters([p[k] for p in per])
+               for k in ("transport", "engine", "media", "client",
+                         "staging")}
+        out["engine"] = merge_counters([out["engine"],
+                                        asdict(self._cluster_stats())])
+        out["control"] = per[0]["control"]
+        for k in ("meta_cache", "crypto"):
+            if k in per[0]:
+                out[k] = per[0][k]
+        with self._map_lock:
+            out["cluster"] = {
+                "targets": len(self._tids),
+                "targets_up": sum(1 for u in self._up.values() if u),
+                "map_version": self._map_version,
+                "map_refreshes": self.map_refreshes,
+                "map_invalidations": self.map_invalidations,
+                "target_retries": self.target_retries,
+            }
+        return out
+
+    def close(self) -> None:
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+
 class ROS2Client:
     def __init__(self, mode: str = "host", transport: str = "rdma",
                  n_devices: int = 4, tenant: str = "default",
@@ -841,33 +1192,59 @@ class ROS2Client:
                  rkey_ttl_s: float = 3600.0,
                  meta_lease_s: float = 30.0,
                  lease_skew: float = 0.25,
-                 renew_interval_s: Optional[float] = None):
+                 renew_interval_s: Optional[float] = None,
+                 n_targets: int = 1,
+                 hedge_timeout_s: Optional[float] = None):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
+        assert n_targets >= 1
+        assert n_targets == 1 or not legacy, \
+            "the seed legacy path is single-target only"
         self.mode, self.transport = mode, transport
         zero_copy = zero_copy and not legacy
         self.zero_copy = zero_copy
-        # ---- storage server ----
-        self.devices = make_nvme_array(n_devices)
-        # legacy reproduces the full seed data path, scalar CRC included
-        self.store = ObjectStore(self.devices,
-                                 csum=crc32_checksum if legacy else None)
-        pool = self.store.create_pool("pool0")
+        self.legacy = legacy
+        self.tenant = tenant
+        self._n_staging_slots = n_staging_slots
+        self._rkey_ttl_s = rkey_ttl_s
+        # ---- storage cluster: N unchanged engines behind a pool map ----
+        # (n_targets=1 is the seed shape — one engine, and `self.io` IS the
+        # single _ServerIO session; n_targets>1 routes through the striped
+        # _ClusterRouter with one session per target)
+        self.cluster = StorageCluster(
+            n_targets=n_targets, n_devices=n_devices,
+            csum=crc32_checksum if legacy else None)
+        for t in self.cluster.targets:
+            # extent-level hedged reads (None = off): _read_extent races
+            # the second replica when the primary exceeds the budget
+            t.store.hedge_timeout_s = hedge_timeout_s
+        # single-target aliases (the seed names; target 0 == "the engine")
+        self.store = self.cluster.targets[0].store
+        self.devices = self.store.devices
+        pool = self.cluster.create_pool("pool0")
         # DFS reads never pin historical epochs, so the vectored client runs
         # with epoch aggregation on; legacy keeps seed full-history extents.
         # zero_copy=False also pins the PR-1 verify-every-read engine.
-        self.container = pool.create_container("cont0",
-                                               replication=replication,
-                                               aggregate=not legacy,
-                                               verified_cache=zero_copy,
-                                               write_quorum=write_quorum)
+        self.ccontainer = pool.create_container("cont0",
+                                                replication=replication,
+                                                aggregate=not legacy,
+                                                verified_cache=zero_copy,
+                                                write_quorum=write_quorum)
+        self.container = self.ccontainer.target(0)
         # idle-aware: the paced scrub cycles spend only media bandwidth the
-        # foreground provably leaves on the table (free on loaded runs)
-        self.scrubber = MediaScrubber(self.store, idle_aware=True)
-        self.server_registry = MemoryRegistry("server")
-        self.control = ControlPlane(self.store, self.server_registry,
-                                    tenants={tenant: secret},
-                                    meta_lease_s=meta_lease_s)
-        self.meta = DFSMeta(self.store)
+        # foreground provably leaves on the table (free on loaded runs).
+        # Multi-target scrubbing runs against the cluster facade (every
+        # target's verified cache under one budget).
+        self.scrubber = MediaScrubber(
+            self.store if n_targets == 1 else self.cluster, idle_aware=True)
+        # one server-side registry (staging ring home) per engine target
+        for t in self.cluster.targets:
+            t.registry = MemoryRegistry(f"server-t{t.target_id}")
+        self.server_registry = self.cluster.targets[0].registry
+        self.control = ControlPlane(
+            self.store if n_targets == 1 else self.cluster,
+            [t.registry for t in self.cluster.targets],
+            tenants={tenant: secret}, meta_lease_s=meta_lease_s)
+        self.meta = DFSMeta(self.store if n_targets == 1 else self.cluster)
         self.control.bind_dfs(self.meta)
         # ---- client side (host or DPU) ----
         self.client_registry = MemoryRegistry("dpu" if mode == "dpu"
@@ -877,11 +1254,20 @@ class ROS2Client:
             # zero_copy=False disables the keystream cache too (PR-1 cost)
             crypto = InlineCrypto(0xC0FFEE) if zero_copy \
                 else InlineCrypto(0xC0FFEE, cache_bytes=0)
-        self.io = _ServerIO(self.container, self.client_registry,
-                            self.server_registry, transport, tenant,
-                            self.control, crypto,
-                            n_staging_slots=n_staging_slots, legacy=legacy,
-                            zero_copy=zero_copy)
+        self._crypto = crypto
+        # one data-plane session per target: its own staging ring, rkey
+        # grants and transport endpoint against that target's registry
+        self._sessions: Dict[int, _ServerIO] = {
+            t.target_id: self._new_session(t.target_id)
+            for t in self.cluster.targets}
+        if n_targets == 1:
+            self.io = self._sessions[0]
+        else:
+            self.io = _ClusterRouter(
+                self._sessions, self.control, self.client_registry, tenant,
+                make_session=self._attach_target_session,
+                cluster_stats=lambda: self.cluster.stats,
+                zero_copy=zero_copy)
         # ---- session bring-up ----
         rkey, rkey_ttl = None, None
         if legacy:
@@ -900,28 +1286,46 @@ class ROS2Client:
                                      perms="rw", ttl_s=rkey_ttl_s)
                 rkey = g["rkey"]
             self.cache = None
+            self.io.attach_session(self.session_id, rkey, rkey_ttl,
+                                   self.cache)
         else:
-            # connect + mount + grant_rkey in ONE compound round-trip
+            # connect + mount + one grant_rkey PER TARGET (+ the pool map
+            # for routed clients) in ONE compound round-trip
             ops = [{"method": "connect",
                     "args": {"tenant": tenant, "secret": secret}},
                    {"method": "mount",
                     "args": {"pool": "pool0", "container": "cont0"}}]
+            grant_idx: Dict[int, int] = {}
             if transport == "rdma":
-                ops.append({"method": "grant_rkey",
-                            "args": {"region_id": self.io.staging.region_id,
-                                     "perms": "rw", "ttl_s": rkey_ttl_s}})
+                for tid in sorted(self._sessions):
+                    grant_idx[tid] = len(ops)
+                    ops.append({"method": "grant_rkey", "args": {
+                        "region_id":
+                            self._sessions[tid].staging.region_id,
+                        "perms": "rw", "ttl_s": rkey_ttl_s}})
+            map_idx = None
+            if n_targets > 1:
+                map_idx = len(ops)
+                ops.append({"method": "get_pool_map", "args": {}})
             r = self.control.rpc("compound", ops=ops)
             if r["completed"] < len(ops):
                 raise PermissionError(r["results"][-1]["error"])
             self.session_id = r["session_id"]
             self.cache = MetadataCache(self.control, self.session_id,
                                        skew_margin=lease_skew)
+            rkeys = {tid: r["results"][i]["rkey"]
+                     for tid, i in grant_idx.items()}
             if transport == "rdma":
-                rkey, rkey_ttl = r["results"][2]["rkey"], rkey_ttl_s
-        self.io.attach_session(self.session_id, rkey, rkey_ttl, self.cache)
+                rkey, rkey_ttl = rkeys.get(0), rkey_ttl_s
+            if n_targets == 1:
+                self.io.attach_session(self.session_id, rkey, rkey_ttl,
+                                       self.cache)
+            else:
+                self.io.attach_session(self.session_id, rkeys, rkey_ttl,
+                                       self.cache,
+                                       pool_map=r["results"][map_idx])
         self.dfs = DFSClient(self.control, self.io, self.session_id,
                              cache=self.cache)
-        self.tenant = tenant
         # lease renewal runs where the client runs: DPU housekeeping on an
         # Arm core in dpu mode, a plain thread on the host
         renew_s = renew_interval_s if renew_interval_s is not None \
@@ -960,6 +1364,64 @@ class ROS2Client:
                                             scrub_interval_s)
             else:
                 self.scrubber.start(interval_s=scrub_interval_s)
+
+    # ---- cluster membership ----
+    def _new_session(self, tid: int) -> _ServerIO:
+        """Build target `tid`'s data-plane session: its container handle,
+        its server registry/transport, its own staging ring — plus the
+        pool-map admission check that turns a stale-routed op into a
+        TargetDownError instead of silent I/O against a dead target."""
+        t = self.cluster.targets[tid]
+        return _ServerIO(self.ccontainer.target(tid), self.client_registry,
+                         t.registry, self.transport, self.tenant,
+                         self.control, self._crypto,
+                         n_staging_slots=self._n_staging_slots,
+                         legacy=self.legacy, zero_copy=self.zero_copy,
+                         target_up=lambda tid=tid:
+                             self.cluster.pool_map.is_up(tid))
+
+    def _attach_target_session(self, tid: int) -> _ServerIO:
+        """Router factory for a target discovered on a map refresh
+        (runtime target ADD): build the session, grant its staging rkey
+        (one RPC — the target did not exist at bring-up), attach."""
+        sess = self._new_session(tid)
+        rkey, ttl = None, None
+        if self.transport == "rdma":
+            g = self.control.rpc("grant_rkey", session_id=self.session_id,
+                                 region_id=sess.staging.region_id,
+                                 perms="rw", ttl_s=self._rkey_ttl_s)
+            if not g["ok"]:
+                raise PermissionError(g["error"])
+            rkey, ttl = g["rkey"], self._rkey_ttl_s
+        sess.attach_session(self.session_id, rkey, ttl, self.cache)
+        return sess
+
+    def add_target(self, n_devices: Optional[int] = None) -> int:
+        """Grow the fleet by one engine target. The pool map bumps and is
+        pushed to routed clients; jump-consistent placement moves only
+        ~1/(n+1) of the keys onto the newcomer (rebalanced onto it by the
+        add). Returns the target id.
+
+        Requires a ROUTED client (n_targets >= 2 at construction): a
+        single-target client's `io` is the bare _ServerIO pinned to target
+        0, so the rebalance would migrate blocks it can never route to."""
+        if not isinstance(self.io, _ClusterRouter):
+            raise RuntimeError(
+                "add_target requires a routed client — construct "
+                "ROS2Client(n_targets=2+) to grow the fleet at runtime")
+        t = self.cluster.add_target(n_devices)
+        t.registry = MemoryRegistry(f"server-t{t.target_id}")
+        self.control.add_registry(t.registry)
+        return t.target_id
+
+    def configure_hedged_reads(self,
+                               timeout_s: Optional[float]) -> None:
+        """Set (or clear, with None) the fleet-wide extent-read hedge
+        budget: a replica read exceeding it races the second replica
+        inside the engine's `_read_extent` (counted per extent in
+        engine.hedges_issued/hedges_won)."""
+        for t in self.cluster.targets:
+            t.store.hedge_timeout_s = timeout_s
 
     # ---- POSIX-ish sync API (host launches; DPU executes in dpu mode) ----
     def _dpu_call(self, op: str, _timeout: float = 120.0, **args):
@@ -1082,20 +1544,30 @@ class ROS2Client:
         self.scrubber.stop()
         if self.dpu:
             self.dpu.stop()
-        self.store.close()     # drain background replica commits
+        if isinstance(self.io, _ClusterRouter):
+            self.io.close()
+        self.cluster.close()   # drain background replica commits fleet-wide
 
     # ---- calibrated performance model ----
     def stations(self, io_size: int, write: bool,
                  client_cores: Optional[int] = None,
                  server_cores: int = tm.SRV_CORES_DEFAULT) -> List[Station]:
+        """One client's service-demand pipeline. Multi-target clients
+        stripe across every engine's cores and devices (server CPU and
+        media capacity scale with the fleet); the network station stays a
+        single link — one client cannot exceed its own NIC, which is
+        exactly why fleet-capacity numbers (bench_data_path's `cluster`
+        section) multiply the per-target pipeline by the placement spread
+        instead of modeling one giant client."""
         plat = tm.DPU if self.mode == "dpu" else tm.HOST
         cores = client_cores or plat.n_cores
+        n_targets = len(self.cluster.targets)
         return (tm.client_stations(plat, self.transport, io_size, write,
                                    cores)
                 + tm.network_stations(io_size)
                 + tm.server_stations(self.transport, io_size, write,
-                                     server_cores)
-                + striped_stations(self.devices, io_size, write))
+                                     server_cores * n_targets)
+                + striped_stations(self.cluster.devices, io_size, write))
 
     def model_throughput(self, io_size: int, write: bool, jobs: int,
                          iodepth: int = 8, **kw) -> float:

@@ -16,6 +16,15 @@ the server pushes invalidations to OTHER sessions' caches on `create`/
 `unlink`/`set_size`/`truncate` so delegated entries never go stale, and
 `renew_rkey` extends a capability's expiry in place (the data plane keeps
 validating expiry on every access — renewal is what makes long runs safe).
+
+Cluster control (PR 5): when the backing store is a StorageCluster, the
+service owns ONE registry per engine target (grant/renew/revoke address
+regions and tokens across all of them — region ids are globally unique),
+serves the versioned pool map via `get_pool_map` (a compound-friendly op:
+session bring-up fetches the map in the same round-trip as connect +
+mount + the per-target rkey grants), and subscribes to the map so every
+version bump is PUSHED to routed clients lease-recall-style — a client
+with a stale map performs one refresh, not a failed op retry loop.
 """
 from __future__ import annotations
 
@@ -23,9 +32,9 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.data_plane import AccessError, MemoryRegistry
+from repro.core.data_plane import AccessError, MemoryRegion, MemoryRegistry
 from repro.core.object_store import ObjectStore
 
 META_LEASE_S = 30.0          # default namespace-entry delegation TTL
@@ -43,11 +52,17 @@ class ControlPlane:
     """Server-side control-plane service. Call via `rpc(method, **payload)`
     to mimic a gRPC channel; every call is counted."""
 
-    def __init__(self, store: ObjectStore, registry: MemoryRegistry,
+    def __init__(self, store, registry,
                  tenants: Optional[Dict[str, str]] = None,
                  meta_lease_s: float = META_LEASE_S):
-        self.store = store
-        self.registry = registry
+        self.store = store            # ObjectStore or StorageCluster
+        # one registry per engine target (a single registry — the seed
+        # shape — is the 1-target special case); region ids are globally
+        # unique, so grant/renew/revoke address across all of them
+        self.registries: List[MemoryRegistry] = \
+            list(registry) if isinstance(registry, (list, tuple)) \
+            else [registry]
+        self.registry = self.registries[0]
         self.tenants = tenants or {"default": "secret"}
         self.meta_lease_s = float(meta_lease_s)
         self._sessions: Dict[int, Session] = {}
@@ -59,10 +74,37 @@ class ControlPlane:
         self._sessions_lock = threading.Lock()
         # session_id -> cache-invalidation push channel (MetadataCache hook)
         self._subs: Dict[int, Callable[[str], None]] = {}
+        # session_id -> pool-map recall channel (cluster router hook)
+        self._map_subs: Dict[int, Callable[[int], None]] = {}
         self.rpc_count = 0
         self.rpc_bytes = 0
         self.compound_ops = 0           # ops carried inside compound RPCs
         self.invalidations_sent = 0     # server->client lease recalls
+        if hasattr(store, "pool_map"):  # cluster: push every map bump
+            store.pool_map.subscribe(self._push_pool_map)
+
+    def add_registry(self, registry: MemoryRegistry) -> None:
+        """A new engine target joined: its server registry becomes
+        grantable (runtime target add)."""
+        self.registries.append(registry)
+
+    def _find_region(self, region_id: int
+                     ) -> Optional[Tuple[MemoryRegistry, MemoryRegion]]:
+        """The (owning registry, region) for a globally-unique region id —
+        a grant must be issued by the registry the target's transport
+        resolves against, not just any registry that knows the id."""
+        for reg in self.registries:
+            mr = reg._regions.get(region_id)
+            if mr is not None:
+                return reg, mr
+        return None
+
+    def _find_rkey(self, token: str) -> Optional[Tuple[MemoryRegistry, Any]]:
+        for reg in self.registries:
+            rk = reg._rkeys.get(token)
+            if rk is not None:
+                return reg, rk
+        return None
 
     # -- transport shim ------------------------------------------------------
     def rpc(self, method: str, **payload) -> Dict[str, Any]:
@@ -147,7 +189,43 @@ class ControlPlane:
         with self._sessions_lock:
             self._sessions.pop(session_id, None)
             self._subs.pop(session_id, None)
+            self._map_subs.pop(session_id, None)
         return {}
+
+    # -- pool map (cluster routing state) ------------------------------------
+    def rpc_get_pool_map(self, session_id: int):
+        """The versioned pool map: target list with up/down state plus the
+        per-container redundancy class — everything a client needs to
+        place ops algorithmically with zero per-op metadata lookups. One
+        refresh after an invalidation (or a TargetDownError trip) brings a
+        stale router current; a single-engine deployment serves the
+        degenerate one-target map."""
+        self._session(session_id)
+        if hasattr(self.store, "pool_map"):
+            out = self.store.pool_map.describe()
+        else:
+            out = {"version": 1,
+                   "targets": [{"target_id": 0, "up": True}],
+                   "redundancy": {}}
+        out["lease_ttl_s"] = self.meta_lease_s
+        return out
+
+    def subscribe_map(self, session_id: int,
+                      callback: Callable[[int], None]) -> None:
+        """Register a routed client for pool-map version pushes (the map's
+        lease-recall channel). Dropped automatically on disconnect."""
+        with self._sessions_lock:
+            self._map_subs[session_id] = callback
+
+    def _push_pool_map(self, version: int) -> None:
+        """Recall every routed client's cached map: the next op performs
+        ONE get_pool_map refresh instead of failing into a dead target."""
+        with self._sessions_lock:
+            subs = list(self._map_subs.values())
+        for cb in subs:
+            with self._lock:
+                self.invalidations_sent += 1
+            cb(version)
 
     # -- lease push channel (MetadataCache registration; not an RPC) ---------
     def subscribe(self, session_id: int,
@@ -172,12 +250,13 @@ class ControlPlane:
     def rpc_grant_rkey(self, session_id: int, region_id: int,
                        perms: str = "rw", ttl_s: float = 3600.0):
         s = self._session(session_id)
-        mr = self.registry._regions.get(region_id)
-        if mr is None:
+        found = self._find_region(region_id)
+        if found is None:
             raise KeyError(f"no region {region_id}")
+        reg, mr = found
         if mr.tenant != s.tenant:
             raise AccessError("cannot grant rkey across protection domains")
-        rk = self.registry.grant(mr, perms, ttl_s)
+        rk = reg.grant(mr, perms, ttl_s)
         return {"rkey": rk.token, "expires_in": ttl_s}
 
     def rpc_renew_rkey(self, session_id: int, rkey: str,
@@ -187,17 +266,20 @@ class ControlPlane:
         client's job to do before expiry; the data plane still hard-fails
         an expired or revoked key on every access."""
         s = self._session(session_id)
-        rk = self.registry._rkeys.get(rkey)
-        if rk is None:
+        found = self._find_rkey(rkey)
+        if found is None:
             raise KeyError("unknown rkey")
+        reg, rk = found
         if rk.tenant != s.tenant:      # check BEFORE mutating the lease
             raise AccessError("cannot renew rkey across protection domains")
-        self.registry.renew(rkey, ttl_s)
+        reg.renew(rkey, ttl_s)
         return {"rkey": rkey, "expires_in": ttl_s}
 
     def rpc_revoke_rkey(self, session_id: int, rkey: str):
         self._session(session_id)
-        self.registry.revoke(rkey)
+        found = self._find_rkey(rkey)
+        if found is not None:
+            found[0].revoke(rkey)
         return {}
 
     # -- namespace (delegated to DFS metadata) ------------------------------

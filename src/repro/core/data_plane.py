@@ -35,6 +35,7 @@ come from the MVA model (core/sim.py), not wall-clock.
 """
 from __future__ import annotations
 
+import itertools
 import secrets
 import threading
 import time
@@ -73,6 +74,14 @@ class RKey:
     revoked: bool = False
 
 
+# Region ids are unique across EVERY registry in the process (not merely
+# per registry): a multi-target cluster runs one server registry per
+# engine target, and the control plane's grant/renew RPCs address regions
+# by id alone — colliding per-registry counters would let a grant land on
+# the wrong target's region.
+_region_ids = itertools.count(1)
+
+
 class MemoryRegistry:
     """Registered regions + scoped rkeys (one per side of the wire)."""
 
@@ -80,13 +89,10 @@ class MemoryRegistry:
         self.name = name
         self._regions: Dict[int, MemoryRegion] = {}
         self._rkeys: Dict[str, RKey] = {}
-        self._next = 1
         self._lock = threading.Lock()
 
     def register(self, nbytes_or_buf, tenant: str) -> MemoryRegion:
-        with self._lock:
-            rid = self._next
-            self._next += 1
+        rid = next(_region_ids)
         buf = (np.zeros(nbytes_or_buf, np.uint8)
                if isinstance(nbytes_or_buf, int) else nbytes_or_buf)
         mr = MemoryRegion(rid, buf, tenant)

@@ -29,8 +29,11 @@ Two placement shapes:
     across the batch.
 
 The ring registration is persistent: registered once at construction, its
-placement rkey granted once and served from the NIC translation cache for
-every subsequent read. The capability leg is faithful: a revoked or
+placement rkey granted once PER PLACING SESSION and served from the NIC
+translation cache for every subsequent read — on a multi-target client
+the sink rides the cluster router unchanged: each engine target's session
+grants its own capability on the shared ring, block ranges stripe across
+targets, and `close()` retires the capability on every session. The capability leg is faithful: a revoked or
 cross-tenant destination rkey cannot receive a direct splice (tests assert
 it), and `close()` revokes the capability with the registration so a stale
 NIC cache entry can never land bytes in recycled memory. The sink rides

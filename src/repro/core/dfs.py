@@ -4,6 +4,13 @@ Files and directories map to DAOS objects; file data is striped into
 aligned 1 MiB blocks (dkey = block index), directories are name->oid maps.
 Metadata ops travel over the control plane; bulk data over the data plane.
 
+The layer is cluster-transparent (PR 5): on a multi-target client the I/O
+adapter underneath is the striping _ClusterRouter and `DFSMeta` is bound
+to the StorageCluster (whose pools/containers mirror the ObjectStore
+surface), so files stripe across engine targets and metadata ops
+(truncate punch, unlink reclaim) fan out fleet-wide — with ZERO changes
+to anything in this file's API.
+
 Control-path economy (PR 3): DFSClient consults a leased MetadataCache
 (metadata_cache.py) before spending a round-trip — a warm `open` costs
 ZERO control RPCs — and holds a size delegation while a file is open:
@@ -47,7 +54,12 @@ class DFSError(Exception):
 
 
 class DFSMeta:
-    """Server-side namespace service (bound to the control plane)."""
+    """Server-side namespace service (bound to the control plane).
+
+    `store` is an ObjectStore or — for a multi-target deployment — a
+    StorageCluster, whose pools/containers present the same surface; the
+    container handle below is then a ClusterContainer whose object punch/
+    destroy ops fan out across every engine target."""
 
     def __init__(self, store: ObjectStore):
         self.store = store

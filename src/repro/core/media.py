@@ -82,6 +82,9 @@ class Device:
         # THIS device the slow replica to show quorum-ack writes tracking
         # the fastest majority instead of the straggler
         self.commit_delay_s = 0.0
+        # injectable per-read latency: makes THIS device the straggler the
+        # engine's extent-level hedged reads race against
+        self.read_delay_s = 0.0
 
     def write(self, key: int, data, lease=None, pre_pinned: bool = False)\
             -> None:
@@ -148,6 +151,8 @@ class Device:
         return done
 
     def read(self, key: int) -> bytes:
+        if self.read_delay_s:
+            time_sleep(self.read_delay_s)
         if not self.alive:
             raise IOError(f"device {self.name} failed")
         with self._lock:
@@ -194,8 +199,12 @@ class Device:
         ]
 
 
-def make_nvme_array(n: int, capacity_per_dev: int = 1600 * GiB) -> List[Device]:
-    return [Device(f"nvme{i}", capacity_per_dev, MediaPerf()) for i in range(n)]
+def make_nvme_array(n: int, capacity_per_dev: int = 1600 * GiB,
+                    prefix: str = "") -> List[Device]:
+    """`prefix` namespaces device names (e.g. "t1.") so a multi-target
+    cluster's fleet-wide facades can address devices unambiguously."""
+    return [Device(f"{prefix}nvme{i}", capacity_per_dev, MediaPerf())
+            for i in range(n)]
 
 
 def striped_stations(devices: List[Device], io_size: int,

@@ -16,11 +16,13 @@ from bisect import insort
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from functools import lru_cache
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
-from repro.core.media import Device, checksum
+from repro.core.media import Device, checksum, make_nvme_array
 
 
 class StorageError(Exception):
@@ -28,6 +30,13 @@ class StorageError(Exception):
 
 
 class ChecksumError(StorageError):
+    pass
+
+
+class TargetDownError(StorageError):
+    """An op was routed (by a possibly-stale pool map) to an engine target
+    the current map marks down. The client reacts with ONE map refresh and
+    a re-route, not a failure."""
     pass
 
 
@@ -141,6 +150,11 @@ class EngineStats:
     quorum_acks: int = 0             # writes acked before every replica landed
     background_commits: int = 0      # straggler replicas landed post-ack
     replica_demotions: int = 0       # failed replicas dropped + re-replicated
+    checksum_offloads: int = 0       # write csums run on commit workers
+    hedges_issued: int = 0           # extent reads hedged to a 2nd replica
+    hedges_won: int = 0              # hedged reads the 2nd replica won
+    cross_target_rereplications: int = 0  # spareless demotions healed on a
+    # PEER engine target (cluster-level redundancy restore)
 
 
 class VerifiedExtentCache:
@@ -267,22 +281,36 @@ class DAOSObject:
                            live[:cont.replication], lease))
         prepped: List[Tuple[Tuple[str, str], Extent]] = []
         planned: List[Tuple[Device, int]] = []    # every (dev, key) submitted
+        csum_futs: List = []          # aligned with prepped; None = inline
         try:
             for dkey, akey, offset, payload, targets, lease in staged:
                 n = _nbytes(payload)
-                csum = store.csum(payload)
-                with store._stats_lock:
-                    store.stats.checksum_bytes += n
                 rec = _PendingCommit(cont.commit_quorum(len(targets)),
                                      len(targets))
-                keys: Dict[str, int] = {}
-                ext = Extent(offset, n, epoch, csum, keys, pending=rec)
-                prepped.append(((dkey, akey), ext))
                 # quorum == width means the op must wait for every replica
                 # anyway: commit inline, no pool hop (the replication=2
                 # default keeps its PR-3 latency). A sub-width quorum fans
                 # out so the op can return while stragglers are in flight.
                 fan_out = rec.quorum < len(targets)
+                if fan_out:
+                    # quorum path (replication >= 3): the Fletcher-64 runs
+                    # on a commit worker, OVERLAPPED with the replica media
+                    # writes, so the op thread no longer pays a synchronous
+                    # per-byte checksum before fan-out. The extent stays
+                    # invisible until both the quorum AND the checksum
+                    # resolved (readers never see a placeholder csum).
+                    csum_fut = store.commit_pool.submit(
+                        store._checksum_offload, payload)
+                    csum = 0
+                else:                 # inline commit keeps the sync csum
+                    csum_fut = None
+                    csum = store.csum(payload)
+                    with store._stats_lock:
+                        store.stats.checksum_bytes += n
+                keys: Dict[str, int] = {}
+                ext = Extent(offset, n, epoch, csum, keys, pending=rec)
+                prepped.append(((dkey, akey), ext))
+                csum_futs.append(csum_fut)
                 pinned = submitted = 0
                 try:
                     if lease is not None:
@@ -331,6 +359,11 @@ class DAOSObject:
             raise StorageError(
                 f"replica commit quorum failed: "
                 f"{errs[-1][2] if errs else 'commit timeout'}")
+        # land the offloaded checksums BEFORE any extent becomes visible
+        # (or any demotion consults ext.csum for re-replication salting)
+        for (_k, ext), fut in zip(prepped, csum_futs):
+            if fut is not None:
+                ext.csum = fut.result()
         for _k, ext in prepped:
             # op-thread handoff: demote replicas that failed pre-ack (the
             # quorum still succeeded), count a quorum ack if stragglers
@@ -439,7 +472,16 @@ class DAOSObject:
             # commit — it is suspect even while it still reports alive
             new_name = self._rereplicate(ext, exclude=(dev_name,))
         except StorageError:
-            return        # no spare right now: degraded until rebuild runs
+            # no LOCAL spare: escalate to the cluster (if one hosts this
+            # engine) so redundancy is restored on a PEER target's devices
+            # instead of silently staying degraded until rebuild
+            cb = cont.store.on_spareless_demotion
+            if cb is not None:
+                try:
+                    cb(self, ext)
+                except Exception:      # cluster heal must never break the
+                    pass               # straggler worker's demotion path
+            return
         if rec is not None:
             with rec.cv:
                 cancelled = rec.cancelled
@@ -520,8 +562,17 @@ class DAOSObject:
         for attempt in range(8):
             with self._lock:
                 exts = list(self._extents.get((dkey, akey), ()))
-            for view, lo, hi in dsts:
-                view[:hi - lo] = 0      # holes read as zeros
+            # holes read as zeros — but pre-zeroing is pure overhead when
+            # any (epoch-visible) extent fully covers the range, since it
+            # writes every destination byte anyway (the hot aligned-block
+            # read: one extent, whole block). Only memset when a hole is
+            # actually possible.
+            if not any(e.offset <= offset
+                       and e.offset + e.size >= offset + size
+                       for e in exts
+                       if epoch is None or e.epoch <= epoch):
+                for view, lo, hi in dsts:
+                    view[:hi - lo] = 0
             try:
                 # epoch-sorted at insert: newer writes overlay older
                 for ext in exts:
@@ -549,6 +600,44 @@ class DAOSObject:
                     raise               # genuine replica failure
         return size
 
+    def _hedged_read(self, replicas: List[Tuple[str, int, Device]],
+                     timeout: float) -> Tuple[str, int, bytes]:
+        """Race the primary replica read against the SECOND replica when
+        the primary exceeds the hedge budget — extent-granularity straggler
+        mitigation (the 3FS/loader trick moved from whole-op duplication in
+        the data pipeline down to the one extent that is actually slow).
+        First successful completion wins; the loser finishes harmlessly in
+        the background. Returns (dev_name, key, data) of the winner; raises
+        the primary's error if every raced replica failed."""
+        from concurrent.futures import FIRST_COMPLETED, wait as _fwait
+        store = self.container.store
+        (n0, k0, d0), (n1, k1, d1) = replicas[0], replicas[1]
+        primary = store.hedge_pool.submit(d0.read, k0)
+        done, _ = _fwait([primary], timeout=timeout,
+                         return_when=FIRST_COMPLETED)
+        if done:
+            return n0, k0, primary.result()      # may raise: caller reroutes
+        with store._stats_lock:
+            store.stats.hedges_issued += 1
+        backup = store.hedge_pool.submit(d1.read, k1)
+        pending = {primary: (n0, k0), backup: (n1, k1)}
+        last_err: Optional[Exception] = None
+        while pending:
+            done, _ = _fwait(list(pending), return_when=FIRST_COMPLETED)
+            for fut in done:
+                name, key = pending.pop(fut)
+                try:
+                    data = fut.result()
+                except Exception as e:
+                    last_err = e
+                    continue
+                if fut is backup:
+                    with store._stats_lock:
+                        store.stats.hedges_won += 1
+                return name, key, data
+        raise last_err if last_err is not None \
+            else StorageError("hedged read lost both replicas")
+
     def _read_extent(self, ext: Extent, verify: bool,
                      cache: bool = True) -> bytes:
         """Read one replica of the extent, verifying the end-to-end
@@ -556,42 +645,75 @@ class DAOSObject:
         (device, block, generation) — the warm-read fast path that skips
         the Fletcher-64 pass entirely. `cache=False` forces a full verify
         AND skips cache insertion (rebuild uses it: data about to be
-        re-replicated must never be trusted on faith)."""
+        re-replicated must never be trusted on faith).
+
+        With `store.hedge_timeout_s` set and >= 2 live replicas, the
+        primary read is HEDGED: if it exceeds the budget the second
+        replica's target is raced and the first completion wins — counted
+        at extent granularity in `hedges_issued`/`hedges_won`."""
         cont = self.container
         store = cont.store
         last_err: Optional[Exception] = None
         # snapshot: a post-ack demotion/re-replication may mutate the
         # replica map concurrently from a commit-pool worker
-        for name, key in list(ext.block_keys.items()):
-            dev = store.device(name)
-            if dev is None or not dev.alive:
-                continue
+        live = [(name, key, store.device(name))
+                for name, key in list(ext.block_keys.items())]
+        live = [(n, k, d) for n, k, d in live if d is not None and d.alive]
+        hedge = store.hedge_timeout_s
+        if hedge is not None and len(live) >= 2:
+            try:
+                name, key, data = self._hedged_read(live, hedge)
+            except Exception as e:
+                last_err = e
+            else:
+                err = self._verify_replica(ext, name, key, verify, cache,
+                                           data)
+                if err is None:
+                    return data
+                last_err = err
+                live = [(n, k, d) for n, k, d in live if n != name]
+        for name, key, dev in live:
             try:
                 data = dev.read(key)
             except Exception as e:     # degraded replica
                 last_err = e
                 continue
-            if verify:
-                n = _nbytes(data)
-                if cache and cont.vcache.check(name, key, dev.generation):
-                    with store._stats_lock:
-                        store.stats.verify_hits += 1
-                        store.stats.checksum_skipped_bytes += n
-                elif store.csum(data) != ext.csum:
-                    with store._stats_lock:
-                        store.stats.verify_misses += 1
-                        store.stats.checksum_bytes += n
-                    last_err = ChecksumError(f"extent csum mismatch on {name}")
-                    continue            # silent-corruption -> next replica
-                else:
-                    with store._stats_lock:
-                        store.stats.verify_misses += 1
-                        store.stats.checksum_bytes += n
-                    if cache:
-                        cont.vcache.insert(name, key, dev.generation,
-                                           ext.csum, n)
+            err = self._verify_replica(ext, name, key, verify, cache, data)
+            if err is not None:
+                last_err = err
+                continue               # silent-corruption -> next replica
             return data
         raise StorageError(f"extent unreadable from all replicas: {last_err}")
+
+    def _verify_replica(self, ext: Extent, name: str, key: int,
+                        verify: bool, cache: bool,
+                        data) -> Optional[Exception]:
+        """End-to-end verify of one replica's bytes (verified-cache fast
+        path included); returns None on pass, the ChecksumError on a
+        mismatch. Shared by the sequential and hedged read paths."""
+        if not verify:
+            return None
+        cont = self.container
+        store = cont.store
+        dev = store.device(name)
+        generation = dev.generation if dev is not None else -1
+        n = _nbytes(data)
+        if cache and cont.vcache.check(name, key, generation):
+            with store._stats_lock:
+                store.stats.verify_hits += 1
+                store.stats.checksum_skipped_bytes += n
+        elif store.csum(data) != ext.csum:
+            with store._stats_lock:
+                store.stats.verify_misses += 1
+                store.stats.checksum_bytes += n
+            return ChecksumError(f"extent csum mismatch on {name}")
+        else:
+            with store._stats_lock:
+                store.stats.verify_misses += 1
+                store.stats.checksum_bytes += n
+            if cache:
+                cont.vcache.insert(name, key, generation, ext.csum, n)
+        return None
 
     # -- punch (truncate / unlink reclaim) -----------------------------------
     def _free_extent(self, ext: Extent) -> int:
@@ -670,6 +792,17 @@ class DAOSObject:
         (truncate punches by what EXISTS, not by what metadata says)."""
         with self._lock:
             return [dk for (dk, ak) in self._extents if ak == akey]
+
+    def _locate_extent(self, ext: Extent) -> Optional[Tuple[str, str]]:
+        """Reverse-map a live extent to its (dkey, akey) — the cluster's
+        spareless-demotion escalation needs the key to re-home the extent
+        on a peer target. Identity search; None if the extent was punched
+        or retired meanwhile (nothing to heal then)."""
+        with self._lock:
+            for k, lst in self._extents.items():
+                if any(e is ext for e in lst):
+                    return k
+        return None
 
     def punch_all(self) -> int:
         """Free every extent of the object (unlink reclaim)."""
@@ -776,6 +909,14 @@ class Container:
     def epoch(self) -> int:
         return self._epoch_now
 
+    def peek_object(self, oid: int) -> Optional[DAOSObject]:
+        """The object if it exists HERE, else None — no lazy creation, no
+        tombstone raise (fleet-wide facades enumerate with this so a fan-
+        out punch on one target never materializes empty objects on the
+        others)."""
+        with self._lock:
+            return self._objects.get(oid)
+
     def object(self, oid: int) -> DAOSObject:
         with self._lock:
             if oid in self._destroyed:
@@ -845,7 +986,26 @@ class ObjectStore:
         self.stats = EngineStats()
         self._stats_lock = threading.Lock()
         self._commit_pool: Optional[ThreadPoolExecutor] = None
+        self._hedge_pool: Optional[ThreadPoolExecutor] = None
         self._commit_pool_lock = threading.Lock()
+        # extent-level hedged reads: when set, _read_extent races the
+        # second replica once the primary exceeds this budget (seconds)
+        self.hedge_timeout_s: Optional[float] = None
+        # cluster escalation: called (obj, ext) when a post-ack demotion
+        # finds no local spare — StorageCluster re-homes the extent on a
+        # peer engine target; None for a standalone engine
+        self.on_spareless_demotion: Optional[
+            Callable[[DAOSObject, Extent], None]] = None
+
+    def _checksum_offload(self, payload) -> int:
+        """Write-path Fletcher-64, run on a commit worker so the quorum
+        fan-out overlaps the per-byte checksum with the replica media
+        writes instead of paying it synchronously on the op thread."""
+        c = self.csum(payload)
+        with self._stats_lock:
+            self.stats.checksum_bytes += _nbytes(payload)
+            self.stats.checksum_offloads += 1
+        return c
 
     @property
     def commit_pool(self) -> ThreadPoolExecutor:
@@ -859,11 +1019,29 @@ class ObjectStore:
                     thread_name_prefix="replica-commit")
             return self._commit_pool
 
+    @property
+    def hedge_pool(self) -> ThreadPoolExecutor:
+        """Dedicated executor for hedged replica reads. NOT the commit
+        pool: hedge waiters can run ON commit workers (post-ack demotion's
+        re-replication reads, cross-target heals), and a bounded pool
+        whose workers block on futures queued behind themselves deadlocks.
+        Hedge tasks are plain device reads that never submit further work,
+        so this pool is cycle-free at any size."""
+        with self._commit_pool_lock:
+            if self._hedge_pool is None:
+                self._hedge_pool = ThreadPoolExecutor(
+                    max_workers=max(4, 2 * len(self.devices)),
+                    thread_name_prefix="hedge-read")
+            return self._hedge_pool
+
     def close(self) -> None:
         with self._commit_pool_lock:
             pool, self._commit_pool = self._commit_pool, None
+            hedge, self._hedge_pool = self._hedge_pool, None
         if pool is not None:
             pool.shutdown(wait=True)
+        if hedge is not None:
+            hedge.shutdown(wait=True)
 
     def containers(self) -> List[Container]:
         return [c for p in self.pools.values()
@@ -894,6 +1072,408 @@ class ObjectStore:
             for c in p.containers.values():
                 moved += c.rebuild(failed)
         return moved
+
+
+# ---------------------------------------------------------------------------
+# Multi-target cluster layer: versioned pool map + N independent engines.
+
+
+def _place_key(oid: int, dkey: str) -> int:
+    """Deterministic 64-bit placement key (FNV-1a over "oid:dkey") — NOT
+    Python's salted hash(), so placement is stable across processes and
+    runs (clients and servers must agree on it forever)."""
+    h = 0xCBF29CE484222325
+    for ch in f"{oid}:{dkey}".encode():
+        h = ((h ^ ch) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def jump_hash(key: int, n_buckets: int) -> int:
+    """Jump consistent hash (Lamping & Veach): maps `key` onto one of
+    `n_buckets` with the minimal-disruption property — growing the fleet
+    from n to n+1 targets moves only ~1/(n+1) of the keys, which is what
+    makes target ADD cheap (no full reshuffle, no per-object metadata)."""
+    if n_buckets <= 1:
+        return 0
+    key &= 0xFFFFFFFFFFFFFFFF
+    b, j = -1, 0
+    while j < n_buckets:
+        b = j
+        key = (key * 2862933555777941757 + 1) & 0xFFFFFFFFFFFFFFFF
+        j = int((b + 1) * ((1 << 31) / ((key >> 33) + 1)))
+    return b
+
+
+@lru_cache(maxsize=1 << 16)
+def placement_order(n_targets: int, oid: int, dkey: str) -> Tuple[int, ...]:
+    """Deterministic target preference order for (oid, dkey): the jump-
+    hash primary first, then the ring successors (the failover / cross-
+    target-redundancy candidates, in the order every client and server
+    derives identically with ZERO per-op metadata lookups). Computed over
+    ALL registered targets — up/down filtering happens at selection time,
+    so a target bouncing does not reshuffle placement."""
+    primary = jump_hash(_place_key(oid, dkey), n_targets)
+    return tuple((primary + i) % n_targets for i in range(n_targets))
+
+
+@dataclass
+class TargetInfo:
+    target_id: int
+    up: bool = True
+
+
+class PoolMap:
+    """The versioned cluster map (DAOS pool map, shrunk to what routing
+    needs): an ordered target list with up/down state, plus the per-
+    container redundancy class. Every mutation bumps `version` and pushes
+    to subscribed listeners (the control plane's lease-recall channel) —
+    a client holding an older version is STALE and refreshes once."""
+
+    def __init__(self):
+        self.version = 1
+        self.targets: List[TargetInfo] = []
+        self.redundancy: Dict[str, Dict[str, Any]] = {}
+        self._lock = threading.Lock()
+        self._listeners: List[Callable[[int], None]] = []
+
+    def subscribe(self, cb: Callable[[int], None]) -> None:
+        with self._lock:
+            self._listeners.append(cb)
+
+    def _bump(self, notify: bool = True) -> int:
+        with self._lock:
+            self.version += 1
+            v = self.version
+            listeners = list(self._listeners) if notify else []
+        for cb in listeners:          # outside the lock: listeners RPC/push
+            cb(v)
+        return v
+
+    def add_target(self, target_id: int) -> None:
+        with self._lock:
+            self.targets.append(TargetInfo(target_id))
+        self._bump()
+
+    def set_state(self, target_id: int, up: bool, notify: bool = True) -> None:
+        """Mark a target up/down and bump the map. `notify=False` models a
+        LOST invalidation push (tests use it to drive the stale-map
+        refresh-and-retry path): the version still moves — truth changed —
+        but no client hears about it until it asks or trips."""
+        with self._lock:
+            for t in self.targets:
+                if t.target_id == target_id:
+                    t.up = up
+        self._bump(notify=notify)
+
+    def set_redundancy(self, key: str, **cls) -> None:
+        with self._lock:
+            self.redundancy[key] = dict(cls)
+        self._bump()
+
+    def is_up(self, target_id: int) -> bool:
+        with self._lock:
+            return any(t.target_id == target_id and t.up
+                       for t in self.targets)
+
+    def n_targets(self) -> int:
+        with self._lock:
+            return len(self.targets)
+
+    def place(self, oid: int, dkey: str) -> Tuple[int, ...]:
+        return placement_order(self.n_targets(), oid, dkey)
+
+    def describe(self) -> Dict[str, Any]:
+        """Wire form of the map (what `get_pool_map` serves)."""
+        with self._lock:
+            return {"version": self.version,
+                    "targets": [{"target_id": t.target_id, "up": t.up}
+                                for t in self.targets],
+                    "redundancy": {k: dict(v)
+                                   for k, v in self.redundancy.items()}}
+
+
+class EngineTarget:
+    """One unchanged DAOS I/O engine inside the cluster: its own device
+    array, ObjectStore, and (wired by the owner) server-side memory
+    registry for its data-plane session."""
+
+    def __init__(self, target_id: int, store: ObjectStore):
+        self.target_id = target_id
+        self.store = store
+        self.registry = None          # server MemoryRegistry (set by owner)
+
+
+class _ClusterObject:
+    """Fan-out facade over one oid's per-target DAOSObjects — the surface
+    DFS metadata ops (truncate punch, unlink reclaim) need, fleet-wide.
+    Enumerates via peek (no lazy creation on targets that never saw the
+    oid)."""
+
+    def __init__(self, cc: "ClusterContainer", oid: int):
+        self.cc = cc
+        self.oid = oid
+
+    def _each(self):
+        for cont in self.cc.per_target():
+            obj = cont.peek_object(self.oid)
+            if obj is not None:
+                yield obj
+
+    def dkeys(self, akey: str) -> List[str]:
+        return sorted({dk for o in self._each() for dk in o.dkeys(akey)})
+
+    def punch(self, dkey: str, akey: str) -> int:
+        return sum(o.punch(dkey, akey) for o in self._each())
+
+    def punch_range(self, dkey: str, akey: str, keep_upto: int) -> int:
+        return sum(o.punch_range(dkey, akey, keep_upto)
+                   for o in self._each())
+
+    def punch_all(self) -> int:
+        return sum(o.punch_all() for o in self._each())
+
+
+class ClusterContainer:
+    """One logical container spanning every engine target (same name on
+    each). Data placement across the targets is the CLIENT router's job
+    (algorithmic, per block); this facade carries the per-target Container
+    handles plus the fleet-wide metadata ops DFS needs."""
+
+    def __init__(self, name: str, pool: "ClusterPool",
+                 params: Dict[str, Any]):
+        self.name = name
+        self.pool = pool
+        self.params = dict(params)
+        self._per_target: Dict[int, Container] = {}
+
+    def target(self, target_id: int) -> Container:
+        return self._per_target[target_id]
+
+    def per_target(self) -> List[Container]:
+        return [self._per_target[tid] for tid in sorted(self._per_target)]
+
+    def object(self, oid: int) -> _ClusterObject:
+        return _ClusterObject(self, oid)
+
+    def destroy_object(self, oid: int) -> int:
+        """Unlink reclaim on every target (the oid is tombstoned fleet-
+        wide, so a late write through a stale route is ESTALE anywhere)."""
+        return sum(c.destroy_object(oid) for c in self.per_target())
+
+
+class ClusterPool:
+    def __init__(self, name: str, cluster: "StorageCluster"):
+        self.name = name
+        self.cluster = cluster
+        self.containers: Dict[str, ClusterContainer] = {}
+
+    def create_container(self, name: str, replication: int = 2,
+                         aggregate: bool = False,
+                         verified_cache: bool = False,
+                         write_quorum: Optional[int] = None
+                         ) -> ClusterContainer:
+        params = dict(replication=replication, aggregate=aggregate,
+                      verified_cache=verified_cache,
+                      write_quorum=write_quorum)
+        cc = ClusterContainer(name, self, params)
+        self.containers[name] = cc
+        for t in self.cluster.targets:
+            self.cluster._materialize_container(cc, t)
+        # the redundancy CLASS rides the pool map (clients learn it with
+        # the target list, zero extra round-trips)
+        self.cluster.pool_map.set_redundancy(
+            f"{self.name}/{name}", replication=replication,
+            write_quorum=write_quorum)
+        return cc
+
+
+class StorageCluster:
+    """N independent engine targets behind one versioned pool map.
+
+    The engines are UNCHANGED ObjectStores (the paper's design point: the
+    fleet scales by adding engines, not by teaching them about each
+    other); everything cluster-shaped lives here and in the client router:
+
+      * `pool_map` — versioned target list + per-container redundancy
+        class; every fail/recover/add bumps it and pushes to listeners.
+      * placement — `placement_order` jump-consistent hashing shared verb-
+        atim with the client, so routing needs no per-op metadata.
+      * cross-target healing — an engine whose post-ack demotion finds no
+        local spare escalates here and the extent is re-homed on a peer
+        target (`stats.cross_target_rereplications`).
+      * `resync()` — after a target recovers, extents that were written to
+        failover candidates during the outage migrate back to their
+        placement primary (the rebuild path's read-verify-write-punch).
+
+    The facade also mirrors the ObjectStore surfaces fleet-level services
+    consume (`containers()`, `devices`, `device()`, `csum`, `stats`), so a
+    MediaScrubber pointed at the cluster scrubs every target's verified
+    cache."""
+
+    def __init__(self, n_targets: int = 1, n_devices: int = 4,
+                 csum: Optional[Callable[[bytes], int]] = None):
+        self.csum = csum or checksum
+        self.n_devices = int(n_devices)
+        self.pool_map = PoolMap()
+        self.targets: List[EngineTarget] = []
+        self.pools: Dict[str, ClusterPool] = {}
+        self.stats = EngineStats()    # fleet-level events (cross-target
+        self._stats_lock = threading.Lock()       # heals, cluster scrubs)
+        self._cont_index: Dict[int, Tuple[ClusterContainer, int]] = {}
+        for _ in range(n_targets):
+            self.add_target()
+
+    # -- fleet membership ----------------------------------------------------
+    def add_target(self, n_devices: Optional[int] = None,
+                   rebalance: bool = True) -> EngineTarget:
+        """Bring a new (empty) engine target into the fleet: existing
+        pools/containers materialize on it, the pool map bumps, and jump-
+        consistent placement moves only ~1/(n+1) of the keys toward it —
+        which `rebalance` (default) immediately honors by migrating those
+        keys' extents onto the newcomer (the resync/rebuild path), so
+        every pre-add byte stays reachable under the new map."""
+        tid = len(self.targets)
+        store = ObjectStore(
+            make_nvme_array(n_devices or self.n_devices, prefix=f"t{tid}."),
+            csum=self.csum)
+        store.on_spareless_demotion = self._heal_cross_target
+        if self.targets:              # inherit fleet-wide engine knobs
+            store.hedge_timeout_s = self.targets[0].store.hedge_timeout_s
+        target = EngineTarget(tid, store)
+        self.targets.append(target)
+        for pool in self.pools.values():
+            for cc in pool.containers.values():
+                self._materialize_container(cc, target)
+        self.pool_map.add_target(tid)
+        if rebalance:
+            self.resync()
+        return target
+
+    def _materialize_container(self, cc: ClusterContainer,
+                               target: EngineTarget) -> None:
+        store = target.store
+        p = store.pools.get(cc.pool.name) or store.create_pool(cc.pool.name)
+        cont = p.containers.get(cc.name) \
+            or p.create_container(cc.name, **cc.params)
+        cc._per_target[target.target_id] = cont
+        self._cont_index[id(cont)] = (cc, target.target_id)
+
+    def target(self, target_id: int) -> EngineTarget:
+        return self.targets[target_id]
+
+    def fail_target(self, target_id: int, notify: bool = True) -> None:
+        """Administrative target-down: the map version bumps and (unless
+        the push is modeled lost with notify=False) every subscribed
+        client is recalled; routed ops hitting the dead target get
+        TargetDownError and re-route after ONE refresh."""
+        self.pool_map.set_state(target_id, False, notify=notify)
+
+    def recover_target(self, target_id: int, resync: bool = True) -> int:
+        """Re-admit a target, then `resync` (default): extents that
+        failover-landed elsewhere during the outage migrate back to their
+        placement primaries — computed with the recovered target ADMITTED,
+        so the data moves toward it, not further away. (Reads racing the
+        migration window see the pre-resync placement, as with any rebuild
+        in flight.)"""
+        self.pool_map.set_state(target_id, True)
+        return self.resync() if resync else 0
+
+    # -- pools/containers (ObjectStore-shaped so DFSMeta rides unchanged) ----
+    def create_pool(self, name: str) -> ClusterPool:
+        p = ClusterPool(name, self)
+        self.pools[name] = p
+        return p
+
+    # -- fleet-wide facades (scrubber, counters) -----------------------------
+    def containers(self) -> List[Container]:
+        return [c for t in self.targets for c in t.store.containers()]
+
+    @property
+    def devices(self) -> List[Device]:
+        return [d for t in self.targets for d in t.store.devices]
+
+    def device(self, name: str) -> Optional[Device]:
+        for t in self.targets:
+            d = t.store.device(name)
+            if d is not None:
+                return d
+        return None
+
+    def close(self) -> None:
+        for t in self.targets:
+            t.store.close()
+
+    # -- cross-target redundancy restore -------------------------------------
+    def _heal_cross_target(self, obj: DAOSObject, ext: Extent) -> None:
+        """A post-ack demotion found no spare device INSIDE its engine:
+        re-home the extent's payload on the first live peer target in
+        placement order (read a verified surviving replica, write it into
+        the peer's same (oid, dkey, akey) — the per-extent move the
+        rebuild path already uses, lifted one level up)."""
+        located = obj._locate_extent(ext)
+        if located is None:
+            return                    # punched/retired meanwhile
+        dkey, akey = located
+        indexed = self._cont_index.get(id(obj.container))
+        if indexed is None:
+            return                    # engine not part of this cluster
+        cc, origin_tid = indexed
+        data = obj._read_extent(ext, verify=True, cache=False)
+        for tid in self.pool_map.place(obj.oid, dkey):
+            if tid == origin_tid or not self.pool_map.is_up(tid):
+                continue
+            try:
+                peer = cc.target(tid)
+                peer.object(obj.oid).update(dkey, akey, ext.offset,
+                                            bytes(data))
+            except StorageError:
+                continue
+            with self._stats_lock:
+                self.stats.cross_target_rereplications += 1
+            return
+
+    # -- post-recovery placement repair --------------------------------------
+    def resync(self) -> int:
+        """Migrate every extent living off its placement primary back home
+        (read-verify from where it is, write to the primary, punch the
+        stray) — the cluster-level leg of the rebuild path, run when a
+        recovered target rejoins. Returns (dkey, akey) groups moved."""
+        moved = 0
+        n = self.pool_map.n_targets()
+        for pool in self.pools.values():
+            for cc in pool.containers.values():
+                for tid in sorted(cc._per_target):
+                    cont = cc._per_target[tid]
+                    with cont._lock:
+                        objs = list(cont._objects.items())
+                    for oid, obj in objs:
+                        with obj._lock:
+                            keys = list(obj._extents.keys())
+                        for dkey, akey in keys:
+                            order = placement_order(n, oid, dkey)
+                            home = next((t for t in order
+                                         if self.pool_map.is_up(t)), None)
+                            if home is None or home == tid:
+                                continue
+                            moved += self._migrate(cc, obj, oid,
+                                                   dkey, akey, home)
+        return moved
+
+    def _migrate(self, cc: ClusterContainer, obj: DAOSObject, oid: int,
+                 dkey: str, akey: str, home_tid: int) -> int:
+        with obj._lock:
+            exts = list(obj._extents.get((dkey, akey), ()))
+        if not exts:
+            return 0
+        try:
+            home = cc.target(home_tid).object(oid)
+            for ext in exts:          # epoch order preserved: lists are
+                data = obj._read_extent(ext, verify=True, cache=False)
+                home.update(dkey, akey, ext.offset, bytes(data))
+        except StorageError:
+            return 0                  # tombstoned / unreadable: leave it
+        obj.punch(dkey, akey)
+        return 1
 
 
 class MediaScrubber:

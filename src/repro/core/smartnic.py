@@ -12,7 +12,10 @@ NIC), and posts CQEs. Host<->DPU interaction is only ring writes/reads.
 SQEs carry whole descriptor lists where the op is vectored: the
 `read_into_many` op ships [(fd, size, offset, dst_off), ...] in ONE SQE —
 one doorbell, one completion for an entire batched device-direct placement
-(DeviceDirectSink.read_tensors packs a ring slot per SQE this way).
+(DeviceDirectSink.read_tensors packs a ring slot per SQE this way). On a
+multi-target client the handlers execute against the striping cluster
+router, so one doorbell's op fans out to per-target data-plane sessions
+on the Arm cores — the host still only rings once.
 Background services (`start_housekeeping`) run near-NIC periodic work on
 an Arm core: capability lease renewal and the idle-aware MediaScrubber's
 pacing both ride it in dpu mode.

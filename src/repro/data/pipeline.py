@@ -6,9 +6,13 @@ streams its sample assignment through the RDMA data plane (optionally from
 the DPU-offloaded client), with
 
   * background prefetch (bounded queue; overlap storage I/O with compute),
-  * hedged reads for straggler mitigation (duplicate the read against the
-    replicated object store if the primary exceeds a latency budget; first
-    completion wins — the 3FS/loader trick),
+  * hedged reads for straggler mitigation: `hedge_timeout_s` arms EXTENT-
+    level hedging inside the engine's `_read_extent` — a replica read
+    exceeding the budget races the second replica's target and the first
+    completion wins (the 3FS/loader trick, moved down from whole-op
+    duplication so only the one slow extent pays a duplicate read, and
+    `hedges_won` counts at extent granularity). Clients without engine
+    support fall back to the old whole-op duplication,
   * deterministic epoch shuffling shared by all ranks (seeded permutation,
     disjoint per-rank slices),
   * elastic resharding: when the data-parallel world grows/shrinks, the
@@ -129,12 +133,23 @@ class ROS2TokenLoader:
                                         thread_name_prefix="ros2-loader")
         self.hedge_timeout_s = hedge_timeout_s
         self.read_delay_hook = read_delay_hook    # tests: inject stragglers
+        # extent-level hedging: hand the budget to the ENGINE (it races
+        # the second replica inside _read_extent) instead of duplicating
+        # whole pread ops up here; the whole-op fallback stays for clients
+        # without engine support
+        self._engine_hedging = False
+        self._hedge_base = (0, 0)
+        if hedge_timeout_s is not None \
+                and hasattr(client, "configure_hedged_reads"):
+            client.configure_hedged_reads(hedge_timeout_s)
+            self._engine_hedging = True
+            self._hedge_base = self._engine_hedges()
         # metrics
         self.stall_s = 0.0
         self.read_s = 0.0
         self.bytes_read = 0
-        self.hedges_issued = 0
-        self.hedges_won = 0
+        self._local_hedges_issued = 0             # whole-op fallback only
+        self._local_hedges_won = 0
         self.batches_produced = 0
         self.read_retries = 0
         self.last_error = ""
@@ -157,26 +172,49 @@ class ROS2TokenLoader:
             pos += ln
         return bytes(out)
 
+    def _engine_hedges(self) -> tuple:
+        """(hedges_issued, hedges_won) from the engine's merged counters
+        (fleet-wide when the client routes a multi-target cluster)."""
+        try:
+            eng = self.client.io.data_path_counters()["engine"]
+            return (int(eng.get("hedges_issued", 0)),
+                    int(eng.get("hedges_won", 0)))
+        except Exception:
+            return 0, 0
+
+    @property
+    def hedges_issued(self) -> int:
+        return self._local_hedges_issued \
+            + self._engine_hedges()[0] - self._hedge_base[0]
+
+    @property
+    def hedges_won(self) -> int:
+        return self._local_hedges_won \
+            + self._engine_hedges()[1] - self._hedge_base[1]
+
     def _read_one(self, shard: int, off: int, ln: int) -> bytes:
         def attempt(tag: int) -> bytes:
             if self.read_delay_hook is not None:
                 self.read_delay_hook(shard, off, tag)
             return self.client.pread(self._fds[shard], ln, off)
 
-        if self.hedge_timeout_s is None:
+        if self.hedge_timeout_s is None or self._engine_hedging:
+            # straggler mitigation (when armed) happens INSIDE the engine,
+            # at extent granularity — one plain pread from here
             return attempt(0)
+        # whole-op fallback for clients without engine hedging: duplicate
+        # the entire read against the replicated store; first wins
         primary = self._pool.submit(attempt, 0)
         done, _ = wait([primary], timeout=self.hedge_timeout_s,
                        return_when=FIRST_COMPLETED)
         if done:
             return primary.result()
-        # straggler: hedge against a replica; first completion wins
-        self.hedges_issued += 1
+        self._local_hedges_issued += 1
         backup = self._pool.submit(attempt, 1)
         done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
         winner = done.pop()
         if winner is backup:
-            self.hedges_won += 1
+            self._local_hedges_won += 1
         return winner.result()
 
     def _fetch_sample(self, idx: int) -> np.ndarray:

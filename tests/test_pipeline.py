@@ -106,7 +106,33 @@ def test_loader_reshard_runtime(corpus_client):
     ld.close()
 
 
-def test_hedged_reads_fire_on_straggler(corpus_client):
+def test_hedged_reads_fire_on_straggler():
+    """hedge_timeout_s arms EXTENT-level hedging in the engine: the
+    primary replica's device stalls, _read_extent races the second
+    replica's target, and hedges_won counts at extent granularity."""
+    client = ROS2Client(mode="host", transport="rdma")
+    tokens = np.arange(4096, dtype=np.int32) % 997   # ONE shard, one extent
+    write_token_shards(client, "/hedge", tokens, shard_tokens=4096)
+    # stall the extent's PRIMARY replica device (first in replica order)
+    oid = client.dfs.stat("/hedge/shard-00000")["oid"]
+    obj = client.container.object(oid)
+    ext = obj._extents[("0", "data")][0]
+    primary = next(iter(ext.block_keys))
+    client.store.device(primary).read_delay_s = 0.2
+    ld = ROS2TokenLoader(client, "/hedge", global_batch=1, seq_len=15,
+                         hedge_timeout_s=0.02)
+    b = ld.next_batch()
+    assert b["tokens"].shape == (1, 15)
+    assert ld.hedges_issued >= 1
+    assert ld.hedges_won >= 1
+    ld.close()
+    client.store.device(primary).read_delay_s = 0.0
+    client.close()
+
+
+def test_hedged_reads_whole_op_fallback(corpus_client):
+    """A client without engine-level hedging keeps the old whole-op
+    duplication (first completion wins)."""
     client, _ = corpus_client
     slow = {"n": 0}
 
@@ -116,8 +142,19 @@ def test_hedged_reads_fire_on_straggler(corpus_client):
             slow["n"] += 1
             time.sleep(0.4)
 
-    ld = ROS2TokenLoader(client, "/data", global_batch=1, seq_len=15,
-                         hedge_timeout_s=0.05, read_delay_hook=delay_hook)
+    class NoEngineHedge:
+        """Duck-typed view of the client hiding configure_hedged_reads."""
+        def __init__(self, c):
+            self._c = c
+
+        def __getattr__(self, name):
+            if name == "configure_hedged_reads":
+                raise AttributeError(name)
+            return getattr(self._c, name)
+
+    ld = ROS2TokenLoader(NoEngineHedge(client), "/data", global_batch=1,
+                         seq_len=15, hedge_timeout_s=0.05,
+                         read_delay_hook=delay_hook)
     b = ld.next_batch()
     assert b["tokens"].shape == (1, 15)
     assert ld.hedges_issued >= 1
