@@ -46,6 +46,13 @@ the MEASURED placement spread) >= 1.6x the 1-target run. Under --smoke the
 main sg/zero_copy runs ALSO ride a 2-target pool map, so every existing
 gate (copies/byte, cycle RPCs, warm opens) re-proves on the routed stack.
 
+Fault section (PR 6, --smoke included): the striped workload re-runs under
+a seeded `FaultInjector` firing wire errors, partial SG transfers, and
+media I/O faults on a replication=3/quorum=2 map. Hard gates: bit-exact
+under injection, recorded transport retransmits AND media-level recoveries
+(demote+re-replicate or degraded read), and zero leaked staging slots or
+donated leases; the injector counters land in the payload under "faulted".
+
 Run:  PYTHONPATH=src python benchmarks/bench_data_path.py [--out PATH]
       --quick   host/rdma only (all three paths)
       --smoke   ~30 s regression gate: host/rdma, sg vs zero_copy only
@@ -379,6 +386,76 @@ def _bench_cluster(passes: int = 4) -> dict:
     return out
 
 
+def _bench_faults() -> dict:
+    """Fault-injection gate (PR 6): the striped read/write workload runs
+    while a seeded `FaultInjector` fires at every data-plane layer it can
+    reach — wire-level SG errors and partial transfers, media I/O errors
+    during replica commit and read — on a replication=3 / quorum=2 map so
+    every fault class has a recovery path. Hard gates: the run stays
+    bit-exact, at least one transport retransmit AND one media-level
+    recovery (demote+re-replicate or degraded read) is RECORDED by the
+    injector, and nothing leaks (no donated lease, no staging slot held).
+    The injector's full counters ride the JSON payload under "faults"."""
+    from repro.core.faults import Fault, FaultInjector
+
+    inj = FaultInjector([
+        ("transport.write_sg", Fault("error"), lambda m: m % 13 == 3),
+        ("transport.place_sg", Fault("partial"), lambda m: m % 11 == 4),
+        ("media.write", Fault("error",
+                              exc=lambda: IOError("injected media write")),
+         lambda m: m % 41 == 7),
+        ("media.read", Fault("error",
+                             exc=lambda: IOError("injected media read")),
+         lambda m: m % 29 == 5),
+    ], seed=42)
+    total, chunk = 16 * MiB, 2 * MiB
+    gates = []
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2, n_devices=4,
+                   replication=3, write_quorum=2, scrub_interval_s=None,
+                   fault_injector=inj)
+    fd = c.open("/faulted", create=True)
+    rng = np.random.default_rng(6)
+    data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+    t0 = time.perf_counter()
+    for off in range(0, total, chunk):
+        c.pwrite(fd, data[off:off + chunk], off)
+    got = b"".join(c.pread(fd, chunk, off)
+                   for off in range(0, total, chunk))
+    wall = time.perf_counter() - t0
+    if got != data:
+        gates.append("faulted striped roundtrip not bit-exact")
+    f = inj.counters()
+    if f["total_injected"] == 0:
+        gates.append("fault schedule never fired")
+    if f["recovered"].get("transport.retry", 0) == 0:
+        gates.append("no transport retransmit recorded under injection")
+    media_rec = (f["recovered"].get("media.rereplicated", 0)
+                 + f["recovered"].get("read.degraded_replica", 0))
+    if media_rec == 0:
+        gates.append("no media-level recovery recorded under injection")
+    sessions = c.io.sessions.values()
+    deadline = time.perf_counter() + 5.0
+    while (any(s.ring.donated_slots() for s in sessions)
+           and time.perf_counter() < deadline):
+        for t in c.cluster.targets:          # land pending writebacks
+            for d in t.store.devices:
+                if d.alive:
+                    d.writeback()
+        time.sleep(0.01)
+    if any(s.ring.donated_slots() for s in sessions):
+        gates.append("faulted run leaked donated staging leases")
+    for s in sessions:
+        with s.ring._cv:
+            if sorted(s.ring._free) != list(range(s.ring.n_slots)):
+                gates.append("faulted run leaked staging slots")
+                break
+    counters = c.io.data_path_counters()
+    c.close()
+    return {"io_bytes": total, "wall_s": wall, "faults": f,
+            "retried_runs": counters["cluster"]["retried_runs"],
+            "gates": gates}
+
+
 def _print_run(r: dict) -> None:
     print(f"{r['mode']:4s}/{r['transport']:4s} {r['path']:13s} "
           f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
@@ -502,6 +579,12 @@ def main(argv=None) -> int:
           f"{cluster['1_target']['striped_read_GiBps']:.1f} GiB/s -> "
           f"2-target {cluster['2_target']['striped_read_GiBps']:.1f} GiB/s "
           f"({cluster['read_speedup']:.2f}x, shares {shares})")
+    faulted = _bench_faults()
+    ff = faulted["faults"]
+    print(f"faulted striped run: {faulted['io_bytes'] // MiB} MiB in "
+          f"{faulted['wall_s']:.2f} s under {ff['total_injected']} "
+          f"injections ({ff['injected_by_kind']}), recoveries "
+          f"{ff['recovered']}, retried runs {faulted['retried_runs']}")
     device_direct = _bench_device_direct()
     for m in ("host", "dpu"):
         dd = device_direct[m]
@@ -569,6 +652,7 @@ def main(argv=None) -> int:
                      f"per-tensor baseline "
                      f"{dd['single_tensors_per_s']:.0f}")
     fails += cluster.pop("gates")        # routing/striping/scaling gates
+    fails += faulted.pop("gates")        # PR-6 fault-injection gates
 
     for f in fails:
         print(f"FAIL: {f}")
@@ -577,7 +661,7 @@ def main(argv=None) -> int:
                "rand_io_bytes": RAND_IO, "rand_ops": RAND_OPS,
                "block_bytes": BLOCK, "runs": runs, "speedups": speedups,
                "quorum": quorum, "device_direct": device_direct,
-               "cluster": cluster,
+               "cluster": cluster, "faulted": faulted,
                # fleet totals across every run (the shared merge_counters)
                "counter_totals": merge_counters(
                    [r["seq_counters"] for r in runs]),

@@ -12,7 +12,12 @@
 # baseline (dpu/rdma). The PR-5 cluster section then gates striped reads:
 # bit-exact roundtrip, both targets serving placements, and 2-target
 # striped read capacity >= 1.6x the 1-target run (calibrated pipeline x
-# measured placement spread). Wired into `make bench-smoke` / `make check`.
+# measured placement spread). The PR-6 fault section re-runs the striped
+# workload under a seeded FaultInjector (wire errors, partial SG
+# transfers, media I/O faults) and fails unless the run stays bit-exact,
+# records transport retransmits AND media-level recoveries, and leaks
+# zero staging slots or donated leases. Wired into `make bench-smoke` /
+# `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

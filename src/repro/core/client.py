@@ -78,10 +78,14 @@ import numpy as np
 
 from repro.core import transport_model as tm
 from repro.core.control_plane import ControlPlane
-from repro.core.data_plane import (MemoryRegion, MemoryRegistry,
-                                   RDMATransport, TCPTransport)
+from repro.core.data_plane import (AccessError, MemoryRegion,
+                                   MemoryRegistry, RDMATransport,
+                                   TCPTransport)
 from repro.core.dfs import (AKEY, BLOCK, DFSClient, DFSError, DFSMeta,
                             split_blocks)
+from repro.core.faults import (DEFAULT_TIMEOUTS, FaultInjector,
+                               InjectedTransientError, OpTimeout, Timeouts,
+                               note_recovery)
 from repro.core.metadata_cache import MetadataCache
 from repro.core.media import (Device, crc32_checksum, make_nvme_array,
                               striped_stations)
@@ -182,9 +186,13 @@ class _StagingRing:
     pull leased slots back instead of waiting out their owners."""
 
     def __init__(self, registry: MemoryRegistry, n_slots: int,
-                 slot_bytes: int, tenant: str):
+                 slot_bytes: int, tenant: str,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS,
+                 label: Optional[str] = None):
         self.n_slots = max(1, int(n_slots))
         self.slot_bytes = int(slot_bytes)
+        self.timeouts = timeouts
+        self.label = label            # op context for timeout errors
         self.region = registry.register(self.n_slots * self.slot_bytes,
                                         tenant)
         self._locks = [threading.Lock() for _ in range(self.n_slots)]
@@ -200,10 +208,13 @@ class _StagingRing:
     def set_reclaim(self, cb) -> None:
         self._reclaim = cb
 
-    def acquire(self, k: int, timeout: float = 120.0) -> List[int]:
+    def acquire(self, k: int, timeout: Optional[float] = None) -> List[int]:
         k = min(k, self.n_slots)
+        if timeout is None:
+            timeout = self.timeouts.staging_acquire_s
         import time as _time
-        deadline = _time.monotonic() + timeout
+        start = _time.monotonic()
+        deadline = start + timeout
         while True:
             with self._cv:
                 if len(self._free) >= k:
@@ -212,7 +223,11 @@ class _StagingRing:
                 reclaimable = bool(self._donated) and self._reclaim is not None
                 if not reclaimable:
                     if not self._cv.wait(deadline - _time.monotonic()):
-                        raise TimeoutError("staging ring exhausted")
+                        raise OpTimeout(
+                            "staging.acquire", target=self.label,
+                            elapsed_s=_time.monotonic() - start,
+                            detail=f"ring exhausted ({k} slots wanted, "
+                                   f"{len(self._free)} free)")
                     continue
             # leased slots outstanding: ask media to write back (outside
             # the cv — writeback completion re-enters via _return_slot);
@@ -224,7 +239,12 @@ class _StagingRing:
                     slots = [self._free.pop() for _ in range(k)]
                     break
                 if _time.monotonic() >= deadline:
-                    raise TimeoutError("staging ring exhausted")
+                    raise OpTimeout(
+                        "staging.acquire", target=self.label,
+                        elapsed_s=_time.monotonic() - start,
+                        detail=f"ring exhausted ({k} slots wanted, "
+                               f"{len(self._free)} free, "
+                               f"{len(self._donated)} donated)")
                 self._cv.wait(0.05)
         for s in slots:
             acquired = self._locks[s].acquire(blocking=False)
@@ -307,9 +327,15 @@ class _ServerIO:
                  crypto: Optional[InlineCrypto] = None,
                  n_staging_slots: int = 16, legacy: bool = False,
                  zero_copy: bool = True,
-                 target_up: Optional[Callable[[], bool]] = None):
+                 target_up: Optional[Callable[[], bool]] = None,
+                 faults: Optional[FaultInjector] = None,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS,
+                 label: Optional[str] = None):
         self.container = engine_container
         self._target_up = target_up
+        self._faults = faults
+        self.timeouts = timeouts
+        self.label = label
         self.creg = client_registry
         self.sreg = server_registry
         self.tenant = tenant
@@ -335,7 +361,8 @@ class _ServerIO:
         self._dst_rkey_lock = threading.Lock()
         # server staging ring (bounce buffers) for the engine side; the
         # legacy path uses the same region through `self.staging`
-        self.ring = _StagingRing(self.sreg, n_staging_slots, BLOCK, tenant)
+        self.ring = _StagingRing(self.sreg, n_staging_slots, BLOCK, tenant,
+                                 timeouts=timeouts, label=label)
         self.staging = self.ring.region
         if self.zero_copy:
             self.ring.set_reclaim(self._reclaim_donations)
@@ -344,6 +371,7 @@ class _ServerIO:
         else:
             self.xport = TCPTransport(local=self.creg, remote=self.sreg,
                                       sendmsg_batching=self.zero_copy)
+        self.xport.faults = faults
         # capability exchange happens in the owner's bring-up compound
         # (ROS2Client) — attach_session hands us the session + staging rkey
         self._sid: Optional[int] = None
@@ -384,6 +412,69 @@ class _ServerIO:
         a target the pool map marks down (one refresh fixes the client)."""
         if self._target_up is not None and not self._target_up():
             raise TargetDownError("engine target is down in the pool map")
+        # injected target crash mid-op: the engine dies AFTER admission —
+        # exactly the window the router's surgical retry must cover
+        if self._faults is not None \
+                and self._faults.pick("engine.crash", target=self.label) \
+                is not None:
+            raise TargetDownError(
+                f"injected target crash mid-op ({self.label})")
+
+    def _note_recovery(self, path: str) -> None:
+        note_recovery(self._faults, path)
+
+    def _maybe_expire_cap(self) -> None:
+        """Injected premature rkey expiry: the SERVER-side lease on our
+        staging rkey lapses under us (clock skew / recalled lease), so the
+        next SG op fails the transport's real capability check with
+        AccessError — recovery is the renew_rkey control RPC + one retry
+        (`_xport_op` below), never a bypass of the check itself."""
+        if self._faults is None or self.staging_rkey is None:
+            return
+        if self._faults.pick("cap.expire", target=self.label) is None:
+            return
+        ent = self.sreg._rkeys.get(self.staging_rkey)
+        if ent is not None:
+            ent.expires_at = 0.0
+
+    def _renew_staging_rkey(self) -> bool:
+        """Recover a lapsed staging capability through the control plane
+        (the same renew_rkey RPC lease renewal uses)."""
+        if self._sid is None or self.staging_rkey is None:
+            return False
+        r = self.cp.rpc("renew_rkey", session_id=self._sid,
+                        rkey=self.staging_rkey, ttl_s=3600.0)
+        return bool(r.get("ok"))
+
+    def _xport_op(self, fn):
+        """Run one SG transport op with surgical fault recovery:
+
+        * InjectedTransientError — a wire-level fault (the RC QP would
+          retransmit); the SG ops are idempotent (same descriptors, same
+          bytes), so a bounded run of immediate retransmits is the
+          recovery (budget shared with the cluster retry policy).
+        * AccessError — the staging capability lapsed (premature expiry);
+          renew it via the control plane and retry once. A renewal refusal
+          (revoked key) re-raises — capabilities are never bypassed.
+        """
+        retransmits = 0
+        while True:
+            try:
+                out = fn()
+            except InjectedTransientError:
+                retransmits += 1
+                if retransmits > max(1, self.timeouts.retry_budget):
+                    raise
+                continue
+            except AccessError:
+                if not self._renew_staging_rkey():
+                    raise
+                out = fn()
+                self._note_recovery("cap.renewed")
+                return out
+            if retransmits:
+                self._note_recovery("transport.retry")
+            return out
 
     @property
     def stats(self):
@@ -434,6 +525,11 @@ class _ServerIO:
             out["meta_cache"] = asdict(self.cache.stats)
         if self.crypto is not None:
             out["crypto"] = asdict(self.crypto.stats)
+        if self._faults is not None:
+            # every injection and every recovery path taken, first-class
+            # next to the costs they perturb (injector shared fleet-wide —
+            # the router reports it once, not summed per session)
+            out["faults"] = self._faults.counters()
         return out
 
     # -- vectored write path -------------------------------------------------
@@ -502,10 +598,12 @@ class _ServerIO:
                             j += 1
                         p += ln
                     if self.transport_kind == "rdma":
-                        self.xport.write_sg(self._staging_token(), self.tenant,
-                                            iov)
+                        self._maybe_expire_cap()
+                        self._xport_op(lambda: self.xport.write_sg(
+                            self._staging_token(), self.tenant, iov))
                     else:
-                        self.xport.write_sg(self.staging, iov)
+                        self._xport_op(
+                            lambda: self.xport.write_sg(self.staging, iov))
                     items, leases = [], []
                     for (b, bo, ln), s in zip(batch, slots):
                         view = self.ring.view(s)[:ln]
@@ -713,8 +811,8 @@ class _ServerIO:
                                             self._active_reads)
         try:
             for mr, descs, refs in by_mr.values():
-                views = self.xport.place_sg(self._dst_rkey(mr), self.tenant,
-                                            descs)
+                views = self._xport_op(lambda: self.xport.place_sg(
+                    self._dst_rkey(mr), self.tenant, descs))
                 for ref, view in zip(refs, views):
                     ref[0] = view
             for b, bo, ln, subs in per_block:
@@ -774,10 +872,12 @@ class _ServerIO:
                             j += 1
                         pos += ln
                     if self.transport_kind == "rdma":
-                        self.xport.read_sg(self._staging_token(), self.tenant,
-                                           iov)
+                        self._maybe_expire_cap()
+                        self._xport_op(lambda: self.xport.read_sg(
+                            self._staging_token(), self.tenant, iov))
                     else:
-                        self.xport.read_sg(self.staging, iov)
+                        self._xport_op(
+                            lambda: self.xport.read_sg(self.staging, iov))
                 finally:
                     self.ring.release(slots)
         finally:
@@ -904,7 +1004,9 @@ class _ClusterRouter:
                  client_registry: MemoryRegistry, tenant: str,
                  make_session: Callable[[int], _ServerIO],
                  cluster_stats: Callable[[], Any],
-                 zero_copy: bool = True):
+                 zero_copy: bool = True,
+                 faults: Optional[FaultInjector] = None,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
         self.sessions = sessions
         self.cp = control
         self.creg = client_registry
@@ -912,16 +1014,21 @@ class _ClusterRouter:
         self._make_session = make_session
         self._cluster_stats = cluster_stats
         self.zero_copy = zero_copy
+        self._faults = faults
+        self.timeouts = timeouts
         self._sid: Optional[int] = None
         self.cache = None
         self._map_lock = threading.Lock()
         self._map_version = 0
         self._tids: List[int] = []
         self._up: Dict[int, bool] = {}
+        self._domains: Optional[Tuple[Optional[str], ...]] = None
         self._map_stale = True
         self.map_refreshes = 0        # get_pool_map RPCs paid
         self.map_invalidations = 0    # server pushes received
-        self.target_retries = 0       # ops re-routed after a refresh
+        self.target_retries = 0       # retry ROUNDS after a refresh
+        self.retried_runs = 0         # per-target runs re-dispatched —
+        # surgical: only the FAILED target's fragments, never the whole op
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
 
@@ -953,6 +1060,9 @@ class _ClusterRouter:
             self._map_version = m["version"]
             self._up = {t["target_id"]: t["up"] for t in m["targets"]}
             self._tids = sorted(self._up)
+            by_tid = {t["target_id"]: t.get("domain") for t in m["targets"]}
+            doms = tuple(by_tid.get(tid) for tid in self._tids)
+            self._domains = None if all(d is None for d in doms) else doms
             self._map_stale = False
             missing = [tid for tid in self._tids
                        if tid not in self.sessions]
@@ -960,9 +1070,15 @@ class _ClusterRouter:
             self.sessions[tid] = self._make_session(tid)
 
     def _refresh_map(self) -> None:
+        # a refresh that fails on a dropped/errored RPC gets ONE retry —
+        # the map is the recovery path, so it must survive transient
+        # control-plane faults itself
         r = self.cp.rpc("get_pool_map", session_id=self._sid)
         if not r["ok"]:
-            raise StorageError(f"pool map refresh failed: {r['error']}")
+            r = self.cp.rpc("get_pool_map", session_id=self._sid)
+            if not r["ok"]:
+                raise StorageError(f"pool map refresh failed: {r['error']}")
+            note_recovery(self._faults, "control.rpc_retry")
         self._adopt(r)
         with self._map_lock:
             self.map_refreshes += 1
@@ -974,10 +1090,12 @@ class _ClusterRouter:
             self._refresh_map()
 
     def _route_block(self, oid: int, b: int) -> int:
-        """First UP target in the block's deterministic placement order."""
+        """First UP target in the block's deterministic placement order
+        (domain-aware when the pool map labels fault domains: failover
+        prefers a target in a DIFFERENT domain than the primary's)."""
         with self._map_lock:
-            tids, up = self._tids, dict(self._up)
-        for idx in placement_order(len(tids), oid, str(b)):
+            tids, up, doms = self._tids, dict(self._up), self._domains
+        for idx in placement_order(len(tids), oid, str(b), doms):
             tid = tids[idx]
             if up.get(tid):
                 return tid
@@ -1009,40 +1127,80 @@ class _ClusterRouter:
                   call) -> None:
         """Route block fragments [(block, file_off, len, payload)] to their
         targets and execute per-target batches — in parallel when the op
-        stripes across more than one target. A TargetDownError (stale map
-        hit a dead target) costs ONE refresh and ONE re-route, not a
-        failure."""
+        stripes across more than one target.
+
+        Failure hardening (surgical retries): a per-target batch failing
+        with TargetDownError (stale map hit a dead target, or the target
+        crashed mid-op) costs one map refresh and a re-dispatch of ONLY
+        that target's fragments — batches that already succeeded are never
+        re-executed (`retried_runs` counts exactly the re-dispatched
+        runs). Retries are bounded by `timeouts.retry_budget` with capped
+        exponential backoff (the first retry is free — the stale-map trip
+        stays a single cheap re-route) and the whole op by
+        `timeouts.op_deadline_s`. Any non-TargetDown error propagates
+        immediately — only routable failures are retried."""
         self._ensure_map()
-        for attempt in (0, 1):
-            groups: Dict[int, List[Tuple[int, int, list]]] = {}
-            for b, fo, ln, payload in frags:
-                groups.setdefault(self._route_block(oid, b), []).append(
-                    (fo, ln, payload))
-            batches = {tid: self._merge_runs(items)
+        start = time.monotonic()
+        pending = list(frags)
+        attempt = 0
+        while True:
+            groups: Dict[int, List[Tuple[int, int, int, list]]] = {}
+            for frag in pending:
+                groups.setdefault(self._route_block(oid, frag[0]),
+                                  []).append(frag)
+            batches = {tid: self._merge_runs(
+                           [(fo, ln, payload)
+                            for _b, fo, ln, payload in items])
                        for tid, items in groups.items()}
-            try:
-                if len(batches) == 1:
-                    (tid, runs), = batches.items()
+            failed: Dict[int, TargetDownError] = {}
+            if len(batches) == 1:
+                (tid, runs), = batches.items()
+                try:
                     self._run_batch(tid, oid, runs, call)
-                else:
-                    pool = self._get_pool()
-                    futs = [pool.submit(self._run_batch, tid, oid, runs,
-                                        call)
-                            for tid, runs in batches.items()]
-                    errs = [e for e in (f.exception() for f in futs)
-                            if e is not None]
-                    if errs:
-                        down = next((e for e in errs
-                                     if isinstance(e, TargetDownError)),
-                                    None)
-                        raise down if down is not None else errs[0]
-                return
-            except TargetDownError:
+                except TargetDownError as e:
+                    failed[tid] = e
+            else:
+                pool = self._get_pool()
+                futs = {tid: pool.submit(self._run_batch, tid, oid, runs,
+                                         call)
+                        for tid, runs in batches.items()}
+                other = None
+                for tid, fut in futs.items():
+                    e = fut.exception()
+                    if isinstance(e, TargetDownError):
+                        failed[tid] = e
+                    elif e is not None and other is None:
+                        other = e
+                if other is not None:
+                    raise other
+            if not failed:
                 if attempt:
-                    raise
-                self._refresh_map()
-                with self._map_lock:
-                    self.target_retries += 1
+                    note_recovery(self._faults, "dispatch.retry")
+                return
+            attempt += 1
+            err = next(iter(failed.values()))
+            elapsed = time.monotonic() - start
+            if attempt > self.timeouts.retry_budget:
+                raise err
+            if elapsed > self.timeouts.op_deadline_s:
+                raise OpTimeout(
+                    "cluster.dispatch",
+                    target=",".join(f"t{t}" for t in sorted(failed)),
+                    elapsed_s=elapsed,
+                    detail=f"retry {attempt} of "
+                           f"{self.timeouts.retry_budget}: {err}")
+            self._refresh_map()
+            with self._map_lock:
+                self.target_retries += 1
+                self.retried_runs += sum(len(batches[tid])
+                                         for tid in failed)
+            time.sleep(self.timeouts.backoff(attempt))
+            # surgical: ONLY the failed targets' fragments go back in
+            # (re-sorted to ascending file order — _merge_runs coalesces
+            # contiguous runs under that invariant)
+            pending = sorted((frag for tid, items in groups.items()
+                              if tid in failed for frag in items),
+                             key=lambda f: f[1])
 
     def _run_batch(self, tid: int, oid: int, runs, call) -> None:
         sess = self.sessions[tid]
@@ -1159,7 +1317,9 @@ class _ClusterRouter:
         out["engine"] = merge_counters([out["engine"],
                                         asdict(self._cluster_stats())])
         out["control"] = per[0]["control"]
-        for k in ("meta_cache", "crypto"):
+        # the injector is ONE fleet-shared object: report it once (summing
+        # per-session copies would multiply every count by n_targets)
+        for k in ("meta_cache", "crypto", "faults"):
             if k in per[0]:
                 out[k] = per[0][k]
         with self._map_lock:
@@ -1170,6 +1330,7 @@ class _ClusterRouter:
                 "map_refreshes": self.map_refreshes,
                 "map_invalidations": self.map_invalidations,
                 "target_retries": self.target_retries,
+                "retried_runs": self.retried_runs,
             }
         return out
 
@@ -1194,7 +1355,9 @@ class ROS2Client:
                  lease_skew: float = 0.25,
                  renew_interval_s: Optional[float] = None,
                  n_targets: int = 1,
-                 hedge_timeout_s: Optional[float] = None):
+                 hedge_timeout_s: Optional[float] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 timeouts: Optional[Timeouts] = None):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
         assert n_targets >= 1
         assert n_targets == 1 or not legacy, \
@@ -1206,13 +1369,22 @@ class ROS2Client:
         self.tenant = tenant
         self._n_staging_slots = n_staging_slots
         self._rkey_ttl_s = rkey_ttl_s
+        # one injectable policy for every data-path wait (staging ring,
+        # commit quorum/drain, DPU completions, dispatch deadline/budget)
+        self.timeouts = timeouts or DEFAULT_TIMEOUTS
+        # one seeded injector shared by EVERY layer boundary (transport,
+        # engine, media, control, capabilities, pool-map pushes)
+        self.faults = fault_injector
         # ---- storage cluster: N unchanged engines behind a pool map ----
         # (n_targets=1 is the seed shape — one engine, and `self.io` IS the
         # single _ServerIO session; n_targets>1 routes through the striped
         # _ClusterRouter with one session per target)
         self.cluster = StorageCluster(
             n_targets=n_targets, n_devices=n_devices,
-            csum=crc32_checksum if legacy else None)
+            csum=crc32_checksum if legacy else None,
+            timeouts=self.timeouts)
+        if fault_injector is not None:
+            self.cluster.set_faults(fault_injector)
         for t in self.cluster.targets:
             # extent-level hedged reads (None = off): _read_extent races
             # the second replica when the primary exceeds the budget
@@ -1236,6 +1408,10 @@ class ROS2Client:
         # target's verified cache under one budget).
         self.scrubber = MediaScrubber(
             self.store if n_targets == 1 else self.cluster, idle_aware=True)
+        # rebuild/rebalance re-replication shares the scrubber's idle-
+        # aware budget: healing pauses under foreground load (bounded by
+        # the same starvation floor) instead of stealing media bandwidth
+        self.cluster.heal_pacer = self.scrubber
         # one server-side registry (staging ring home) per engine target
         for t in self.cluster.targets:
             t.registry = MemoryRegistry(f"server-t{t.target_id}")
@@ -1246,6 +1422,7 @@ class ROS2Client:
             tenants={tenant: secret}, meta_lease_s=meta_lease_s)
         self.meta = DFSMeta(self.store if n_targets == 1 else self.cluster)
         self.control.bind_dfs(self.meta)
+        self.control.faults = fault_injector
         # ---- client side (host or DPU) ----
         self.client_registry = MemoryRegistry("dpu" if mode == "dpu"
                                               else "host")
@@ -1267,7 +1444,8 @@ class ROS2Client:
                 self._sessions, self.control, self.client_registry, tenant,
                 make_session=self._attach_target_session,
                 cluster_stats=lambda: self.cluster.stats,
-                zero_copy=zero_copy)
+                zero_copy=zero_copy,
+                faults=fault_injector, timeouts=self.timeouts)
         # ---- session bring-up ----
         rkey, rkey_ttl = None, None
         if legacy:
@@ -1332,7 +1510,9 @@ class ROS2Client:
             else min(1.0, max(0.02, rkey_ttl_s / 10))
         self.dpu: Optional[DPURuntime] = None
         if mode == "dpu":
-            self.dpu = DPURuntime(n_cores=n_dpu_cores)
+            self.dpu = DPURuntime(n_cores=n_dpu_cores,
+                                  timeouts=self.timeouts)
+            self.dpu.faults = fault_injector
             self.dpu.register("read", self.dfs.pread)
             self.dpu.register("write", self.dfs.pwrite)
             self.dpu.register("open", self.dfs.open)
@@ -1378,7 +1558,9 @@ class ROS2Client:
                          n_staging_slots=self._n_staging_slots,
                          legacy=self.legacy, zero_copy=self.zero_copy,
                          target_up=lambda tid=tid:
-                             self.cluster.pool_map.is_up(tid))
+                             self.cluster.pool_map.is_up(tid),
+                         faults=self.faults, timeouts=self.timeouts,
+                         label=f"t{tid}")
 
     def _attach_target_session(self, tid: int) -> _ServerIO:
         """Router factory for a target discovered on a map refresh
@@ -1396,7 +1578,8 @@ class ROS2Client:
         sess.attach_session(self.session_id, rkey, ttl, self.cache)
         return sess
 
-    def add_target(self, n_devices: Optional[int] = None) -> int:
+    def add_target(self, n_devices: Optional[int] = None,
+                   domain: Optional[str] = None) -> int:
         """Grow the fleet by one engine target. The pool map bumps and is
         pushed to routed clients; jump-consistent placement moves only
         ~1/(n+1) of the keys onto the newcomer (rebalanced onto it by the
@@ -1409,7 +1592,7 @@ class ROS2Client:
             raise RuntimeError(
                 "add_target requires a routed client — construct "
                 "ROS2Client(n_targets=2+) to grow the fleet at runtime")
-        t = self.cluster.add_target(n_devices)
+        t = self.cluster.add_target(n_devices, domain=domain)
         t.registry = MemoryRegistry(f"server-t{t.target_id}")
         self.control.add_registry(t.registry)
         return t.target_id
@@ -1424,11 +1607,13 @@ class ROS2Client:
             t.store.hedge_timeout_s = timeout_s
 
     # ---- POSIX-ish sync API (host launches; DPU executes in dpu mode) ----
-    def _dpu_call(self, op: str, _timeout: float = 120.0, **args):
+    def _dpu_call(self, op: str, _timeout: Optional[float] = None, **args):
         """Doorbell + wait for OUR completion (tag-matched: safe under
         concurrent callers like the prefetching loader + checkpoint writer;
         generous timeout because bulk writes ahead of us in the queue may
         legitimately take tens of seconds)."""
+        if _timeout is None:
+            _timeout = self.timeouts.dpu_wait_s
         tag = self.dpu.submit(op, **args)
         c = self.dpu.wait_tag(tag, timeout=_timeout)
         if not c.ok:

@@ -80,6 +80,9 @@ class ControlPlane:
         self.rpc_bytes = 0
         self.compound_ops = 0           # ops carried inside compound RPCs
         self.invalidations_sent = 0     # server->client lease recalls
+        # optional FaultInjector (core.faults): "control.rpc.<method>"
+        # drop/delay rules and "map.push" lost-recall rules bite here
+        self.faults = None
         if hasattr(store, "pool_map"):  # cluster: push every map bump
             store.pool_map.subscribe(self._push_pool_map)
 
@@ -112,6 +115,13 @@ class ControlPlane:
             self.rpc_count += 1
             self.rpc_bytes += 64 + sum(
                 len(str(v)) for v in payload.values())    # envelope estimate
+        if self.faults is not None:
+            # injected control-plane anomalies: a "drop" rule loses this
+            # request on the wire (the caller sees a failed envelope and
+            # retries); a "delay" rule stalls it inside pick()
+            f = self.faults.pick(f"control.rpc.{method}")
+            if f is not None and f.kind == "drop":
+                return {"ok": False, "error": "injected: rpc dropped"}
         fn = getattr(self, f"rpc_{method}", None)
         if fn is None:
             return {"ok": False, "error": f"no method {method}"}
@@ -219,10 +229,17 @@ class ControlPlane:
 
     def _push_pool_map(self, version: int) -> None:
         """Recall every routed client's cached map: the next op performs
-        ONE get_pool_map refresh instead of failing into a dead target."""
+        ONE get_pool_map refresh instead of failing into a dead target.
+        A "map.push" drop rule models a LOST recall: the client stays
+        stale until a TargetDownError trip forces the refresh (the same
+        path `PoolMap.set_state(notify=False)` drives in tests)."""
         with self._sessions_lock:
             subs = list(self._map_subs.values())
         for cb in subs:
+            if self.faults is not None:
+                f = self.faults.pick("map.push")
+                if f is not None and f.kind == "drop":
+                    continue          # this client never hears the recall
             with self._lock:
                 self.invalidations_sent += 1
             cb(version)

@@ -205,12 +205,29 @@ class RDMATransport:
         self.local = local
         self.remote = remote
         self.stats = TransportStats()
+        # optional FaultInjector (core.faults): "transport.*" rules model
+        # link anomalies on the vectored verbs — error (op fails before
+        # any byte moves), partial (a prefix lands, then the op fails),
+        # delay. Initiator-side hardening retries the op, RC-retransmit
+        # style; SG ops are idempotent so a partial retry is safe.
+        self.faults = None
         # token -> (key, region, owning registry): one cache serves both
         # directions (initiator-side rkeys for server-initiated placement
         # live in `local`, target-side rkeys in `remote`)
         self._rkey_cache: Dict[str, Tuple[RKey, MemoryRegion,
                                           MemoryRegistry]] = {}
         self._stats_lock = threading.Lock()
+
+    def _sg_fault(self, op: str, partial=None) -> None:
+        """Evaluate injected anomalies for one SG op (no-op unwired)."""
+        if self.faults is None:
+            return
+        f = self.faults.pick(f"transport.{op}")
+        if f is None or f.kind == "delay":
+            return
+        if f.kind == "partial" and partial is not None:
+            partial()                 # a prefix of the op's bytes lands
+        raise f.make_exc(f"transport.{op}")
 
     def _splice(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
                 size: int) -> None:
@@ -302,6 +319,10 @@ class RDMATransport:
                 iov: Sequence[SGDescriptor]) -> int:
         """Gather-read: remote region -> N local destinations, one bulk op."""
         mr = self._sg_setup(rkey, tenant, "r", iov)
+        if iov:
+            r0, l0, o0, s0 = iov[0]
+            self._sg_fault("read_sg", partial=lambda: self._splice(
+                mr.buf, r0, l0.buf, o0, s0))
         for roff, lmr, loff, size in iov:
             self._splice(mr.buf, roff, lmr.buf, loff, size)
         return sum(d[3] for d in iov)
@@ -310,6 +331,10 @@ class RDMATransport:
                  iov: Sequence[SGDescriptor]) -> int:
         """Scatter-write: N local sources -> remote region, one bulk op."""
         mr = self._sg_setup(rkey, tenant, "w", iov)
+        if iov:
+            r0, l0, o0, s0 = iov[0]
+            self._sg_fault("write_sg", partial=lambda: self._splice(
+                l0.buf, o0, mr.buf, r0, s0))
         for roff, lmr, loff, size in iov:
             self._splice(lmr.buf, loff, mr.buf, roff, size)
         return sum(d[3] for d in iov)
@@ -327,6 +352,7 @@ class RDMATransport:
         eager-or-rendezvous decision for the summed length, one descriptor
         per span, and exactly one counted copy per byte (charged here, at
         placement grant time — the fill IS the DMA)."""
+        self._sg_fault("place_sg")    # before any grant: retry re-derives
         mr = self._resolve_cached(rkey, tenant, "w", registry=self.local)
         total = sum(s for _, s in spans)
         for roff, size in spans:
@@ -375,8 +401,20 @@ class TCPTransport:
         self.remote = remote
         self.sendmsg_batching = sendmsg_batching
         self.stats = TransportStats()
+        self.faults = None            # optional FaultInjector (core.faults)
         self._kernel_buf = np.zeros(KERNEL_BUF, np.uint8)
         self._kbuf_lock = threading.Lock()
+
+    def _sg_fault(self, op: str, partial=None) -> None:
+        """Injected link anomalies, mirroring RDMATransport._sg_fault."""
+        if self.faults is None:
+            return
+        f = self.faults.pick(f"transport.{op}")
+        if f is None or f.kind == "delay":
+            return
+        if f.kind == "partial" and partial is not None:
+            partial()
+        raise f.make_exc(f"transport.{op}")
 
     def _stream(self, src: np.ndarray, so: int, dst: np.ndarray, do: int,
                 size: int) -> None:
@@ -426,6 +464,10 @@ class TCPTransport:
                 iov: Sequence[SGDescriptor]) -> int:
         with self._kbuf_lock:                     # concurrent SG callers
             self._sg_control(iov)
+        if iov:
+            r0, l0, o0, s0 = iov[0]
+            self._sg_fault("read_sg", partial=lambda: self._stream(
+                region.buf, r0, l0.buf, o0, s0))
         for roff, lmr, loff, size in iov:
             self._stream(region.buf, roff, lmr.buf, loff, size)
         return sum(d[3] for d in iov)
@@ -434,6 +476,10 @@ class TCPTransport:
                  iov: Sequence[SGDescriptor]) -> int:
         with self._kbuf_lock:
             self._sg_control(iov)
+        if iov:
+            r0, l0, o0, s0 = iov[0]
+            self._sg_fault("write_sg", partial=lambda: self._stream(
+                l0.buf, o0, region.buf, r0, s0))
         for roff, lmr, loff, size in iov:
             self._stream(lmr.buf, loff, region.buf, roff, size)
         return sum(d[3] for d in iov)

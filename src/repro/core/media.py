@@ -85,6 +85,11 @@ class Device:
         # injectable per-read latency: makes THIS device the straggler the
         # engine's extent-level hedged reads race against
         self.read_delay_s = 0.0
+        # optional FaultInjector (core.faults) shared with the engine: its
+        # "media.write"/"media.read" rules raise I/O errors here, BEFORE
+        # any mutation — the committer's exactly-once pin-release contract
+        # below holds for injected failures identically to real ones
+        self.faults = None
 
     def write(self, key: int, data, lease=None, pre_pinned: bool = False)\
             -> None:
@@ -94,6 +99,8 @@ class Device:
         never be freed between the op returning at quorum and a straggler
         replica starting its background commit). On ANY failure the pin is
         left untouched — the committer owns releasing it, exactly once."""
+        if self.faults is not None:
+            self.faults.fire("media.write", dev=self.name)
         if self.commit_delay_s:
             time_sleep(self.commit_delay_s)
         if not self.alive:
@@ -151,6 +158,8 @@ class Device:
         return done
 
     def read(self, key: int) -> bytes:
+        if self.faults is not None:
+            self.faults.fire("media.read", dev=self.name)
         if self.read_delay_s:
             time_sleep(self.read_delay_s)
         if not self.alive:

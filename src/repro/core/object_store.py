@@ -22,6 +22,8 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from repro.core.faults import (DEFAULT_TIMEOUTS, FaultInjector, OpTimeout,
+                               Timeouts, note_recovery)
 from repro.core.media import Device, checksum, make_nvme_array
 
 
@@ -63,11 +65,13 @@ class _PendingCommit:
     — a worker that lost the race deletes its own just-written block)."""
 
     __slots__ = ("quorum", "total", "ok", "done", "failed", "cancelled",
-                 "acked", "cv")
+                 "acked", "cv", "timeouts")
 
-    def __init__(self, quorum: int, total: int):
+    def __init__(self, quorum: int, total: int,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
         self.quorum = quorum
         self.total = total
+        self.timeouts = timeouts
         self.ok = 0
         self.done = 0
         self.failed: List[Tuple[str, int, Exception]] = []  # (dev, key, err)
@@ -91,26 +95,34 @@ class _PendingCommit:
             self.cv.notify_all()
             return self.acked, self.cancelled
 
-    def wait_quorum(self, timeout: float = 120.0) -> bool:
+    def wait_quorum(self, timeout: Optional[float] = None) -> bool:
         """Block until `quorum` replicas landed (True) or every commit
         finished with fewer successes (False)."""
-        deadline = time.monotonic() + timeout
+        timeout = self.timeouts.quorum_s if timeout is None else timeout
+        start = time.monotonic()
+        deadline = start + timeout
         with self.cv:
             while self.ok < self.quorum and self.done < self.total:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self.cv.wait(remaining):
-                    raise StorageError("replica commit quorum timeout")
+                    raise OpTimeout(
+                        "commit.quorum", elapsed_s=time.monotonic() - start,
+                        detail=f"{self.ok}/{self.quorum} replicas acked")
             return self.ok >= self.quorum
 
-    def wait_complete(self, timeout: float = 120.0) -> None:
+    def wait_complete(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted replica commit finished (the abort
         path drains stragglers so cleanup is deterministic)."""
-        deadline = time.monotonic() + timeout
+        timeout = self.timeouts.drain_s if timeout is None else timeout
+        start = time.monotonic()
+        deadline = start + timeout
         with self.cv:
             while self.done < self.total:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0 or not self.cv.wait(remaining):
-                    raise StorageError("replica commit drain timeout")
+                    raise OpTimeout(
+                        "commit.drain", elapsed_s=time.monotonic() - start,
+                        detail=f"{self.done}/{self.total} commits finished")
 
     def ack(self) -> List[Tuple[str, int, Exception]]:
         """Op-thread handoff: mark the op returned and claim every failure
@@ -155,6 +167,9 @@ class EngineStats:
     hedges_won: int = 0              # hedged reads the 2nd replica won
     cross_target_rereplications: int = 0  # spareless demotions healed on a
     # PEER engine target (cluster-level redundancy restore)
+    heal_deferrals: int = 0          # healing waits taken under fg load
+    deferred_heal_bytes: int = 0     # healing bytes parked by those waits
+    heal_floor_grants: int = 0       # heals forced through at the floor
 
 
 class VerifiedExtentCache:
@@ -286,7 +301,7 @@ class DAOSObject:
             for dkey, akey, offset, payload, targets, lease in staged:
                 n = _nbytes(payload)
                 rec = _PendingCommit(cont.commit_quorum(len(targets)),
-                                     len(targets))
+                                     len(targets), timeouts=store.timeouts)
                 # quorum == width means the op must wait for every replica
                 # anyway: commit inline, no pool hop (the replication=2
                 # default keeps its PR-3 latency). A sub-width quorum fans
@@ -350,7 +365,7 @@ class DAOSObject:
                 if not ext.pending.wait_quorum():
                     failed_item = ext
                     break
-            except StorageError:
+            except (StorageError, TimeoutError):
                 failed_item = ext
                 break
         if failed_item is not None:
@@ -471,6 +486,7 @@ class DAOSObject:
             # never re-replicate onto the device that just failed the
             # commit — it is suspect even while it still reports alive
             new_name = self._rereplicate(ext, exclude=(dev_name,))
+            note_recovery(cont.store.faults, "media.rereplicated")
         except StorageError:
             # no LOCAL spare: escalate to the cluster (if one hosts this
             # engine) so redundancy is restored on a PEER target's devices
@@ -682,6 +698,10 @@ class DAOSObject:
             if err is not None:
                 last_err = err
                 continue               # silent-corruption -> next replica
+            if last_err is not None:
+                # an earlier replica failed and THIS one served the read:
+                # the degraded-read failover path ran to completion
+                note_recovery(store.faults, "read.degraded_replica")
             return data
         raise StorageError(f"extent unreadable from all replicas: {last_err}")
 
@@ -977,12 +997,17 @@ class ObjectStore:
     path (the `legacy=True` benchmark baseline)."""
 
     def __init__(self, devices: List[Device],
-                 csum: Optional[Callable[[bytes], int]] = None):
+                 csum: Optional[Callable[[bytes], int]] = None,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
         assert devices, "need at least one device"
         self.devices = devices
         self.pools: Dict[str, Pool] = {}
         self._block_keys = itertools.count(1)
         self.csum = csum or checksum
+        self.timeouts = timeouts
+        # optional fault injector (faults.py); wired by the owner, shared
+        # with the devices/cluster so one schedule spans every layer
+        self.faults: Optional[FaultInjector] = None
         self.stats = EngineStats()
         self._stats_lock = threading.Lock()
         self._commit_pool: Optional[ThreadPoolExecutor] = None
@@ -1105,21 +1130,46 @@ def jump_hash(key: int, n_buckets: int) -> int:
 
 
 @lru_cache(maxsize=1 << 16)
-def placement_order(n_targets: int, oid: int, dkey: str) -> Tuple[int, ...]:
+def placement_order(n_targets: int, oid: int, dkey: str,
+                    domains: Optional[Tuple[Optional[str], ...]] = None
+                    ) -> Tuple[int, ...]:
     """Deterministic target preference order for (oid, dkey): the jump-
     hash primary first, then the ring successors (the failover / cross-
     target-redundancy candidates, in the order every client and server
     derives identically with ZERO per-op metadata lookups). Computed over
     ALL registered targets — up/down filtering happens at selection time,
-    so a target bouncing does not reshuffle placement."""
+    so a target bouncing does not reshuffle placement.
+
+    `domains` (optional, position-aligned fault-domain labels from the
+    pool map) spreads the SUCCESSOR picks across distinct fault domains:
+    the primary is unchanged (flat data placement is untouched), but each
+    following pick prefers the least-represented domain so replicas and
+    failover candidates land across racks/hosts, ring order breaking
+    ties. With no labels (None / all-None) the flat ring is returned
+    bit-identically to the unlabeled fleet."""
     primary = jump_hash(_place_key(oid, dkey), n_targets)
-    return tuple((primary + i) % n_targets for i in range(n_targets))
+    ring = tuple((primary + i) % n_targets for i in range(n_targets))
+    if (domains is None or len(domains) != n_targets
+            or all(d is None for d in domains)):
+        return ring
+    order = [ring[0]]
+    seen: Dict[Optional[str], int] = {domains[ring[0]]: 1}
+    rest = list(ring[1:])
+    while rest:
+        nxt = min(rest, key=lambda t: (seen.get(domains[t], 0),
+                                       rest.index(t)))
+        rest.remove(nxt)
+        order.append(nxt)
+        seen[domains[nxt]] = seen.get(domains[nxt], 0) + 1
+    return tuple(order)
 
 
 @dataclass
 class TargetInfo:
     target_id: int
     up: bool = True
+    domain: Optional[str] = None      # fault-domain label (rack/host); None
+    # on unlabeled fleets keeps placement flat
 
 
 class PoolMap:
@@ -1149,9 +1199,10 @@ class PoolMap:
             cb(v)
         return v
 
-    def add_target(self, target_id: int) -> None:
+    def add_target(self, target_id: int,
+                   domain: Optional[str] = None) -> None:
         with self._lock:
-            self.targets.append(TargetInfo(target_id))
+            self.targets.append(TargetInfo(target_id, domain=domain))
         self._bump()
 
     def set_state(self, target_id: int, up: bool, notify: bool = True) -> None:
@@ -1179,14 +1230,23 @@ class PoolMap:
         with self._lock:
             return len(self.targets)
 
+    def domain_layout(self) -> Optional[Tuple[Optional[str], ...]]:
+        """Position-aligned fault-domain labels, or None when the fleet is
+        unlabeled (placement stays flat)."""
+        with self._lock:
+            doms = tuple(t.domain for t in self.targets)
+        return doms if any(d is not None for d in doms) else None
+
     def place(self, oid: int, dkey: str) -> Tuple[int, ...]:
-        return placement_order(self.n_targets(), oid, dkey)
+        return placement_order(self.n_targets(), oid, dkey,
+                               self.domain_layout())
 
     def describe(self) -> Dict[str, Any]:
         """Wire form of the map (what `get_pool_map` serves)."""
         with self._lock:
             return {"version": self.version,
-                    "targets": [{"target_id": t.target_id, "up": t.up}
+                    "targets": [{"target_id": t.target_id, "up": t.up,
+                                 "domain": t.domain}
                                 for t in self.targets],
                     "redundancy": {k: dict(v)
                                    for k, v in self.redundancy.items()}}
@@ -1311,21 +1371,31 @@ class StorageCluster:
     cache."""
 
     def __init__(self, n_targets: int = 1, n_devices: int = 4,
-                 csum: Optional[Callable[[bytes], int]] = None):
+                 csum: Optional[Callable[[bytes], int]] = None,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
         self.csum = csum or checksum
         self.n_devices = int(n_devices)
+        self.timeouts = timeouts
+        self.faults: Optional[FaultInjector] = None
         self.pool_map = PoolMap()
         self.targets: List[EngineTarget] = []
         self.pools: Dict[str, ClusterPool] = {}
         self.stats = EngineStats()    # fleet-level events (cross-target
         self._stats_lock = threading.Lock()       # heals, cluster scrubs)
         self._cont_index: Dict[int, Tuple[ClusterContainer, int]] = {}
+        # healing throttle: when a MediaScrubber is wired here, resync /
+        # cross-target re-replication traffic pauses through its
+        # idle-aware budget (same starvation floor as scrub cycles)
+        self.heal_pacer: Optional["MediaScrubber"] = None
+        self.heal_pause_s = 0.002
+        self._heal_defer_streak = 0
         for _ in range(n_targets):
             self.add_target()
 
     # -- fleet membership ----------------------------------------------------
     def add_target(self, n_devices: Optional[int] = None,
-                   rebalance: bool = True) -> EngineTarget:
+                   rebalance: bool = True,
+                   domain: Optional[str] = None) -> EngineTarget:
         """Bring a new (empty) engine target into the fleet: existing
         pools/containers materialize on it, the pool map bumps, and jump-
         consistent placement moves only ~1/(n+1) of the keys toward it —
@@ -1335,8 +1405,12 @@ class StorageCluster:
         tid = len(self.targets)
         store = ObjectStore(
             make_nvme_array(n_devices or self.n_devices, prefix=f"t{tid}."),
-            csum=self.csum)
+            csum=self.csum, timeouts=self.timeouts)
         store.on_spareless_demotion = self._heal_cross_target
+        if self.faults is not None:
+            store.faults = self.faults
+            for d in store.devices:
+                d.faults = self.faults
         if self.targets:              # inherit fleet-wide engine knobs
             store.hedge_timeout_s = self.targets[0].store.hedge_timeout_s
         target = EngineTarget(tid, store)
@@ -1344,7 +1418,7 @@ class StorageCluster:
         for pool in self.pools.values():
             for cc in pool.containers.values():
                 self._materialize_container(cc, target)
-        self.pool_map.add_target(tid)
+        self.pool_map.add_target(tid, domain=domain)
         if rebalance:
             self.resync()
         return target
@@ -1403,6 +1477,42 @@ class StorageCluster:
         for t in self.targets:
             t.store.close()
 
+    def set_faults(self, injector: Optional[FaultInjector]) -> None:
+        """Wire one fault injector through every engine target and device
+        (targets added later inherit it in add_target)."""
+        self.faults = injector
+        for t in self.targets:
+            t.store.faults = injector
+            for d in t.store.devices:
+                d.faults = injector
+
+    # -- healing throttle ----------------------------------------------------
+    def _pace_heal(self, nbytes: int) -> None:
+        """Gate one healing transfer (resync migration / cross-target
+        re-replication) on the MediaScrubber's idle-aware budget: while
+        the foreground owns the array (budget squeezed to zero) the heal
+        WAITS — it must still happen, reachability depends on it — up to
+        the scrubber's `max_deferrals` consecutive samples, then proceeds
+        anyway at the same starvation floor that bounds scrub latency.
+        Deferred bytes and floor grants are counted in the fleet stats."""
+        pacer = self.heal_pacer
+        if pacer is None or not pacer.idle_aware:
+            return
+        while True:
+            if pacer.idle_budget() > 0:
+                self._heal_defer_streak = 0
+                return
+            if self._heal_defer_streak >= pacer.max_deferrals:
+                self._heal_defer_streak = 0
+                with self._stats_lock:
+                    self.stats.heal_floor_grants += 1
+                return
+            self._heal_defer_streak += 1
+            with self._stats_lock:
+                self.stats.heal_deferrals += 1
+                self.stats.deferred_heal_bytes += nbytes
+            time.sleep(self.heal_pause_s)
+
     # -- cross-target redundancy restore -------------------------------------
     def _heal_cross_target(self, obj: DAOSObject, ext: Extent) -> None:
         """A post-ack demotion found no spare device INSIDE its engine:
@@ -1418,6 +1528,7 @@ class StorageCluster:
         if indexed is None:
             return                    # engine not part of this cluster
         cc, origin_tid = indexed
+        self._pace_heal(ext.size)
         data = obj._read_extent(ext, verify=True, cache=False)
         for tid in self.pool_map.place(obj.oid, dkey):
             if tid == origin_tid or not self.pool_map.is_up(tid):
@@ -1430,6 +1541,7 @@ class StorageCluster:
                 continue
             with self._stats_lock:
                 self.stats.cross_target_rereplications += 1
+            note_recovery(self.faults, "cluster.healed")
             return
 
     # -- post-recovery placement repair --------------------------------------
@@ -1440,6 +1552,7 @@ class StorageCluster:
         recovered target rejoins. Returns (dkey, akey) groups moved."""
         moved = 0
         n = self.pool_map.n_targets()
+        doms = self.pool_map.domain_layout()
         for pool in self.pools.values():
             for cc in pool.containers.values():
                 for tid in sorted(cc._per_target):
@@ -1450,7 +1563,7 @@ class StorageCluster:
                         with obj._lock:
                             keys = list(obj._extents.keys())
                         for dkey, akey in keys:
-                            order = placement_order(n, oid, dkey)
+                            order = placement_order(n, oid, dkey, doms)
                             home = next((t for t in order
                                          if self.pool_map.is_up(t)), None)
                             if home is None or home == tid:
@@ -1468,6 +1581,7 @@ class StorageCluster:
         try:
             home = cc.target(home_tid).object(oid)
             for ext in exts:          # epoch order preserved: lists are
+                self._pace_heal(ext.size)
                 data = obj._read_extent(ext, verify=True, cache=False)
                 home.update(dkey, akey, ext.offset, bytes(data))
         except StorageError:

@@ -31,6 +31,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.faults import DEFAULT_TIMEOUTS, OpTimeout, Timeouts
+
 N_ARM_CORES = 16
 
 GOLDEN32 = 0x9E3779B9
@@ -215,8 +217,11 @@ class InlineCrypto:
 class DPURuntime:
     """Worker pool + SQ/CQ rings."""
 
-    def __init__(self, n_cores: int = N_ARM_CORES, sq_depth: int = 1024):
+    def __init__(self, n_cores: int = N_ARM_CORES, sq_depth: int = 1024,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
         self.n_cores = n_cores
+        self.timeouts = timeouts
+        self.faults = None            # optional FaultInjector (core.faults)
         self.sq: "queue.Queue[Optional[SQE]]" = queue.Queue(sq_depth)
         self.cq: "queue.Queue[CQE]" = queue.Queue()
         self._tags = itertools.count(1)
@@ -281,6 +286,8 @@ class DPURuntime:
 
     # -- host-side API (doorbell + completion polling only) -----------------
     def submit(self, op: str, **args) -> int:
+        if self.faults is not None:
+            self.faults.fire(f"dpu.submit.{op}")
         tag = next(self._tags)
         self.sq.put(SQE(tag, op, args))
         self.doorbells += 1
@@ -300,27 +307,35 @@ class DPURuntime:
             self.doorbells += 1
         return tags
 
-    def wait_all(self, tags, timeout: float = 120.0) -> Dict[int, CQE]:
+    def wait_all(self, tags, timeout: Optional[float] = None
+                 ) -> Dict[int, CQE]:
         """Collect the completions for a batch of tags (single CQ drain
         loop; completions for other waiters are parked, as in wait_tag)."""
         import time as _time
-        deadline = _time.monotonic() + timeout
+        timeout = self.timeouts.dpu_wait_s if timeout is None else timeout
+        tags = list(tags)
+        start = _time.monotonic()
+        deadline = start + timeout
         out: Dict[int, CQE] = {}
         for tag in tags:
             remaining = deadline - _time.monotonic()
             if remaining <= 0:
-                raise TimeoutError(f"no completion for tag {tag}")
+                raise OpTimeout("dpu.wait_all", target=f"tag {tag}",
+                                elapsed_s=_time.monotonic() - start,
+                                detail=f"{len(out)}/{len(tags)} done")
             out[tag] = self.wait_tag(tag, timeout=remaining)
         return out
 
     def poll(self, timeout: float = 30.0) -> CQE:
         return self.cq.get(timeout=timeout)
 
-    def wait_tag(self, tag: int, timeout: float = 30.0) -> CQE:
+    def wait_tag(self, tag: int, timeout: Optional[float] = None) -> CQE:
         """Wait for a specific completion; safe for concurrent callers
         (completions claimed for other tags are parked for their owners)."""
         import time as _time
-        deadline = _time.monotonic() + timeout
+        timeout = self.timeouts.dpu_tag_s if timeout is None else timeout
+        start = _time.monotonic()
+        deadline = start + timeout
         while _time.monotonic() < deadline:
             with self._claim_lock:
                 c = self._claimed.pop(tag, None)
@@ -333,7 +348,9 @@ class DPURuntime:
                 if c.tag == tag:
                     return c
                 self._claimed[c.tag] = c
-        raise TimeoutError(f"no completion for tag {tag}")
+        raise OpTimeout("dpu.wait_tag", target=f"tag {tag}",
+                        elapsed_s=_time.monotonic() - start,
+                        detail="no completion")
 
     def drain(self, n: int, timeout: float = 30.0) -> Dict[int, CQE]:
         return {c.tag: c for c in (self.poll(timeout) for _ in range(n))}

@@ -1,0 +1,605 @@
+"""Storage-fleet fault injection + failure hardening.
+
+Covers the PR-6 robustness surface: the seeded FaultInjector threaded
+through every layer boundary (transport SG ops, engine admission, media
+reads/writes, control RPCs, capability expiry, pool-map pushes), the
+router's per-op deadline with SURGICAL retries (only the failed target's
+fragments re-dispatch), degraded reads, error-path lease hygiene, the
+unified Timeouts policy with contextful OpTimeout errors, fault-domain-
+aware placement, and idle-aware healing throttle — capped by a seeded
+crash-recovery soak: hundreds of mixed striped ops under a randomized
+fault schedule, bit-exact, zero leaked slots/leases/rkeys.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.client import ROS2Client, _StagingRing
+from repro.core.data_plane import MemoryRegistry
+from repro.core.dfs import BLOCK
+from repro.core.faults import (DEFAULT_TIMEOUTS, Fault, FaultInjector,
+                               InjectedTransientError, OpTimeout, Timeouts)
+from repro.core.object_store import (StorageCluster, StorageError,
+                                     TargetDownError, _PendingCommit,
+                                     placement_order)
+
+
+def _payload(n, seed=0):
+    return bytes(np.random.default_rng(seed).integers(0, 256, n,
+                                                      dtype=np.uint8))
+
+
+def _wait(pred, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def _sessions(c):
+    return list(c.io.sessions.values()) if hasattr(c.io, "sessions") \
+        else [c.io]
+
+
+def _assert_no_leaks(c):
+    """Structural end-state invariants after ANY fault workout:
+
+    * every donated staging slot drained (writebacks land, leases drop
+      exactly once — a double-release would assert inside SlotLease);
+    * every ring's free list is whole (no leaked, no duplicated slots);
+    * no client-side rkey grant outlived its op (transient dst
+      capabilities retired with their registrations).
+    """
+    def drained():
+        for t in c.cluster.targets:
+            for d in t.store.devices:
+                if d.alive:
+                    d.writeback()
+        return all(not s.ring.donated_slots() for s in _sessions(c))
+    assert _wait(drained), "donated slot leases leaked"
+    for s in _sessions(c):
+        with s.ring._cv:
+            assert sorted(s.ring._free) == list(range(s.ring.n_slots))
+        assert not s._dst_rkeys, "dst rkey cache entry leaked"
+    assert not c.client_registry._rkeys, "client rkey grant leaked"
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector mechanics
+
+
+def test_injector_rules_are_seeded_and_counted():
+    inj = FaultInjector(schedule=[
+        ("a.b", Fault("error"), 2),                      # 2nd match, once
+        ("a.*", Fault("delay"), (1, 1)),                 # first match only
+    ], seed=7)
+    assert inj.pick("a.c").kind == "delay"               # rule 2, match 1
+    assert inj.pick("a.b") is None       # rule 1 m=1 (no), rule 2 m=2 (no)
+    f = inj.counters()
+    assert f["injected"] == {"a.c": 1}
+    with pytest.raises(InjectedTransientError):
+        inj.fire("a.b")                                  # rule 1 match 2
+    assert inj.counters()["injected_by_kind"] == {"delay": 1, "error": 1}
+    inj.note_recovery("x")
+    assert inj.counters()["recovered"] == {"x": 1}
+    assert inj.counters()["total_injected"] == 2
+
+
+def test_injector_probability_rules_are_reproducible():
+    sched = [("op", Fault("error"), 0.3)]
+    a = FaultInjector(schedule=sched, seed=11)
+    b = FaultInjector(schedule=sched, seed=11)
+    fires_a = [a.pick("op") is not None for _ in range(200)]
+    fires_b = [b.pick("op") is not None for _ in range(200)]
+    assert fires_a == fires_b
+    assert 20 < sum(fires_a) < 120                       # ~60 expected
+
+
+# ---------------------------------------------------------------------------
+# Timeouts policy + contextful OpTimeout
+
+
+def test_backoff_is_capped_exponential_with_free_first_retry():
+    t = Timeouts(retry_backoff_s=0.05, retry_backoff_cap_s=0.4)
+    assert t.backoff(1) == 0.0
+    assert t.backoff(2) == 0.05
+    assert t.backoff(3) == 0.1
+    assert t.backoff(10) == 0.4                          # capped
+
+
+def test_staging_acquire_timeout_carries_op_context():
+    ring = _StagingRing(MemoryRegistry("srv"), 2, 1024, "default",
+                        timeouts=Timeouts(staging_acquire_s=0.05),
+                        label="t9")
+    held = ring.acquire(2)
+    with pytest.raises(OpTimeout) as ei:
+        ring.acquire(1)
+    assert ei.value.op == "staging.acquire"
+    assert ei.value.target == "t9"
+    assert ei.value.elapsed_s >= 0.05
+    assert "staging.acquire on t9" in str(ei.value)
+    ring.release(held)
+    assert ring.acquire(1)                               # ring still usable
+
+
+def test_quorum_timeout_carries_op_context():
+    rec = _PendingCommit(1, 1, timeouts=Timeouts(quorum_s=0.05))
+    with pytest.raises(OpTimeout) as ei:
+        rec.wait_quorum()
+    assert ei.value.op == "commit.quorum"
+    assert "0/1 replicas" in ei.value.detail
+
+
+def test_client_threads_one_timeouts_policy():
+    t = Timeouts(staging_acquire_s=17.0)
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None, timeouts=t)
+    assert c.timeouts is t
+    assert c.cluster.timeouts is t
+    assert c.io.timeouts is t
+    for s in _sessions(c):
+        assert s.ring.timeouts is t
+        assert s.container.store.timeouts is t
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Fault-domain-aware placement
+
+
+def test_domain_placement_flat_behavior_unchanged():
+    for oid in (1, 5, 77):
+        for b in range(8):
+            flat = placement_order(4, oid, str(b))
+            assert placement_order(4, oid, str(b), None) == flat
+            assert placement_order(4, oid, str(b), (None,) * 4) == flat
+
+
+def test_domain_placement_spreads_successors_across_domains():
+    doms = ("r0", "r0", "r1", "r1")
+    for oid in range(6):
+        for b in range(16):
+            flat = placement_order(4, oid, str(b))
+            order = placement_order(4, oid, str(b), doms)
+            assert sorted(order) == [0, 1, 2, 3]
+            assert order[0] == flat[0]        # data placement untouched
+            # the first failover/replica pick crosses the fault domain
+            assert doms[order[1]] != doms[order[0]]
+
+
+def test_pool_map_serves_domains_and_places_with_them():
+    cluster = StorageCluster(n_targets=2)
+    for t, d in zip(cluster.pool_map.targets, ("r0", "r0")):
+        t.domain = d
+    cluster.add_target(rebalance=False, domain="r1")
+    desc = cluster.pool_map.describe()
+    assert [t["domain"] for t in desc["targets"]] == ["r0", "r0", "r1"]
+    doms = ("r0", "r0", "r1")
+    crossings = 0
+    for oid in range(4):
+        for b in range(8):
+            order = cluster.pool_map.place(oid, str(b))
+            if doms[order[0]] == "r0":
+                assert doms[order[1]] == "r1"   # successor leaves the rack
+                crossings += 1
+    assert crossings > 0
+    cluster.close()
+
+
+def test_router_adopts_domains_from_map_push():
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None)
+    assert c.io._domains is None                 # unlabeled fleet: flat
+    tid = c.add_target(domain="rackZ")
+    fd = c.open("/f", create=True)
+    c.pwrite(fd, _payload(BLOCK, seed=1), 0)     # op adopts the pushed map
+    assert c.io._domains is not None
+    assert c.io._domains[tid] == "rackZ"
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Surgical retries: only the failed target's fragments re-dispatch
+
+
+def test_surgical_retry_redispatches_only_failed_target_runs():
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None)
+    fd = c.open("/f", create=True)
+    data = _payload(8 * BLOCK, seed=2)
+    calls = {0: 0, 1: 0}
+    fail_once = {"armed": True}
+    for tid in (0, 1):
+        sess = c.io.sessions[tid]
+        orig = sess.writev
+
+        def counted(o, fo, bufs, _tid=tid, _orig=orig):
+            calls[_tid] += 1
+            if _tid == 1 and fail_once["armed"]:
+                fail_once["armed"] = False
+                raise TargetDownError("injected target crash mid-op")
+            return _orig(o, fo, bufs)
+
+        sess.writev = counted
+    c.pwrite(fd, data, 0)
+    oid = c.dfs.stat("/f")["oid"]
+    # expected per-target contiguous runs from the placement the router used
+    homes = [placement_order(2, oid, str(b))[0] for b in range(8)]
+    runs = {0: 0, 1: 0}
+    for i, h in enumerate(homes):
+        if i == 0 or homes[i - 1] != h:
+            runs[h] += 1
+    assert runs[0] >= 1 and runs[1] >= 1         # the op really striped
+    # target 0's runs executed ONCE — its successes were never re-run
+    assert calls[0] == runs[0]
+    # target 1: one failed call + the full batch re-dispatched
+    assert calls[1] == 1 + runs[1]
+    assert c.io.target_retries == 1              # one retry ROUND
+    assert c.io.retried_runs == runs[1]          # surgical, not op-total
+    assert c.io.retried_runs < runs[0] + runs[1]
+    assert c.pread(fd, len(data), 0) == data     # bit-exact after retry
+    _assert_no_leaks(c)
+    c.close()
+
+
+def test_dispatch_retry_budget_exhaustion_raises():
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None,
+                   timeouts=Timeouts(retry_budget=2, retry_backoff_s=0.0))
+    fd = c.open("/f", create=True)
+    sess = c.io.sessions[1]
+    fails = {"n": 0}
+    orig = sess.writev
+
+    def always_down(o, fo, bufs):
+        fails["n"] += 1
+        raise TargetDownError("injected: target stays dead")
+
+    sess.writev = always_down
+    with pytest.raises(TargetDownError):
+        c.pwrite(fd, _payload(6 * BLOCK, seed=3), 0)
+    assert fails["n"] == 3                       # initial + 2 budgeted
+    assert c.io.target_retries == 2
+    # error exits stay leak-free, and the path heals once the fault clears
+    sess.writev = orig
+    _assert_no_leaks(c)
+    data = _payload(6 * BLOCK, seed=4)
+    c.pwrite(fd, data, 0)
+    assert c.pread(fd, len(data), 0) == data
+    c.close()
+
+
+def test_dispatch_deadline_raises_optimeout():
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None,
+                   timeouts=Timeouts(op_deadline_s=0.01, retry_budget=100,
+                                     retry_backoff_s=0.02))
+    fd = c.open("/f", create=True)
+    sess = c.io.sessions[1]
+
+    def always_down(o, fo, bufs):
+        time.sleep(0.02)
+        raise TargetDownError("injected: target stays dead")
+
+    sess.writev = always_down
+    with pytest.raises(OpTimeout) as ei:
+        c.pwrite(fd, _payload(6 * BLOCK, seed=5), 0)
+    assert ei.value.op == "cluster.dispatch"
+    assert "t1" in (ei.value.target or "")
+    _assert_no_leaks(c)
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Error-path lease hygiene (satellite: mid-writev failure on a stripe)
+
+
+def test_mid_writev_target_down_releases_all_donated_leases_once():
+    """TargetDownError mid-writev on a 2-target stripe: the surviving
+    target's batches commit (their donated leases release exactly once —
+    a double release would trip SlotLease's freed assertion), the failed
+    target's slots return via the op's finally, and every ring is whole
+    afterwards (test_zero_copy_path-style structural assertions)."""
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None,
+                   timeouts=Timeouts(retry_budget=1, retry_backoff_s=0.0))
+    fd = c.open("/f", create=True)
+    sess = c.io.sessions[1]
+    orig = sess.writev
+    sess.writev = lambda o, fo, bufs: (_ for _ in ()).throw(
+        TargetDownError("injected mid-writev"))
+    with pytest.raises(TargetDownError):
+        c.pwrite(fd, _payload(6 * BLOCK, seed=6), 0)
+    _assert_no_leaks(c)                          # exactly-once, zero leaks
+    sess.writev = orig
+    data = _payload(6 * BLOCK, seed=7)
+    c.pwrite(fd, data, 0)                        # rings still fully usable
+    assert c.pread(fd, len(data), 0) == data
+    _assert_no_leaks(c)
+    c.close()
+
+
+def test_media_commit_abort_releases_prepinned_leases():
+    """An injected media I/O error that defeats the write quorum aborts
+    the update_many batch: the abort drain unpins every pre-pinned
+    donated lease and deletes landed blocks — no slot leaks even though
+    replicas were already in flight."""
+    inj = FaultInjector(schedule=[
+        # replication=2 commits inline with quorum == width, so ONE dead
+        # replica write fails the quorum deterministically
+        ("media.write", Fault("error",
+                              exc=lambda: IOError("injected media write")),
+         1),
+    ])
+    c = ROS2Client(mode="host", transport="rdma", n_targets=1,
+                   replication=2, scrub_interval_s=None, fault_injector=inj)
+    fd = c.open("/f", create=True)
+    with pytest.raises(StorageError):
+        c.pwrite(fd, _payload(BLOCK, seed=8), 0)
+    _assert_no_leaks(c)
+    data = _payload(BLOCK, seed=9)
+    c.pwrite(fd, data, 0)                        # rule fired once; path clear
+    assert c.pread(fd, len(data), 0) == data
+    assert inj.counters()["injected"]["media.write"] == 1
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Per-class fault/recovery gates
+
+
+def test_transport_fault_recovers_with_one_retransmit():
+    inj = FaultInjector(schedule=[
+        ("transport.write_sg", Fault("error"), 1),
+        ("transport.read_sg", Fault("partial"), 1),
+    ])
+    c = ROS2Client(mode="host", transport="tcp", n_targets=1,
+                   scrub_interval_s=None, fault_injector=inj)
+    fd = c.open("/f", create=True)
+    data = _payload(2 * BLOCK + 77, seed=10)
+    c.pwrite(fd, data, 0)                        # write_sg faulted + retried
+    assert c.pread(fd, len(data), 0) == data     # read_sg partial + retried
+    f = inj.counters()
+    assert f["injected"]["transport.write_sg"] == 1
+    assert f["injected"]["transport.read_sg"] == 1
+    assert f["recovered"]["transport.retry"] == 2
+    _assert_no_leaks(c)
+    c.close()
+
+
+def test_premature_rkey_expiry_renews_and_retries():
+    inj = FaultInjector(schedule=[("cap.expire", Fault("expire"), 1)])
+    c = ROS2Client(mode="host", transport="rdma", n_targets=1,
+                   scrub_interval_s=None, fault_injector=inj)
+    fd = c.open("/f", create=True)
+    data = _payload(BLOCK, seed=11)
+    c.pwrite(fd, data, 0)                        # staging rkey lapses mid-op
+    assert c.pread(fd, len(data), 0) == data
+    f = inj.counters()
+    assert f["injected"]["cap.expire"] == 1
+    assert f["recovered"]["cap.renewed"] == 1
+    # the capability recovered through the control plane, never bypassed
+    ent = c.io.sreg._rkeys[c.io.staging_rkey]
+    assert ent.expires_at > time.monotonic()
+    c.close()
+
+
+def test_degraded_read_from_surviving_replica():
+    inj = FaultInjector(schedule=[
+        ("media.read", Fault("error",
+                             exc=lambda: IOError("injected media read")),
+         1),
+    ])
+    c = ROS2Client(mode="host", transport="rdma", n_targets=1,
+                   replication=2, scrub_interval_s=None, fault_injector=inj)
+    fd = c.open("/f", create=True)
+    data = _payload(BLOCK, seed=12)
+    c.pwrite(fd, data, 0)
+    assert c.pread(fd, len(data), 0) == data     # primary replica faulted
+    f = inj.counters()
+    assert f["injected"]["media.read"] == 1
+    assert f["recovered"]["read.degraded_replica"] >= 1
+    c.close()
+
+
+def test_lost_map_push_trips_once_then_recovers():
+    inj = FaultInjector(schedule=[("map.push", Fault("drop"), 1)])
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None, fault_injector=inj)
+    fd = c.open("/f", create=True)
+    c.pwrite(fd, _payload(4 * BLOCK, seed=13), 0)
+    refreshes0 = c.io.map_refreshes
+    c.cluster.fail_target(1)                     # recall DROPPED by injector
+    assert inj.counters()["injected"]["map.push"] == 1
+    data = _payload(4 * BLOCK, seed=14)
+    c.pwrite(fd, data, 0)                        # stale route -> trip -> heal
+    assert c.io.target_retries == 1
+    assert c.io.map_refreshes == refreshes0 + 1
+    assert c.pread(fd, len(data), 0) == data
+    c.close()
+
+
+def test_dropped_pool_map_rpc_is_retried_once():
+    inj = FaultInjector()
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None, fault_injector=inj)
+    inj.arm("map.push", Fault("drop"), 1)        # lose the recall...
+    inj.arm("control.rpc.get_pool_map", Fault("drop"), 1)  # ...and refresh #1
+    fd = c.open("/f", create=True)
+    c.cluster.fail_target(1)
+    data = _payload(4 * BLOCK, seed=15)
+    c.pwrite(fd, data, 0)       # trip -> dropped refresh -> RPC retry -> ok
+    f = inj.counters()
+    assert f["injected"]["control.rpc.get_pool_map"] == 1
+    assert f["recovered"]["control.rpc_retry"] == 1
+    assert c.pread(fd, len(data), 0) == data
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Idle-aware healing throttle
+
+
+class _FakePacer:
+    """Duck-typed heal pacer with a scripted budget sequence."""
+    idle_aware = True
+
+    def __init__(self, budgets, max_deferrals=3):
+        self.budgets = list(budgets)
+        self.max_deferrals = max_deferrals
+
+    def idle_budget(self):
+        return self.budgets.pop(0) if self.budgets else 0
+
+
+def test_heal_pacing_waits_under_load_then_proceeds():
+    cluster = StorageCluster(n_targets=2, n_devices=2)
+    cluster.heal_pause_s = 0.0
+    cluster.heal_pacer = _FakePacer([0, 0, 4096])
+    cluster._pace_heal(1000)                     # defers twice, then runs
+    assert cluster.stats.heal_deferrals == 2
+    assert cluster.stats.deferred_heal_bytes == 2000
+    assert cluster.stats.heal_floor_grants == 0
+    cluster.close()
+
+
+def test_heal_pacing_starvation_floor():
+    cluster = StorageCluster(n_targets=2, n_devices=2)
+    cluster.heal_pause_s = 0.0
+    cluster.heal_pacer = _FakePacer([], max_deferrals=3)   # budget always 0
+    cluster._pace_heal(500)                      # floor-granted after 3 waits
+    assert cluster.stats.heal_deferrals == 3
+    assert cluster.stats.heal_floor_grants == 1
+    cluster._pace_heal(500)                      # streak reset: defers again
+    assert cluster.stats.heal_floor_grants == 2
+    cluster.close()
+
+
+def test_resync_heals_through_throttle_under_sustained_load():
+    """Rebuild re-replication under a pinned array: healing PAUSES (counted
+    deferrals + deferred bytes) but the starvation floor still drives the
+    resync to completion — reachability never starves out."""
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None)
+    assert c.cluster.heal_pacer is c.scrubber    # wired by construction
+    fd = c.open("/f", create=True)
+    c.pwrite(fd, _payload(4 * BLOCK, seed=16), 0)
+    c.cluster.fail_target(1)
+    data = _payload(4 * BLOCK, seed=17)
+    c.pwrite(fd, data, 0)                        # failover writes -> target 0
+    c.cluster.heal_pause_s = 0.0005
+    c.cluster.heal_pacer = _FakePacer([], max_deferrals=2)  # sustained load
+    moved = c.cluster.recover_target(1)
+    assert moved >= 1
+    assert c.cluster.stats.heal_deferrals >= 2
+    assert c.cluster.stats.deferred_heal_bytes > 0
+    assert c.cluster.stats.heal_floor_grants >= 1
+    assert c.pread(fd, len(data), 0) == data
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Capstone: seeded crash-recovery soak
+
+
+SOAK_SCHEDULE = [
+    # deterministic modulo rules: must-fire volume whose retry can never
+    # re-fire on the immediately following attempt (the +1th match misses)
+    ("transport.write_sg", Fault("error"), lambda m: m % 23 == 5),
+    ("transport.read_sg", Fault("error"), lambda m: m % 17 == 4),
+    ("transport.read_sg", Fault("partial"), lambda m: m % 31 == 9),
+    ("transport.place_sg", Fault("partial"), lambda m: m % 19 == 6),
+    ("media.write", Fault("error",
+                          exc=lambda: IOError("injected media write")),
+     lambda m: m % 97 == 13),
+    ("media.read", Fault("error",
+                         exc=lambda: IOError("injected media read")),
+     lambda m: m % 61 == 9),
+]
+
+
+@pytest.mark.parametrize("transport", ["rdma", "tcp"])
+def test_seeded_crash_recovery_soak(transport):
+    """A few hundred mixed striped ops while the injector fires at EVERY
+    layer boundary reachable on this transport — wire errors and partial
+    transfers, media I/O errors during commit and read, a target crash
+    mid-op, a prematurely expired staging capability (rdma), a lost
+    pool-map recall around a real fail/recover cycle, and a dropped
+    get_pool_map refresh. The run must stay bit-exact against a shadow
+    model, recover every class (counters prove injection AND recovery),
+    and leak nothing: no donated lease, no ring slot, no rkey grant."""
+    inj = FaultInjector(schedule=SOAK_SCHEDULE, seed=1234)
+    c = ROS2Client(mode="host", transport=transport, n_targets=2,
+                   n_devices=4, replication=3, write_quorum=2,
+                   scrub_interval_s=None, fault_injector=inj)
+    # must-fire singles armed AFTER bring-up so connect/mount stay clean
+    inj.arm("engine.crash", Fault("crash"), 4)
+    if transport == "rdma":
+        inj.arm("cap.expire", Fault("expire"), 3)
+    inj.arm("control.rpc.get_pool_map", Fault("drop"), 1)
+    fd = c.open("/soak", create=True)
+    span = 16 * BLOCK
+    shadow = bytearray(span)
+    c.pwrite(fd, bytes(shadow), 0)               # materialize the full file
+    rng = np.random.default_rng(99)
+    n_ops = 240
+    for i in range(n_ops):
+        if i == 80:
+            # membership churn mid-soak: the DOWN recall is lost (injector
+            # drops the push), so the next op pays the stale-map trip
+            inj.arm("map.push", Fault("drop"), 1)
+            c.cluster.fail_target(1)
+        elif i == 96:
+            c.cluster.recover_target(1)          # resync heals going home
+        in_outage = 80 <= i < 96
+        off = int(rng.integers(0, span - 1))
+        ln = int(rng.integers(1, min(int(2.5 * BLOCK), span - off) + 1))
+        kind = int(rng.integers(0, 4))
+        if in_outage and kind == 2:
+            # a single-target outage makes blocks homed there unreadable
+            # (placement stripes, it does not replicate across targets) —
+            # during the window only writes and exact read-after-write of
+            # the failover extents are well-defined; the post-recovery
+            # resync must then make EVERYTHING readable again (verified by
+            # every read from i=96 on, and the final full sweep)
+            kind = 0
+        if kind <= 1:                            # pwrite
+            data = bytes(rng.integers(0, 256, ln, dtype=np.uint8))
+            c.pwrite(fd, data, off)
+            shadow[off:off + ln] = data
+        elif kind == 2:                          # pread, verified
+            assert c.pread(fd, ln, off) == bytes(shadow[off:off + ln])
+        else:                                    # vectored pair
+            cut = max(1, ln // 3)
+            data = bytes(rng.integers(0, 256, ln, dtype=np.uint8))
+            c.pwritev(fd, [data[:cut], data[cut:]], off)
+            shadow[off:off + ln] = data
+            parts = c.preadv(fd, [cut, ln - cut], off)
+            assert b"".join(parts) == data
+    # final sweep: the whole file bit-exact through fresh reads
+    assert c.pread(fd, span, 0) == bytes(shadow)
+    f = inj.counters()
+    expected = ["transport.write_sg", "media.write", "media.read",
+                "engine.crash", "control.rpc.get_pool_map", "map.push"]
+    expected += (["transport.place_sg", "cap.expire"]
+                 if transport == "rdma" else ["transport.read_sg"])
+    for op in expected:
+        assert f["injected"].get(op, 0) >= 1, f"{op} never fired"
+    rec = f["recovered"]
+    assert rec.get("transport.retry", 0) >= 1    # RC retransmit path
+    assert rec.get("dispatch.retry", 0) >= 1     # surgical re-dispatch path
+    assert rec.get("control.rpc_retry", 0) >= 1  # refresh RPC retry path
+    if transport == "rdma":
+        assert rec.get("cap.renewed", 0) >= 1    # renew-and-retry path
+    assert c.io.target_retries >= 1
+    assert c.io.retried_runs >= 1
+    # injections ride the fleet counters exactly once (not per-session)
+    counters = c.io.data_path_counters()
+    assert counters["faults"]["total_injected"] == f["total_injected"]
+    assert counters["cluster"]["retried_runs"] == c.io.retried_runs
+    _assert_no_leaks(c)
+    c.close()
