@@ -12,7 +12,7 @@ bench:                ## full data-path benchmark -> BENCH_data_path.json
 bench-smoke:          ## ~30s gate: fails if zero_copy regresses below sg
 	bash benchmarks/smoke.sh
 
-# check = tier-1 tests + the smoke gate (2-target pool map: data-path,
-# control-path and cluster-routing regressions all fail fast) — run it
-# before landing anything that touches the stack.
+# check = tier-1 tests + the smoke gate (4-target two-domain pool map:
+# data-path, control-path, cluster-routing, fault and EC regressions all
+# fail fast) — run it before landing anything that touches the stack.
 check: test bench-smoke  ## tier-1 tests + smoke gate in one shot

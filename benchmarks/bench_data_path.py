@@ -43,8 +43,23 @@ regression collapses the spread and fails), read copies/byte <= 1.0 with
 zero staging acquires on the striped path, and fleet striped-read capacity
 (one target's calibrated network+server+media MVA pipeline multiplied by
 the MEASURED placement spread) >= 1.6x the 1-target run. Under --smoke the
-main sg/zero_copy runs ALSO ride a 2-target pool map, so every existing
-gate (copies/byte, cycle RPCs, warm opens) re-proves on the routed stack.
+main sg/zero_copy runs ALSO ride a 4-target, two-domain pool map (PR 7
+grew it from 2 so ec(2,1) and domain-spread placement are exercisable), so
+every existing gate (copies/byte, cycle RPCs, warm opens) re-proves on the
+routed stack.
+
+Erasure-coding section (PR 7, --smoke included): ec(2,1) vs replication-3
+on the same 4-target domain-spread map — equal single-failure tolerance at
+half the media bytes. Hard gates: fleet EC sequential-write capacity (the
+calibrated per-target pipeline / measured media spread / MEASURED write
+amplification — wall-clock rides the interpret-mode Pallas GF(256) matmul
+on CI hosts, the stand-in for the offloaded parity engine, so capacity is
+gated on the same calibrated model as the cluster section) >= the
+replication-3 run; measured write amplification <= 0.6x replication-3;
+degraded read with one target down bit-exact with `ec.reconstructions` >
+0; marker-driven rebuild regenerates ONLY the cells homed on the failed
+target, riding the idle-aware heal budget (deferrals AND starvation-floor
+grants recorded).
 
 Fault section (PR 6, --smoke included): the striped workload re-runs under
 a seeded `FaultInjector` firing wire errors, partial SG transfers, and
@@ -56,9 +71,9 @@ donated leases; the injector counters land in the payload under "faulted".
 Run:  PYTHONPATH=src python benchmarks/bench_data_path.py [--out PATH]
       --quick   host/rdma only (all three paths)
       --smoke   ~30 s regression gate: host/rdma, sg vs zero_copy only
-                (on a 2-target pool map), exits non-zero if zero_copy
-                regresses below sg, the control path regresses above the
-                compound baseline, or a cluster gate trips
+                (on a 4-target, two-domain pool map), exits non-zero if
+                zero_copy regresses below sg, the control path regresses
+                above the compound baseline, or a cluster/EC gate trips
 """
 from __future__ import annotations
 
@@ -107,9 +122,10 @@ def _rate(hits, misses):
 
 
 def _bench_one(mode: str, transport: str, path: str, enc: bool = False,
-               passes: int = SEQ_PASSES, n_targets: int = 1) -> dict:
+               passes: int = SEQ_PASSES, n_targets: int = 1,
+               domains=None) -> dict:
     c = ROS2Client(mode=mode, transport=transport, inline_encryption=enc,
-                   n_targets=n_targets, **PATHS[path])
+                   n_targets=n_targets, domains=domains, **PATHS[path])
     fd = c.open("/bench", create=True)
     rng = np.random.default_rng(0)
     data = rng.integers(0, 256, SEQ_TOTAL, dtype=np.uint8).tobytes()
@@ -456,6 +472,160 @@ def _bench_faults() -> dict:
             "gates": gates}
 
 
+class _StarvedPacer:
+    """A pacer whose idle budget never opens: every heal unit defers up
+    to `max_deferrals` times, then the starvation floor drives it through
+    anyway — proving rebuild rides the throttle, not a bypass."""
+    idle_aware = True
+
+    def __init__(self, max_deferrals: int = 2):
+        self.max_deferrals = max_deferrals
+
+    def idle_budget(self):
+        return 0
+
+
+def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
+              passes: int = 4) -> dict:
+    """Erasure-coding gate (PR 7): ec(2,1) vs replication-3 on the same
+    4-target, two-domain map — both survive any single target loss, but
+    the stripe moves 1.5x the logical bytes where the replica fan-out
+    moves 3x. Fleet write capacity is gated on the calibrated per-target
+    pipeline divided by the MEASURED per-target media spread and MEASURED
+    write amplification (wall-clock rides the interpret-mode Pallas
+    GF(256) matmul on CI hosts — the CPU stand-in for the offloaded
+    parity engine — so, exactly like the cluster section, capacity gates
+    ride the calibrated model while wall-clock is reported alongside).
+    Then the failure legs run for real: degraded read with one target
+    down must be bit-exact with reconstructions counted, outage writes
+    must mark ONLY cells homed on the dead target, and rebuild must
+    regenerate exactly those cells through the idle-aware heal budget."""
+    from repro.core import transport_model as tm
+    from repro.core.media import striped_stations
+    from repro.core.object_store import EC_DIRTY_AKEY, placement_order
+    from repro.core.sim import mva
+
+    gates = []
+    rng = np.random.default_rng(17)
+    data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+    doms = ["a", "a", "b", "b"]
+
+    def flush(c):
+        for t in c.cluster.targets:
+            for d in t.store.devices:
+                if d.alive:
+                    d.writeback()
+
+    def run(**kw):
+        c = ROS2Client(mode="host", transport="rdma", n_targets=4,
+                       domains=doms, scrub_interval_s=None, **kw)
+        fd = c.open("/ec", create=True)
+        walls = []
+        for _ in range(passes):
+            t0 = time.perf_counter()
+            for off in range(0, total, chunk):
+                c.pwrite(fd, data[off:off + chunk], off)
+            c.io.data_path_counters()    # drain background parity cells
+            walls.append(time.perf_counter() - t0)
+        flush(c)
+        per_target = {tid: sum(d.bytes_written for d in t.store.devices)
+                      for tid, t in enumerate(c.cluster.targets)}
+        media = sum(per_target.values())
+        amp = media / (passes * total)
+        share = max(per_target.values()) / max(1, media)
+        st = (tm.network_stations(BLOCK)
+              + tm.server_stations("rdma", BLOCK, False)
+              + striped_stations(c.cluster.targets[0].store.devices,
+                                 BLOCK, False))
+        x, _ = mva(st, 32)
+        pipeline_bw = x * BLOCK
+        sw = sum(walls[-2:]) / 2
+        return c, fd, {
+            "wall_write_s": walls,
+            "wall_write_MiBps": total / MiB / sw,
+            "media_bytes": media,
+            "media_bytes_per_target": per_target,
+            "write_amplification": amp,
+            "media_share_max": share,
+            "pipeline_GiBps": pipeline_bw / (1 << 30),
+            "fleet_write_GiBps": pipeline_bw / share / amp / (1 << 30),
+        }
+
+    cec, fd, ec = run(ec=(2, 1))
+    crep, _, rep = run(replication=3)
+    crep.close()
+    if ec["fleet_write_GiBps"] < rep["fleet_write_GiBps"]:
+        gates.append(f"ec(2,1) fleet seq-write {ec['fleet_write_GiBps']:.1f}"
+                     f" GiB/s < replication-3 {rep['fleet_write_GiBps']:.1f}"
+                     f" GiB/s")
+    if ec["write_amplification"] > 0.6 * rep["write_amplification"]:
+        gates.append(f"ec write amplification "
+                     f"{ec['write_amplification']:.2f}x not <= 0.6 * "
+                     f"replication-3 {rep['write_amplification']:.2f}x")
+
+    # degraded read: one target down, every stripe reconstructs in place
+    cec.cluster.fail_target(2)
+    if cec.pread(fd, total, 0) != data:
+        gates.append("ec degraded read not bit-exact")
+    ctr = cec.io.data_path_counters()
+    if ctr["ec"]["reconstructions"] == 0:
+        gates.append("ec degraded read recorded no reconstructions")
+    degraded_reads = ctr["ec"]["degraded_reads"]
+
+    # outage writes mark dirty cells; rebuild regenerates ONLY those
+    fresh = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+    for off in range(0, total, chunk):
+        cec.pwrite(fd, fresh[off:off + chunk], off)
+    k, p, _cs = cec.io._ec
+    dirty = {}
+    for cont in cec.ccontainer._per_target.values():
+        for oid, obj in list(cont._objects.items()):
+            for dk in obj.dkeys(EC_DIRTY_AKEY):
+                marks = obj.fetch(dk, EC_DIRTY_AKEY, 0, k + p)
+                cells = {i for i, b in enumerate(marks) if b}
+                if cells:
+                    dirty.setdefault((oid, dk), set()).update(cells)
+    lost = sum(len(v) for v in dirty.values())
+    n = len(cec.cluster.targets)
+    if lost == 0:
+        gates.append("ec outage writes marked no dirty cells")
+    if any({placement_order(n, oid, dk, tuple(doms))[i] for i in cells} != {2}
+           for (oid, dk), cells in dirty.items()):
+        gates.append("ec dirty markers cover cells not homed on the "
+                     "failed target")
+    before = cec.cluster.stats.ec_rebuilt_cells
+    cec.cluster.heal_pause_s = 0.0005
+    cec.cluster.heal_pacer = _StarvedPacer(max_deferrals=2)
+    cec.cluster.recover_target(2)
+    rebuilt = cec.cluster.stats.ec_rebuilt_cells - before
+    if rebuilt != lost:
+        gates.append(f"ec rebuild regenerated {rebuilt} cells != "
+                     f"{lost} marked lost")
+    if (cec.cluster.stats.heal_deferrals == 0
+            or cec.cluster.stats.heal_floor_grants == 0):
+        gates.append("ec rebuild bypassed the idle-aware heal budget")
+    if cec.pread(fd, total, 0) != fresh:
+        gates.append("ec post-rebuild read not bit-exact")
+    ctr = cec.io.data_path_counters()
+    if ctr["ec"]["degraded_reads"] != degraded_reads:
+        gates.append("ec post-rebuild read still reconstructing (rebuild "
+                     "left cells unhealed)")
+    out = {"k": k, "p": p, "io_bytes": total, "n_targets": 4,
+           "domains": doms, "ec": ec, "replication3": rep,
+           "fleet_write_speedup": round(ec["fleet_write_GiBps"]
+                                        / rep["fleet_write_GiBps"], 2),
+           "media_ratio": round(ec["write_amplification"]
+                                / rep["write_amplification"], 2),
+           "degraded_reads": degraded_reads,
+           "reconstructions": ctr["ec"]["reconstructions"],
+           "lost_cells": lost, "rebuilt_cells": rebuilt,
+           "heal_deferrals": cec.cluster.stats.heal_deferrals,
+           "heal_floor_grants": cec.cluster.stats.heal_floor_grants,
+           "gates": gates}
+    cec.close()
+    return out
+
+
 def _print_run(r: dict) -> None:
     print(f"{r['mode']:4s}/{r['transport']:4s} {r['path']:13s} "
           f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
@@ -544,18 +714,22 @@ def main(argv=None) -> int:
     passes = SEQ_PASSES
     enc_runs = not args.smoke
     n_targets = 1
+    domains = None
     if args.quick or args.smoke:
         combos = [("host", "rdma")]
     if args.smoke:
         paths = ["sg", "zero_copy"]
         passes = 4
-        n_targets = 2   # every existing gate re-proves on a 2-target map
+        # every existing gate re-proves on a routed 4-target map spread
+        # over two fault domains — the same fleet the EC section rides
+        n_targets = 4
+        domains = ["a", "a", "b", "b"]
 
     runs = []
     for mode, transport in combos:
         for path in paths:
             r = _bench_one(mode, transport, path, passes=passes,
-                           n_targets=n_targets)
+                           n_targets=n_targets, domains=domains)
             runs.append(r)
             _print_run(r)
     if enc_runs:
@@ -585,6 +759,16 @@ def main(argv=None) -> int:
           f"{faulted['wall_s']:.2f} s under {ff['total_injected']} "
           f"injections ({ff['injected_by_kind']}), recoveries "
           f"{ff['recovered']}, retried runs {faulted['retried_runs']}")
+    ec_bench = _bench_ec()
+    print(f"ec({ec_bench['k']},{ec_bench['p']}) fleet seq write "
+          f"{ec_bench['ec']['fleet_write_GiBps']:.1f} GiB/s vs rep3 "
+          f"{ec_bench['replication3']['fleet_write_GiBps']:.1f} GiB/s "
+          f"({ec_bench['fleet_write_speedup']:.2f}x at "
+          f"{ec_bench['media_ratio']:.2f}x the media bytes); degraded "
+          f"reads {ec_bench['degraded_reads']} "
+          f"({ec_bench['reconstructions']} cells reconstructed), rebuilt "
+          f"{ec_bench['rebuilt_cells']}/{ec_bench['lost_cells']} lost "
+          f"cells through {ec_bench['heal_deferrals']} heal deferrals")
     device_direct = _bench_device_direct()
     for m in ("host", "dpu"):
         dd = device_direct[m]
@@ -653,6 +837,7 @@ def main(argv=None) -> int:
                      f"{dd['single_tensors_per_s']:.0f}")
     fails += cluster.pop("gates")        # routing/striping/scaling gates
     fails += faulted.pop("gates")        # PR-6 fault-injection gates
+    fails += ec_bench.pop("gates")       # PR-7 erasure-coding gates
 
     for f in fails:
         print(f"FAIL: {f}")
@@ -661,7 +846,7 @@ def main(argv=None) -> int:
                "rand_io_bytes": RAND_IO, "rand_ops": RAND_OPS,
                "block_bytes": BLOCK, "runs": runs, "speedups": speedups,
                "quorum": quorum, "device_direct": device_direct,
-               "cluster": cluster, "faulted": faulted,
+               "cluster": cluster, "faulted": faulted, "ec": ec_bench,
                # fleet totals across every run (the shared merge_counters)
                "counter_totals": merge_counters(
                    [r["seq_counters"] for r in runs]),

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # ~30-second data-path regression gate: runs the sg vs zero_copy pair of
-# the data-path bench (host/rdma) — ON A 2-TARGET POOL MAP, so cluster
-# routing regressions fail here too — and fails if the zero-copy path
+# the data-path bench (host/rdma) — ON A 4-TARGET, TWO-DOMAIN POOL MAP
+# (PR 7 grew it from 2 so ec(2,1) and domain-spread placement are
+# exercisable), so cluster routing regressions fail here too — and fails
+# if the zero-copy path
 # regresses below the PR-1 scatter-gather path, OR if the control path
 # regresses above the compound+lease baseline (open→pwrite×3→close cycle
 # > 2 RPCs, warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane
@@ -16,8 +18,12 @@
 # workload under a seeded FaultInjector (wire errors, partial SG
 # transfers, media I/O faults) and fails unless the run stays bit-exact,
 # records transport retransmits AND media-level recoveries, and leaks
-# zero staging slots or donated leases. Wired into `make bench-smoke` /
-# `make check`.
+# zero staging slots or donated leases. The PR-7 EC section gates
+# erasure coding: ec(2,1) fleet seq-write capacity >= replication-3 at
+# <= 0.6x the measured media bytes, degraded read bit-exact with
+# reconstructions counted, and marker-driven rebuild regenerating ONLY
+# the cells homed on the failed target through the idle-aware heal
+# budget. Wired into `make bench-smoke` / `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

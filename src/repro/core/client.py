@@ -70,7 +70,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -89,9 +89,10 @@ from repro.core.faults import (DEFAULT_TIMEOUTS, FaultInjector,
 from repro.core.metadata_cache import MetadataCache
 from repro.core.media import (Device, crc32_checksum, make_nvme_array,
                               striped_stations)
-from repro.core.object_store import (MediaScrubber, ObjectStore,
-                                     StorageCluster, StorageError,
-                                     TargetDownError, placement_order)
+from repro.core.object_store import (EC_DIRTY_AKEY, MediaScrubber,
+                                     ObjectStore, StorageCluster,
+                                     StorageError, TargetDownError,
+                                     placement_order)
 from repro.core.sim import Station, mva
 from repro.core.smartnic import DPURuntime, InlineCrypto
 
@@ -896,6 +897,122 @@ class _ServerIO:
             self.drop_dst_rkey(dst)       # per-op capability dies with MR
             self.creg.deregister(dst)
 
+    # -- EC cell plane (block-relative extent addressing) --------------------
+    # Cells are MEDIA-domain bytes end to end: parity is linear over what
+    # is on media (inline ciphertext included), so degraded reads and
+    # rebuild reconstruct without tenant keys and no crypto is applied on
+    # this plane. Parity cells live at block-relative offsets >= BLOCK —
+    # virtual addresses the file-offset API can never reach.
+
+    def update_cell(self, oid: int, block: int, cell_off: int,
+                    payload) -> None:
+        """Write one EC cell: same admission, staging-ring, transport-SG
+        and donation discipline as `writev`, addressed to (block,
+        cell_off) directly."""
+        self._admit()
+        arr = payload if isinstance(payload, np.ndarray) \
+            else np.frombuffer(bytes(payload), np.uint8)
+        ln = int(arr.size)
+        if ln == 0:
+            return
+        obj = self.container.object(oid)
+        mr = self.creg.register(np.ascontiguousarray(arr), self.tenant)
+        epoch = self.container.next_epoch()
+        try:
+            slots = self.ring.acquire(1)
+            try:
+                s = slots[0]
+                iov = [(self.ring.offset(s), mr, 0, ln)]
+                if self.transport_kind == "rdma":
+                    self._maybe_expire_cap()
+                    self._xport_op(lambda: self.xport.write_sg(
+                        self._staging_token(), self.tenant, iov))
+                else:
+                    self._xport_op(
+                        lambda: self.xport.write_sg(self.staging, iov))
+                view = self.ring.view(s)[:ln]
+                if self.zero_copy:
+                    obj.update_many([(str(block), AKEY, cell_off, view)],
+                                    epoch=epoch,
+                                    leases=[self.ring.donate(s)])
+                else:
+                    obj.update_many(
+                        [(str(block), AKEY, cell_off, view.tobytes())],
+                        epoch=epoch, leases=[None])
+                    with self._gauge_lock:
+                        self.host_copy_bytes += ln
+            finally:
+                self.ring.release(slots)
+        finally:
+            self.creg.deregister(mr)
+
+    def fetch_cell(self, oid: int, block: int, cell_off: int,
+                   ln: int) -> np.ndarray:
+        """Read one EC cell's raw media bytes through the staged transport
+        path. Holes read as zeros — the zero-pad convention parity is
+        computed under, so sparse stripes decode bit-exactly."""
+        self._admit()
+        obj = self.container.object(oid)
+        out = np.empty(ln, np.uint8)
+        mr = self.creg.register(out, self.tenant)
+        try:
+            slots = self.ring.acquire(1)
+            try:
+                s = slots[0]
+                obj.fetch_into(str(block), AKEY, cell_off, ln,
+                               self.ring.view(s)[:ln])
+                with self._gauge_lock:
+                    self.bounce_bytes += ln
+                iov = [(self.ring.offset(s), mr, 0, ln)]
+                if self.transport_kind == "rdma":
+                    self._maybe_expire_cap()
+                    self._xport_op(lambda: self.xport.read_sg(
+                        self._staging_token(), self.tenant, iov))
+                else:
+                    self._xport_op(
+                        lambda: self.xport.read_sg(self.staging, iov))
+            finally:
+                self.ring.release(slots)
+        finally:
+            self.creg.deregister(mr)
+        return out
+
+    def read_markers(self, oid: int, block: int, n_cells: int) -> bytes:
+        """This target's dirty-cell ledger byte-map for one stripe (zeros
+        = clean). Engine-direct: the ledger is repair metadata, a few
+        bytes per stripe, not data-plane payload."""
+        self._admit()
+        obj = self.container.peek_object(oid)
+        if obj is None:
+            return b"\x00" * n_cells
+        return obj.fetch(str(block), EC_DIRTY_AKEY, 0, n_cells)
+
+    def mark_cells(self, oid: int, block: int,
+                   cells: Sequence[int]) -> None:
+        """Record dropped cell writes in this target's ledger — one byte
+        per cell index, one epoch. Rebuild regenerates exactly the marked
+        cells and clears the marks."""
+        self._admit()
+        obj = self.container.object(oid)
+        obj.update_many([(str(block), EC_DIRTY_AKEY, int(i), b"\x01")
+                         for i in cells])
+
+    def clear_cells(self, oid: int, block: int, cells: Sequence[int],
+                    n_cells: int) -> None:
+        """Retire dirty markers after a heal-on-write rewrote the cells at
+        the current version; an all-clean ledger extent is punched so
+        repaired stripes leave zero metadata behind. Only touches ledgers
+        that exist — clearing never CREATES ledger state."""
+        self._admit()
+        obj = self.container.peek_object(oid)
+        dk = str(block)
+        if obj is None or dk not in obj.dkeys(EC_DIRTY_AKEY):
+            return
+        obj.update_many([(dk, EC_DIRTY_AKEY, int(i), b"\x00")
+                         for i in cells])
+        if not any(obj.fetch(dk, EC_DIRTY_AKEY, 0, n_cells)):
+            obj.punch(dk, EC_DIRTY_AKEY)
+
     # -- seed per-block path (kept verbatim for `legacy=True` benchmarks) ----
     def _write_legacy(self, oid: int, offset: int, data) -> None:
         arr = np.frombuffer(bytes(data), np.uint8) if not isinstance(
@@ -1006,7 +1123,9 @@ class _ClusterRouter:
                  cluster_stats: Callable[[], Any],
                  zero_copy: bool = True,
                  faults: Optional[FaultInjector] = None,
-                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS,
+                 redundancy_key: Optional[str] = None,
+                 crypto: Optional[InlineCrypto] = None):
         self.sessions = sessions
         self.cp = control
         self.creg = client_registry
@@ -1016,6 +1135,16 @@ class _ClusterRouter:
         self.zero_copy = zero_copy
         self._faults = faults
         self.timeouts = timeouts
+        # erasure-coded redundancy class, learned from the pool map (the
+        # "pool/container" key this client mounted): (k, p, cell_bytes)
+        # when the container is EC, else None and every path below is the
+        # replicated fast path unchanged
+        self._redundancy_key = redundancy_key
+        self._ec: Optional[Tuple[int, int, int]] = None
+        self._crypto = crypto
+        self.ec_degraded_reads = 0    # blocks served via reconstruction
+        self.ec_reconstructions = 0   # cells decoded from survivors
+        self._ec_pending: List = []   # straggler cell writes in flight
         self._sid: Optional[int] = None
         self.cache = None
         self._map_lock = threading.Lock()
@@ -1056,6 +1185,8 @@ class _ClusterRouter:
             self.map_invalidations += 1
 
     def _adopt(self, m: Dict) -> None:
+        red = m.get("redundancy", {}).get(self._redundancy_key or "", {})
+        ec = red.get("ec") if isinstance(red, dict) else None
         with self._map_lock:
             self._map_version = m["version"]
             self._up = {t["target_id"]: t["up"] for t in m["targets"]}
@@ -1063,6 +1194,9 @@ class _ClusterRouter:
             by_tid = {t["target_id"]: t.get("domain") for t in m["targets"]}
             doms = tuple(by_tid.get(tid) for tid in self._tids)
             self._domains = None if all(d is None for d in doms) else doms
+            if ec:
+                self._ec = (int(ec["k"]), int(ec["p"]),
+                            int(ec["cell_bytes"]))
             self._map_stale = False
             missing = [tid for tid in self._tids
                        if tid not in self.sessions]
@@ -1194,7 +1328,8 @@ class _ClusterRouter:
                 self.target_retries += 1
                 self.retried_runs += sum(len(batches[tid])
                                          for tid in failed)
-            time.sleep(self.timeouts.backoff(attempt))
+            time.sleep(self.timeouts.backoff(
+                attempt, salt=min(failed) if failed else 0))
             # surgical: ONLY the failed targets' fragments go back in
             # (re-sorted to ascending file order — _merge_runs coalesces
             # contiguous runs under that invariant)
@@ -1214,7 +1349,11 @@ class _ClusterRouter:
     def writev(self, oid: int, offset: int, buffers: Sequence) -> int:
         """Striped scatter-gather write: each 1 MiB block routes to its
         placement target; per-target runs commit through that target's own
-        session (ring, transport, epoch) concurrently."""
+        session (ring, transport, epoch) concurrently. EC containers take
+        the striped-parity fan-out instead."""
+        self._ensure_map()
+        if self._ec is not None:
+            return self._ec_writev(oid, offset, buffers)
         arrs = [a if isinstance(a, np.ndarray)
                 else np.frombuffer(bytes(a), np.uint8) for a in buffers]
         arrs = [a for a in arrs if a.size]
@@ -1248,6 +1387,9 @@ class _ClusterRouter:
         return self.zero_copy
 
     def _gather_into(self, oid: int, offset: int, dsts: Sequence) -> int:
+        self._ensure_map()
+        if self._ec is not None:
+            return self._ec_gather_into(oid, offset, dsts)
         spans, g = [], 0
         for mr, moff, sz in dsts:
             if sz > 0:
@@ -1302,6 +1444,435 @@ class _ClusterRouter:
         for sess in list(self.sessions.values()):
             sess.drop_dst_rkey(mr)
 
+    # -- erasure-coded data path ---------------------------------------------
+    # ec(k,p) stripes each block as k data + p parity cells over k+p
+    # DISTINCT targets in placement order. Cells are MEDIA-domain bytes
+    # (parity is linear over the on-media image, ciphertext included), so
+    # data cells ride the unchanged per-target session write/read path at
+    # their natural file offsets while parity and reconstruction traffic
+    # use the raw cell plane. A cell whose target is down is DROPPED (no
+    # failover — its identity is its placement slot) and recorded in the
+    # fleet's dirty-cell ledger; the write acks at k+1 landed cells with
+    # the rest finishing in background, and reads reconstruct missing
+    # cells from any k clean survivors.
+
+    def _ec_order(self, oid: int, b: int) -> List[int]:
+        with self._map_lock:
+            tids, doms = self._tids, self._domains
+            k, p, _cs = self._ec
+        order = [tids[i]
+                 for i in placement_order(len(tids), oid, str(b), doms)]
+        if len(order) < k + p:
+            raise StorageError(
+                f"ec({k},{p}) needs {k + p} targets, pool map has "
+                f"{len(order)}")
+        return order
+
+    def _ec_media_image(self, arr: np.ndarray, oid: int, b: int,
+                        bo: int) -> np.ndarray:
+        """The media-domain bytes a fragment will occupy on its data
+        cells: the session applies the same deterministic keystream at
+        commit, so parity computed here matches what lands."""
+        if self._crypto is None:
+            return arr
+        out = np.asarray(self._crypto.apply(arr, nonce=oid * (1 << 20) + b,
+                                            offset=bo), np.uint8)
+        return out
+
+    def _ec_reap(self) -> None:
+        """Drop completed straggler futures (errors were handled inside
+        the job); called on op entry so the pending list stays bounded."""
+        with self._map_lock:
+            self._ec_pending = [f for f in self._ec_pending if not f.done()]
+
+    def _ec_drain(self) -> None:
+        """Join every in-flight straggler cell write (counters snapshots
+        and close() want a quiesced stripe state)."""
+        with self._map_lock:
+            pend, self._ec_pending = self._ec_pending, []
+        for f in pend:
+            f.result()
+
+    def _ec_mark_dirty(self, oid: int, b: int,
+                       cells: Sequence[int]) -> None:
+        """Record dropped cells in the dirty ledger of every UP target (a
+        union survives any single ledger holder dying); at least one copy
+        must land or the write cannot safely ack."""
+        with self._map_lock:
+            tids = [t for t in self._tids if self._up.get(t)]
+        landed = 0
+        for tid in tids:
+            try:
+                self.sessions[tid].mark_cells(oid, b, cells)
+                landed += 1
+            except StorageError:
+                continue
+        if not landed:
+            raise StorageError(
+                f"ec dirty marker for cells {list(cells)} of block {b} "
+                "could not be recorded on any target")
+
+    def _ec_retry(self, fn):
+        """One bounded retransmit for a transient cell-plane failure. The
+        engine aborts a failed commit/read atomically (no torn extent), so
+        an immediate retry is safe — and a transient media/wire anomaly
+        usually clears, sparing a dirty marker or a survivor exclusion.
+        TargetDownError propagates untried: a down target stays down until
+        the pool map says otherwise."""
+        try:
+            return fn()
+        except TargetDownError:
+            raise
+        except StorageError:
+            out = fn()
+            note_recovery(self._faults, "ec.cell_retry")
+            return out
+
+    def _ec_read_dirty(self, oid: int, b: int) -> set:
+        """The fleet-union dirty-cell set for one stripe (unreachable
+        ledger holders tolerated — their stale copy only re-triggers an
+        idempotent rebuild later)."""
+        k, p, _cs = self._ec
+        with self._map_lock:
+            tids = [t for t in self._tids if self._up.get(t)]
+        out: set = set()
+        for tid in tids:
+            try:
+                marks = self.sessions[tid].read_markers(oid, b, k + p)
+            except StorageError:
+                continue
+            out |= {i for i, byte in enumerate(marks) if byte}
+        return out
+
+    def _ec_clear_dirty(self, oid: int, b: int,
+                        cells: Sequence[int]) -> None:
+        if not cells:
+            return
+        k, p, _cs = self._ec
+        with self._map_lock:
+            tids = [t for t in self._tids if self._up.get(t)]
+        for tid in tids:
+            try:
+                self.sessions[tid].clear_cells(oid, b, cells, k + p)
+            except StorageError:
+                continue
+
+    def _ec_writev(self, oid: int, offset: int, buffers: Sequence) -> int:
+        from repro.kernels.rs_parity import ops as rs
+        self._ec_reap()
+        arrs = [a if isinstance(a, np.ndarray)
+                else np.frombuffer(bytes(a), np.uint8) for a in buffers]
+        arrs = [a for a in arrs if a.size]
+        total = int(sum(a.size for a in arrs))
+        if total == 0:
+            return 0
+        data = arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+        pos = 0
+        for b, bo, ln in split_blocks(offset, total):
+            self._ec_write_block(rs, oid, b, bo, data[pos:pos + ln])
+            pos += ln
+        return total
+
+    def _ec_write_block(self, rs, oid: int, b: int, bo: int,
+                        frag: np.ndarray) -> None:
+        """One stripe's write: parity over the zero-padded full block in
+        the media domain (partial writes read-modify-write the stripe
+        image first), then a parallel fan-out of the touched data cells
+        (full session writev path — staging, transport, inline crypto)
+        and the p parity cells (raw cell plane). Foreground returns once
+        min(jobs, k+1) cells land; stragglers finish in background.
+        Cells on down targets are dropped and marked dirty — more than p
+        of them and the stripe would go below k clean cells, which is a
+        hard error BEFORE any byte moves.
+
+        HEAL-ON-WRITE: a stripe that already carries dirty cells has no
+        silent failure margin left — losing one more cell in a later
+        write would tear it below k clean cells even though each write
+        individually stayed within p. So a write to a pre-dirty stripe
+        goes SYNCHRONOUS and also rewrites every reachable stale cell at
+        the new version (the RMW image reconstructs their true content),
+        clearing the ledger for everything that lands. After any write,
+        the dirty set is exactly {cells on down targets} ∪ {cells that
+        failed THIS write} — bounded by the pre-checks below."""
+        k, p, cs = self._ec
+        ln = int(frag.size)
+        order = self._ec_order(oid, b)
+        pre_dirty = {c for c in self._ec_read_dirty(oid, b) if c < k + p}
+        if bo == 0 and ln == BLOCK:
+            media = self._ec_media_image(np.ascontiguousarray(frag),
+                                         oid, b, 0)
+        else:
+            media = self._ec_read_media_block(rs, oid, b)
+            media[bo:bo + ln] = self._ec_media_image(frag, oid, b, bo)
+        parity = np.asarray(rs.ec_encode(media.reshape(k, cs), p))
+        jobs: List[Tuple[int, Callable[[_ServerIO], None]]] = []
+        touched = set(range(bo // cs, (bo + ln - 1) // cs + 1))
+        for i in sorted(touched):
+            lo, hi = max(bo, i * cs), min(bo + ln, (i + 1) * cs)
+            sub = frag[lo - bo:hi - bo]
+            jobs.append((i, lambda s, fo=b * BLOCK + lo, sub=sub:
+                         s.writev(oid, fo, [sub])))
+        for j in range(p):
+            jobs.append((k + j, lambda s, co=(k + j) * cs, pay=parity[j]:
+                         s.update_cell(oid, b, co, pay)))
+        # stale data cells neither touched nor parity: rewrite their
+        # reconstructed media bytes straight onto the cell plane
+        heal = pre_dirty - touched - set(range(k, k + p))
+        for i in sorted(heal):
+            pay = media[i * cs:(i + 1) * cs]
+            jobs.append((i, lambda s, co=i * cs, pay=pay:
+                         s.update_cell(oid, b, co, pay)))
+        with self._map_lock:
+            up = dict(self._up)
+        down = [cell for cell, _fn in jobs if not up.get(order[cell])]
+        stale_down = {c for c in pre_dirty if not up.get(order[c])}
+        if len(set(down) | stale_down) > p:
+            raise StorageError(
+                f"ec({k},{p}) write would leave "
+                f"{len(set(down) | stale_down)} cells dirty "
+                "— stripe would fall below k clean cells")
+        if down:
+            self._ec_mark_dirty(oid, b, down)
+
+        failed: List[int] = []
+        flock = threading.Lock()
+
+        def run(cell: int, fn) -> None:
+            try:
+                self._ec_retry(lambda: fn(self.sessions[order[cell]]))
+            except StorageError:
+                # cell-level failure — target down OR the single-copy
+                # media commit failed: either way the cell is suspect,
+                # so ledger it (idempotent) and let rebuild regenerate
+                # it from survivors; parity absorbs media loss exactly
+                # like target loss
+                with flock:
+                    failed.append(cell)
+                self._ec_mark_dirty(oid, b, [cell])
+                note_recovery(self._faults, "ec.cell_write_degraded")
+
+        live = [(cell, fn) for cell, fn in jobs if cell not in down]
+        quorum = min(len(live), k + 1)
+        if len(live) == 1:
+            run(*live[0])
+        elif pre_dirty:
+            # healing writes are synchronous: the ledger must only clear
+            # for cells that provably landed
+            pool = self._get_pool()
+            for f in [pool.submit(run, cell, fn) for cell, fn in live]:
+                f.result()
+        else:
+            pool = self._get_pool()
+            futs = [pool.submit(run, cell, fn) for cell, fn in live]
+            done = 0
+            for f in as_completed(futs):
+                f.result()
+                done += 1
+                if done >= quorum:
+                    break
+            rest = [f for f in futs if not f.done()]
+            if rest:
+                with self._map_lock:
+                    self._ec_pending.extend(rest)
+        if pre_dirty:
+            landed = [c for c, _fn in live if c not in failed]
+            self._ec_clear_dirty(oid, b,
+                                 sorted(pre_dirty.intersection(landed)))
+        if len(set(down) | set(failed)) > p:
+            raise StorageError(
+                f"ec({k},{p}) write lost {len(set(down) | set(failed))} "
+                f"cells of block {b} — stripe below k clean cells")
+
+    def _ec_read_media_block(self, rs, oid: int, b: int) -> np.ndarray:
+        """The stripe's full media-domain image (k*cs bytes, holes as
+        zeros) for read-modify-write parity: clean up-cells are fetched
+        raw; missing ones reconstruct from survivors."""
+        k, p, cs = self._ec
+        out = np.empty(BLOCK, np.uint8)
+        got = self._ec_fetch_cells(rs, oid, b, list(range(k)))
+        for i in range(k):
+            out[i * cs:(i + 1) * cs] = got[i]
+        return out
+
+    def _ec_gather_into(self, oid: int, offset: int,
+                        dsts: Sequence) -> int:
+        from repro.kernels.rs_parity import ops as rs
+        self._ec_reap()
+        k, p, cs = self._ec
+        spans, g = [], 0
+        for mr, moff, sz in dsts:
+            if sz > 0:
+                spans.append((g, g + sz, mr, moff))
+            g += sz
+        size = g
+        if size == 0:
+            return 0
+        # split the file range at BLOCK and cell boundaries; every
+        # sub-fragment belongs to exactly one (block, cell)
+        frags, pos, si = [], 0, 0   # (b, cell, lo, hi, [(mr, moff, sz)])
+        for b, bo, ln in split_blocks(offset, size):
+            for i in range(bo // cs, (bo + ln - 1) // cs + 1):
+                lo, hi = max(bo, i * cs), min(bo + ln, (i + 1) * cs)
+                subs = []
+                while si < len(spans) and spans[si][1] <= pos + lo - bo:
+                    si += 1
+                j = si
+                while j < len(spans) and spans[j][0] < pos + hi - bo:
+                    g0, g1, mr, moff = spans[j]
+                    s0 = max(pos + lo - bo, g0)
+                    s1 = min(pos + hi - bo, g1)
+                    subs.append((mr, moff + s0 - g0, s1 - s0))
+                    j += 1
+                frags.append((b, i, lo, hi, subs))
+            pos += ln
+        with self._map_lock:
+            up = dict(self._up)
+        healthy: Dict[int, List] = {}
+        degraded: Dict[int, List] = {}
+        for fr in frags:
+            b, cell = fr[0], fr[1]
+            tid = self._ec_order(oid, b)[cell]
+            if up.get(tid):
+                healthy.setdefault(tid, []).append(fr)
+            else:
+                degraded.setdefault(b, []).append(fr)
+
+        def run_batch(tid: int, items) -> None:
+            sess = self.sessions[tid]
+            for b, _cell, lo, _hi, subs in items:
+                self._ec_retry(
+                    lambda: sess._gather_into(oid, b * BLOCK + lo, subs))
+
+        if healthy:
+            if len(healthy) == 1:
+                (tid, items), = healthy.items()
+                try:
+                    run_batch(tid, items)
+                except StorageError:
+                    # target down or a cell's media unreadable: the whole
+                    # batch re-routes through reconstruction
+                    self._refresh_map()
+                    for fr in items:
+                        degraded.setdefault(fr[0], []).append(fr)
+            else:
+                pool = self._get_pool()
+                futs = {tid: pool.submit(run_batch, tid, items)
+                        for tid, items in healthy.items()}
+                refreshed = False
+                for tid, f in futs.items():
+                    e = f.exception()
+                    if isinstance(e, StorageError):
+                        # cell-level failure (down target / unreadable
+                        # media): the batch re-routes through
+                        # reconstruction (already-filled fragments refill
+                        # with identical bytes — idempotent)
+                        if not refreshed:
+                            self._refresh_map()
+                            refreshed = True
+                        for fr in healthy[tid]:
+                            degraded.setdefault(fr[0], []).append(fr)
+                    elif e is not None:
+                        raise e
+        for b in sorted(degraded):
+            self._ec_reconstruct_block(rs, oid, b, degraded[b])
+        return size
+
+    def _ec_fetch_cells(self, rs, oid: int, b: int,
+                        want: List[int]) -> Dict[int, np.ndarray]:
+        """Media-domain bytes of the wanted cells (full cs each): clean
+        up-cells read raw from their homes; the rest decode from any k
+        clean survivors. Raises StorageError when fewer than k clean
+        cells are reachable even after one map refresh."""
+        k, p, cs = self._ec
+        order = self._ec_order(oid, b)
+        refreshed = False
+        lost: set = set()             # cells that errored under us
+        while True:
+            with self._map_lock:
+                up = dict(self._up)
+            dirty: set = set()
+            for j in range(k + p):
+                if not up.get(order[j]) or j in lost:
+                    continue
+                try:
+                    marks = self._ec_retry(
+                        lambda j=j: self.sessions[order[j]].read_markers(
+                            oid, b, k + p))
+                except StorageError:
+                    lost.add(j)
+                    continue
+                dirty |= {i for i, byte in enumerate(marks) if byte}
+            ok = [j for j in range(k + p)
+                  if j not in dirty and j not in lost
+                  and up.get(order[j])]
+            direct = [c for c in want if c in ok]
+            decode = [c for c in want if c not in ok]
+            # survivors for the decode: any k clean cells — direct want
+            # cells first (already being fetched, so they're free), then
+            # other data cells (cheap decode), then parity
+            surv = ([j for j in ok if j in direct]
+                    + [j for j in ok if j < k and j not in direct]
+                    + [j for j in ok if j >= k])[:k] if decode else []
+            if decode and len(surv) < k:
+                if not refreshed:
+                    self._refresh_map()
+                    refreshed, lost = True, set()
+                    continue
+                raise StorageError(
+                    f"ec({k},{p}) block {b}: only {len(surv)} clean "
+                    f"cells reachable, need {k} to reconstruct")
+            got: Dict[int, np.ndarray] = {}
+            died = None
+            for j in sorted(set(direct) | set(surv)):
+                try:
+                    got[j] = self._ec_retry(
+                        lambda j=j: self.sessions[order[j]].fetch_cell(
+                            oid, b, j * cs, cs))
+                except StorageError:
+                    died = j
+                    break
+            if died is not None:
+                # a survivor dropped mid-fetch (target down or its media
+                # unreadable): exclude it and redraw
+                lost.add(died)
+                if not refreshed:
+                    self._refresh_map()
+                    refreshed = True
+                continue
+            out: Dict[int, np.ndarray] = {c: got[c] for c in direct}
+            if decode:
+                dec = np.asarray(rs.ec_decode(
+                    np.stack([got[j] for j in surv]), surv, k, p, decode))
+                for r, c in enumerate(decode):
+                    out[c] = dec[r]
+                with self._map_lock:
+                    self.ec_reconstructions += len(decode)
+            return out
+
+    def _ec_reconstruct_block(self, rs, oid: int, b: int,
+                              wants: List) -> None:
+        """Degraded read of one stripe: reconstruct the wanted cells from
+        any k clean survivors, decrypt the requested ranges (back to the
+        logical domain) and scatter them into the callers' buffers."""
+        k, p, cs = self._ec
+        cells = self._ec_fetch_cells(
+            rs, oid, b, sorted({fr[1] for fr in wants}))
+        nonce = oid * (1 << 20) + b
+        for _b, cell, lo, hi, subs in wants:
+            media = cells[cell][lo - cell * cs:hi - cell * cs]
+            if self._crypto is not None:
+                plain = np.asarray(self._crypto.apply(
+                    media, nonce=nonce, offset=lo), np.uint8)
+            else:
+                plain = media
+            off = 0
+            for mr, moff, sz in subs:
+                mr.buf[moff:moff + sz] = plain[off:off + sz]
+                off += sz
+        with self._map_lock:
+            self.ec_degraded_reads += 1
+        note_recovery(self._faults, "ec.degraded_read")
+
     # -- fleet-wide counters -------------------------------------------------
     def data_path_counters(self) -> Dict[str, Any]:
         """Every per-target session's counters merged fleet-wide (the
@@ -1309,6 +1880,7 @@ class _ClusterRouter:
         cache, crypto) counted ONCE, plus the router's own `cluster`
         section."""
         from dataclasses import asdict
+        self._ec_drain()        # quiesce straggler cell writes first
         per = [s.data_path_counters()
                for _tid, s in sorted(self.sessions.items())]
         out = {k: merge_counters([p[k] for p in per])
@@ -1332,9 +1904,19 @@ class _ClusterRouter:
                 "target_retries": self.target_retries,
                 "retried_runs": self.retried_runs,
             }
+            if self._ec is not None:
+                out["ec"] = {
+                    "k": self._ec[0], "p": self._ec[1],
+                    "degraded_reads": self.ec_degraded_reads,
+                    "reconstructions": self.ec_reconstructions,
+                    "rebuilt_cells":
+                        int(asdict(self._cluster_stats()).get(
+                            "ec_rebuilt_cells", 0)),
+                }
         return out
 
     def close(self) -> None:
+        self._ec_drain()
         with self._pool_lock:
             pool, self._pool = self._pool, None
         if pool is not None:
@@ -1357,11 +1939,16 @@ class ROS2Client:
                  n_targets: int = 1,
                  hedge_timeout_s: Optional[float] = None,
                  fault_injector: Optional[FaultInjector] = None,
-                 timeouts: Optional[Timeouts] = None):
+                 timeouts: Optional[Timeouts] = None,
+                 ec: Optional[Tuple[int, int]] = None,
+                 domains: Optional[Sequence[Optional[str]]] = None):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
         assert n_targets >= 1
         assert n_targets == 1 or not legacy, \
             "the seed legacy path is single-target only"
+        assert ec is None or (n_targets >= 2 and not legacy), \
+            "ec(k,p) requires a routed multi-target cluster"
+        assert domains is None or len(domains) == n_targets
         self.mode, self.transport = mode, transport
         zero_copy = zero_copy and not legacy
         self.zero_copy = zero_copy
@@ -1382,7 +1969,7 @@ class ROS2Client:
         self.cluster = StorageCluster(
             n_targets=n_targets, n_devices=n_devices,
             csum=crc32_checksum if legacy else None,
-            timeouts=self.timeouts)
+            timeouts=self.timeouts, domains=domains)
         if fault_injector is not None:
             self.cluster.set_faults(fault_injector)
         for t in self.cluster.targets:
@@ -1400,7 +1987,8 @@ class ROS2Client:
                                                 replication=replication,
                                                 aggregate=not legacy,
                                                 verified_cache=zero_copy,
-                                                write_quorum=write_quorum)
+                                                write_quorum=write_quorum,
+                                                ec=ec)
         self.container = self.ccontainer.target(0)
         # idle-aware: the paced scrub cycles spend only media bandwidth the
         # foreground provably leaves on the table (free on loaded runs).
@@ -1445,7 +2033,8 @@ class ROS2Client:
                 make_session=self._attach_target_session,
                 cluster_stats=lambda: self.cluster.stats,
                 zero_copy=zero_copy,
-                faults=fault_injector, timeouts=self.timeouts)
+                faults=fault_injector, timeouts=self.timeouts,
+                redundancy_key="pool0/cont0", crypto=crypto)
         # ---- session bring-up ----
         rkey, rkey_ttl = None, None
         if legacy:

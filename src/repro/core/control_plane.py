@@ -206,10 +206,19 @@ class ControlPlane:
     def rpc_get_pool_map(self, session_id: int):
         """The versioned pool map: target list with up/down state plus the
         per-container redundancy class — everything a client needs to
-        place ops algorithmically with zero per-op metadata lookups. One
-        refresh after an invalidation (or a TargetDownError trip) brings a
-        stale router current; a single-engine deployment serves the
-        degenerate one-target map."""
+        place ops algorithmically with zero per-op metadata lookups.
+
+        Wire form of a redundancy entry (keyed "pool/container"):
+
+            {"replication": r, "write_quorum": q}          # replicated
+            {"ec": {"k": k, "p": p, "cell_bytes": cs}}     # erasure-coded
+
+        An `ec` class switches the router onto the striped cell data path
+        (k data + p parity cells per block across k+p distinct targets);
+        `cell_bytes` is served so clients never derive cell geometry from
+        local constants. One refresh after an invalidation (or a
+        TargetDownError trip) brings a stale router current; a
+        single-engine deployment serves the degenerate one-target map."""
         self._session(session_id)
         if hasattr(self.store, "pool_map"):
             out = self.store.pool_map.describe()

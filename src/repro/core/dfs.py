@@ -28,10 +28,15 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.object_store import Container, ObjectStore, StorageError
+from repro.core.object_store import (EC_DATA_AKEY, EC_STRIPE_BYTES, Container,
+                                     ObjectStore, StorageError)
 
 BLOCK = 1 << 20                    # 1 MiB DFS striping unit
 AKEY = "data"
+
+# EC cell addressing derives cell identity from extent offsets within this
+# same striping unit and akey; the constants cannot drift apart silently.
+assert BLOCK == EC_STRIPE_BYTES and AKEY == EC_DATA_AKEY
 
 # RPC-envelope fields that must never leak into client-facing metadata
 _TRANSPORT_KEYS = ("ok", "error", "lease_ttl_s")

@@ -55,9 +55,10 @@ class Timeouts:
     retry_budget: int = 3               # dispatch re-route attempts
     retry_backoff_s: float = 0.05       # base backoff (2nd retry onward)
     retry_backoff_cap_s: float = 1.0    # capped exponential ceiling
+    retry_jitter_seed: int = 0          # full-jitter stream (seeded, stateless)
 
-    def backoff(self, attempt: int) -> float:
-        """Capped exponential backoff for dispatch retry `attempt` (1-based).
+    def backoff_cap(self, attempt: int) -> float:
+        """Capped-exponential envelope for dispatch retry `attempt` (1-based).
 
         The first retry is free — a map refresh, not a wait — so backoff
         only kicks in from the second retry onward.
@@ -66,6 +67,28 @@ class Timeouts:
             return 0.0
         return min(self.retry_backoff_s * (2.0 ** (attempt - 2)),
                    self.retry_backoff_cap_s)
+
+    def backoff(self, attempt: int, salt: int = 0) -> float:
+        """Full-jitter sleep in (0, backoff_cap(attempt)] for a retry.
+
+        After a correlated fault (a target dropping mid-burst) every client
+        retries the same target on the same schedule; deterministic capped
+        exponential turns that into synchronized retry storms.  AWS-style
+        full jitter draws uniformly under the envelope instead, but from a
+        seeded stateless stream — an FNV-1a hash of (seed, attempt, salt) —
+        so soak runs stay replayable and the dataclass stays frozen.
+        Callers salt with the failed target id so co-retrying streams
+        decorrelate from each other, not just from their own history.
+        """
+        cap = self.backoff_cap(attempt)
+        if cap <= 0.0:
+            return 0.0
+        h = 0xCBF29CE484222325
+        for word in (self.retry_jitter_seed, attempt, salt):
+            h ^= word & 0xFFFFFFFFFFFFFFFF
+            h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+        u = (h >> 11) / float(1 << 53)          # uniform [0, 1)
+        return cap * (1.0 - u)                  # (0, cap] — never a zero wait
 
 
 DEFAULT_TIMEOUTS = Timeouts()

@@ -170,6 +170,7 @@ class EngineStats:
     heal_deferrals: int = 0          # healing waits taken under fg load
     deferred_heal_bytes: int = 0     # healing bytes parked by those waits
     heal_floor_grants: int = 0       # heals forced through at the floor
+    ec_rebuilt_cells: int = 0        # lost EC cells regenerated by rebuild
 
 
 class VerifiedExtentCache:
@@ -1164,6 +1165,37 @@ def placement_order(n_targets: int, oid: int, dkey: str,
     return tuple(order)
 
 
+# ---------------------------------------------------------------------------
+# erasure-coded redundancy class geometry
+#
+# ec(k,p) stripes each data-path block over k+p DISTINCT targets in
+# placement order: cell i of block dkey lives on target order[i] under the
+# SAME (dkey, akey) the replicated layout uses, at block-relative extent
+# offsets [i*cs, (i+1)*cs) with cs = EC_STRIPE_BYTES // k.  Data cells
+# (i < k) therefore sit at their natural file offsets — healthy reads and
+# writes ride the unchanged per-target session machinery with only the
+# routing swapped — while parity cells (i >= k) sit at VIRTUAL offsets at
+# or beyond the block size, unreachable through the file-offset API by
+# construction.  Cell identity is self-describing: extent.offset // cs.
+#
+# EC_STRIPE_BYTES must equal dfs.BLOCK (the data-path block size); dfs
+# imports object_store, so the constant lives here and dfs asserts against
+# it at import.
+EC_STRIPE_BYTES = 1 << 20
+
+# Per-stripe dirty-cell ledger: when a cell write is dropped (its target
+# down / crashed mid-op), the writer records a one-byte marker at offset
+# `cell_index` under (dkey, EC_DIRTY_AKEY) on every UP stripe target —
+# 0x01 = stale (content predates the stripe's latest write), 0x00/hole =
+# clean.  Degraded reads exclude marked cells from the survivor set, and
+# `StorageCluster.resync` regenerates exactly the marked cells, clearing
+# markers as cells come back.
+EC_DIRTY_AKEY = "ec.dirty"
+
+# The akey EC stripes live under — must match dfs.AKEY (asserted there).
+EC_DATA_AKEY = "data"
+
+
 @dataclass
 class TargetInfo:
     target_id: int
@@ -1300,10 +1332,14 @@ class ClusterContainer:
     handles plus the fleet-wide metadata ops DFS needs."""
 
     def __init__(self, name: str, pool: "ClusterPool",
-                 params: Dict[str, Any]):
+                 params: Dict[str, Any],
+                 ec: Optional[Dict[str, int]] = None):
         self.name = name
         self.pool = pool
         self.params = dict(params)
+        # erasure-coded redundancy class ({"k", "p", "cell_bytes"}) — None
+        # on replicated containers; the wire copy rides the pool map
+        self.ec = dict(ec) if ec else None
         self._per_target: Dict[int, Container] = {}
 
     def target(self, target_id: int) -> Container:
@@ -1330,20 +1366,44 @@ class ClusterPool:
     def create_container(self, name: str, replication: int = 2,
                          aggregate: bool = False,
                          verified_cache: bool = False,
-                         write_quorum: Optional[int] = None
+                         write_quorum: Optional[int] = None,
+                         ec: Optional[Tuple[int, int]] = None
                          ) -> ClusterContainer:
+        """`ec=(k, p)` selects the erasure-coded redundancy class instead
+        of replication: each block is striped as k data + p parity cells
+        over k+p distinct targets, so the per-target containers hold
+        SINGLE copies (replication=1 — the cross-target parity IS the
+        redundancy, and the ~(k+p)/k media-byte economics depend on it)."""
+        ec_cls = None
+        if ec is not None:
+            k, p = int(ec[0]), int(ec[1])
+            if k < 1 or p < 1 or k + p > 256:
+                raise ValueError(f"ec({k},{p}) outside GF(256)")
+            if EC_STRIPE_BYTES % k:
+                raise ValueError(
+                    f"ec k={k} must divide the {EC_STRIPE_BYTES}-byte block")
+            n = self.cluster.pool_map.n_targets()
+            if n < k + p:
+                raise ValueError(
+                    f"ec({k},{p}) needs {k + p} distinct targets, have {n}")
+            ec_cls = {"k": k, "p": p, "cell_bytes": EC_STRIPE_BYTES // k}
+            replication, write_quorum = 1, None
         params = dict(replication=replication, aggregate=aggregate,
                       verified_cache=verified_cache,
                       write_quorum=write_quorum)
-        cc = ClusterContainer(name, self, params)
+        cc = ClusterContainer(name, self, params, ec=ec_cls)
         self.containers[name] = cc
         for t in self.cluster.targets:
             self.cluster._materialize_container(cc, t)
         # the redundancy CLASS rides the pool map (clients learn it with
         # the target list, zero extra round-trips)
-        self.cluster.pool_map.set_redundancy(
-            f"{self.name}/{name}", replication=replication,
-            write_quorum=write_quorum)
+        if ec_cls is not None:
+            self.cluster.pool_map.set_redundancy(
+                f"{self.name}/{name}", ec=dict(ec_cls))
+        else:
+            self.cluster.pool_map.set_redundancy(
+                f"{self.name}/{name}", replication=replication,
+                write_quorum=write_quorum)
         return cc
 
 
@@ -1372,7 +1432,8 @@ class StorageCluster:
 
     def __init__(self, n_targets: int = 1, n_devices: int = 4,
                  csum: Optional[Callable[[bytes], int]] = None,
-                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS,
+                 domains: Optional[Sequence[Optional[str]]] = None):
         self.csum = csum or checksum
         self.n_devices = int(n_devices)
         self.timeouts = timeouts
@@ -1389,8 +1450,9 @@ class StorageCluster:
         self.heal_pacer: Optional["MediaScrubber"] = None
         self.heal_pause_s = 0.002
         self._heal_defer_streak = 0
-        for _ in range(n_targets):
-            self.add_target()
+        for i in range(n_targets):
+            self.add_target(
+                domain=domains[i] if domains is not None else None)
 
     # -- fleet membership ----------------------------------------------------
     def add_target(self, n_devices: Optional[int] = None,
@@ -1555,6 +1617,12 @@ class StorageCluster:
         doms = self.pool_map.domain_layout()
         for pool in self.pools.values():
             for cc in pool.containers.values():
+                if cc.ec is not None:
+                    # erasure-coded containers repair per CELL, not per
+                    # first-up home: markers drive regeneration of exactly
+                    # the lost cells, placement repair re-homes strays
+                    moved += self._resync_ec(cc)
+                    continue
                 for tid in sorted(cc._per_target):
                     cont = cc._per_target[tid]
                     with cont._lock:
@@ -1571,6 +1639,167 @@ class StorageCluster:
                             moved += self._migrate(cc, obj, oid,
                                                    dkey, akey, home)
         return moved
+
+    # -- erasure-coded rebuild (marker-driven, lost cells only) --------------
+    def _ec_read_cell(self, cc: ClusterContainer, tid: int, oid: int,
+                      dkey: str, cell: int, cs: int) -> np.ndarray:
+        """One cell's media bytes from its engine (zeros for holes — the
+        zero-pad convention parity is computed under, so sparse stripes
+        decode bit-exactly)."""
+        obj = cc._per_target[tid].peek_object(oid)
+        if obj is None:
+            return np.zeros(cs, np.uint8)
+        return np.frombuffer(
+            obj.fetch(dkey, EC_DATA_AKEY, cell * cs, cs), np.uint8)
+
+    def _resync_ec(self, cc: ClusterContainer) -> int:
+        """Both EC repair legs, in dependency order:
+
+        1. REBUILD — union the fleet's dirty-cell ledgers and regenerate
+           EXACTLY the marked cells whose home target is back up, from any
+           k clean survivors (data cells preferred — they decode for
+           free), through the scrubber-throttled heal budget.  A stripe
+           below k clean up-cells keeps its markers and waits for the next
+           recovery.  Markers clear per cell as it lands; an all-clean
+           ledger extent is punched (leak-free).
+        2. PLACEMENT REPAIR — after a target ADD shifts a stripe's
+           placement order, resident cells whose home moved are re-read,
+           written to the new home and punched locally (cell identity is
+           self-describing via extent.offset // cell_bytes, and with
+           n >= k+p each target holds at most one cell per stripe, so the
+           local punch is cell-precise).
+
+        Reconstruction runs in the MEDIA domain: parity is linear over
+        what is on media (inline encryption included), so rebuild needs no
+        tenant keys — the end-to-end encryption property survives server-
+        side repair."""
+        from repro.kernels.rs_parity import ops as rs  # lazy: jax is heavy
+        k, p = int(cc.ec["k"]), int(cc.ec["p"])
+        cs = int(cc.ec["cell_bytes"])
+        n = self.pool_map.n_targets()
+        doms = self.pool_map.domain_layout()
+        repaired = 0
+
+        def attempt(fn):
+            # one bounded retry: transient media anomalies clear, and a
+            # persistent failure skips just this stripe (markers stay, so
+            # the next resync cycle — or a degraded read — covers it)
+            try:
+                return fn()
+            except StorageError:
+                return fn()
+
+        # -- leg 1: marker-driven regeneration -------------------------------
+        dirty: Dict[Tuple[int, str], set] = {}
+        for tid in sorted(cc._per_target):
+            cont = cc._per_target[tid]
+            with cont._lock:
+                objs = list(cont._objects.items())
+            for oid, obj in objs:
+                for dkey in obj.dkeys(EC_DIRTY_AKEY):
+                    marks = obj.fetch(dkey, EC_DIRTY_AKEY, 0, k + p)
+                    cells = {i for i, byte in enumerate(marks) if byte}
+                    if cells:
+                        dirty.setdefault((oid, dkey), set()).update(cells)
+        for (oid, dkey), cells in sorted(dirty.items()):
+            order = placement_order(n, oid, dkey, doms)
+            todo = sorted(j for j in cells
+                          if j < k + p and self.pool_map.is_up(order[j]))
+            clean = [j for j in range(k + p) if j not in cells
+                     and self.pool_map.is_up(order[j])]
+            present = ([j for j in clean if j < k]
+                       + [j for j in clean if j >= k])[:k]
+            if not todo or len(present) < k:
+                continue              # nothing rebuildable yet: keep markers
+            for j in present + todo:
+                self._pace_heal(cs)
+            try:
+                surv = np.stack([attempt(
+                    lambda j=j: self._ec_read_cell(cc, order[j], oid, dkey,
+                                                   j, cs))
+                    for j in present])
+                data = np.zeros((k, cs), np.uint8)
+                for r, j in enumerate(present):
+                    if j < k:
+                        data[j] = surv[r]
+                missing = [i for i in range(k) if i not in present]
+                if missing:
+                    dec = np.asarray(rs.ec_decode(surv, present, k, p,
+                                                  missing))
+                    for r, i in enumerate(missing):
+                        data[i] = dec[r]
+                parity = np.asarray(rs.ec_encode(data, p)) \
+                    if any(j >= k for j in todo) else None
+                for j in todo:
+                    payload = data[j] if j < k else parity[j - k]
+                    attempt(lambda j=j, payload=payload: cc.target(
+                        order[j]).object(oid).update(
+                            dkey, EC_DATA_AKEY, j * cs, payload.tobytes()))
+            except StorageError:
+                continue              # stripe stays marked for next cycle
+            with self._stats_lock:
+                self.stats.ec_rebuilt_cells += len(todo)
+            repaired += len(todo)
+            note_recovery(self.faults, "ec.rebuilt")
+            # clear the rebuilt cells in every UP ledger; punch ledgers
+            # that come up all-clean so error exits stay leak-free
+            for tid in sorted(cc._per_target):
+                if not self.pool_map.is_up(tid):
+                    continue          # a down target's stale ledger only
+                    # triggers an idempotent re-rebuild after recovery
+                o2 = cc._per_target[tid].peek_object(oid)
+                if o2 is None or dkey not in o2.dkeys(EC_DIRTY_AKEY):
+                    continue
+                try:
+                    for j in todo:
+                        attempt(lambda j=j: o2.update(
+                            dkey, EC_DIRTY_AKEY, j, b"\x00"))
+                    if not any(attempt(lambda: o2.fetch(
+                            dkey, EC_DIRTY_AKEY, 0, k + p))):
+                        o2.punch(dkey, EC_DIRTY_AKEY)
+                except StorageError:
+                    continue          # stale marks only re-trigger rebuild
+
+        # -- leg 2: placement repair after membership change ------------------
+        for tid in sorted(cc._per_target):
+            if not self.pool_map.is_up(tid):
+                continue
+            cont = cc._per_target[tid]
+            with cont._lock:
+                objs = list(cont._objects.items())
+            for oid, obj in objs:
+                with obj._lock:
+                    dkeys = sorted({dk for (dk, ak) in obj._extents
+                                    if ak == EC_DATA_AKEY})
+                for dkey in dkeys:
+                    order = placement_order(n, oid, dkey, doms)
+                    with obj._lock:
+                        exts = list(obj._extents.get((dkey, EC_DATA_AKEY),
+                                                     ()))
+                    cells_here = sorted({e.offset // cs for e in exts})
+                    stray = [i for i in cells_here if i < k + p
+                             and order[i] != tid]
+                    moved_all = True
+                    for i in stray:
+                        home = order[i]
+                        if not self.pool_map.is_up(home):
+                            moved_all = False
+                            continue
+                        self._pace_heal(cs)
+                        try:
+                            payload = attempt(lambda i=i: obj.fetch(
+                                dkey, EC_DATA_AKEY, i * cs, cs))
+                            attempt(lambda i=i, payload=payload: cc.target(
+                                order[i]).object(oid).update(
+                                    dkey, EC_DATA_AKEY, i * cs, payload))
+                        except StorageError:
+                            moved_all = False   # unreadable stray: keep it
+                            continue
+                        repaired += 1
+                    if stray and moved_all and not any(order[i] == tid
+                                                       for i in cells_here):
+                        obj.punch(dkey, EC_DATA_AKEY)
+        return repaired
 
     def _migrate(self, cc: ClusterContainer, obj: DAOSObject, oid: int,
                  dkey: str, akey: str, home_tid: int) -> int:

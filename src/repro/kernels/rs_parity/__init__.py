@@ -1,0 +1,1 @@
+from repro.kernels.rs_parity.ops import *  # noqa: F401,F403

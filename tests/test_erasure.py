@@ -1,0 +1,317 @@
+"""Erasure-coded redundancy: the ec(k,p) pool-map class, GF(256)
+Reed-Solomon striping of k data + p parity cells across distinct targets,
+k+1 ack quorum with background stragglers, degraded reads reconstructing
+from any k clean survivors, dirty-cell ledgers, and marker-driven rebuild
+that regenerates ONLY the lost cells through the heal throttle."""
+import numpy as np
+import pytest
+
+from repro.core.client import ROS2Client
+from repro.core.dfs import AKEY, BLOCK
+from repro.core.object_store import (EC_DIRTY_AKEY, EC_STRIPE_BYTES,
+                                     StorageError, placement_order)
+
+
+def _payload(n, seed=0):
+    return bytes(np.random.default_rng(seed).integers(0, 256, n,
+                                                      dtype=np.uint8))
+
+
+def _client(n_targets=4, ec=(2, 1), **kw):
+    kw.setdefault("scrub_interval_s", None)
+    return ROS2Client(mode="host", transport="rdma", n_targets=n_targets,
+                      ec=ec, **kw)
+
+
+def _flush(c):
+    for t in c.cluster.targets:
+        for d in t.store.devices:
+            if d.alive:
+                d.writeback()
+
+
+def _media_bytes(c):
+    _flush(c)
+    return sum(d.bytes_written for t in c.cluster.targets
+               for d in t.store.devices)
+
+
+def _cells_by_target(c):
+    """{tid: {(oid, dkey, cell_index), ...}} straight from extent state."""
+    _k, _p, cs = c.io._ec
+    out = {}
+    for tid, cont in c.ccontainer._per_target.items():
+        for oid, obj in list(cont._objects.items()):
+            with obj._lock:
+                items = {dk: list(exts) for (dk, ak), exts
+                         in obj._extents.items() if ak == AKEY}
+            for dk, exts in items.items():
+                for e in exts:
+                    out.setdefault(tid, set()).add((oid, dk, e.offset // cs))
+    return out
+
+
+def _dirty_union(c, n_cells):
+    """The fleet-wide dirty-cell ledger union: {(oid, dkey): {cells}}."""
+    out = {}
+    for cont in c.ccontainer._per_target.values():
+        for oid, obj in list(cont._objects.items()):
+            for dk in obj.dkeys(EC_DIRTY_AKEY):
+                marks = obj.fetch(dk, EC_DIRTY_AKEY, 0, n_cells)
+                cells = {i for i, b in enumerate(marks) if b}
+                if cells:
+                    out.setdefault((oid, dk), set()).update(cells)
+    return out
+
+
+def _assert_rings_whole(c):
+    """Leak check: once writebacks land, every donated lease has dropped,
+    every ring slot is back on the free list, no rkey grant outlived its
+    op (the fault-suite invariants, EC edition)."""
+    import time
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        _flush(c)
+        if all(not s.ring.donated_slots() for s in c.io.sessions.values()):
+            break
+        time.sleep(0.005)
+    for s in c.io.sessions.values():
+        assert not s.ring.donated_slots(), "donated slot leases leaked"
+        with s.ring._cv:
+            assert sorted(s.ring._free) == list(range(s.ring.n_slots))
+    assert not c.client_registry._rkeys, "client rkey grant leaked"
+
+
+# ---------------------------------------------------------------------------
+# redundancy class plumbing
+
+
+def test_pool_map_serves_ec_class_and_router_adopts():
+    c = _client()
+    m = c.cluster.pool_map.describe()
+    assert m["redundancy"]["pool0/cont0"]["ec"] == {
+        "k": 2, "p": 1, "cell_bytes": EC_STRIPE_BYTES // 2}
+    assert c.io._ec == (2, 1, EC_STRIPE_BYTES // 2)
+    # EC forces single-copy cells: redundancy comes from parity, not
+    # replica fan-out (the media-byte economics depend on it)
+    assert c.ccontainer.params.get("replication") == 1
+    c.close()
+
+
+def test_ec_rejects_bad_geometry():
+    with pytest.raises(ValueError):
+        _client(n_targets=2, ec=(2, 1))       # n < k + p
+    with pytest.raises(ValueError):
+        _client(n_targets=4, ec=(3, 1))       # stripe not divisible by k
+
+
+# ---------------------------------------------------------------------------
+# healthy-path striping
+
+
+@pytest.mark.parametrize("inline_encryption", [False, True])
+def test_ec_roundtrip_bit_exact(inline_encryption):
+    """Aligned, unaligned (read-modify-write through parity), cell-
+    boundary-crossing and vectored I/O all roundtrip bit-exactly — with
+    inline encryption the parity is computed over the MEDIA image, so
+    ciphertext economics and plaintext fidelity hold at once."""
+    c = _client(inline_encryption=inline_encryption)
+    cs = c.io._ec[2]
+    fd = c.open("/f", create=True)
+    shadow = bytearray(_payload(3 * BLOCK, 0))      # materialize: hole-free
+    c.pwrite(fd, bytes(shadow), 0)
+    writes = [(0, 2 * BLOCK, 1),                    # stripe-aligned
+              (cs - 7, 15, 2),                      # crosses a cell seam
+              (BLOCK + 100, cs, 3),                 # partial: RMW parity
+              (2 * BLOCK + 5, BLOCK - 5, 4)]        # tail fragment
+    for off, ln, seed in writes:
+        data = _payload(ln, seed)
+        c.pwrite(fd, data, off)
+        shadow[off:off + ln] = data
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    # vectored both ways across a stripe boundary
+    data = _payload(BLOCK, 5)
+    c.pwritev(fd, [data[:100], data[100:]], BLOCK - 50)
+    shadow[BLOCK - 50:2 * BLOCK - 50] = data
+    parts = c.preadv(fd, [200, BLOCK - 200], BLOCK - 50)
+    assert b"".join(parts) == data
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    ctr = c.io.data_path_counters()               # drains stragglers
+    assert ctr["ec"]["degraded_reads"] == 0       # healthy: no decode
+    assert not c.io._ec_pending
+    _assert_rings_whole(c)
+    c.close()
+
+
+def test_ec_cells_land_on_distinct_targets_in_placement_order():
+    c = _client()
+    k, p, cs = c.io._ec
+    fd = c.open("/f", create=True)
+    c.pwrite(fd, _payload(4 * BLOCK, 7), 0)
+    _flush(c)
+    by_target = _cells_by_target(c)
+    placed = {}                                   # (oid, dkey) -> {cell: tid}
+    for tid, cells in by_target.items():
+        for oid, dk, cell in cells:
+            assert (oid, dk) not in placed or cell not in placed[(oid, dk)]
+            placed.setdefault((oid, dk), {})[cell] = tid
+    n = len(c.cluster.targets)
+    for (oid, dk), cells in placed.items():
+        assert sorted(cells) == list(range(k + p))         # all k+p present
+        assert len(set(cells.values())) == k + p           # distinct targets
+        order = placement_order(n, oid, dk)
+        for cell, tid in cells.items():
+            assert tid == order[cell]                      # slot == identity
+    c.close()
+
+
+def test_ec_media_bytes_half_of_replication3_at_equal_redundancy():
+    """ec(2,1) and replication-3 both survive any single failure, but the
+    stripe writes 1.5x the logical bytes where the replica fan-out writes
+    3x — the media-byte economics that justify the parity math."""
+    span = 8 * BLOCK
+    data = _payload(span, 11)
+    cec = _client()
+    fd = cec.open("/f", create=True)
+    cec.pwrite(fd, data, 0)
+    ec_bytes = _media_bytes(cec)
+    cec.close()
+    crep = ROS2Client(mode="host", transport="rdma", n_targets=4,
+                      replication=3, scrub_interval_s=None)
+    fd = crep.open("/f", create=True)
+    crep.pwrite(fd, data, 0)
+    rep_bytes = _media_bytes(crep)
+    crep.close()
+    assert ec_bytes >= 1.5 * span                 # k data + p parity cells
+    assert rep_bytes >= 3 * span                  # three full replicas
+    assert ec_bytes <= 0.6 * rep_bytes
+
+
+# ---------------------------------------------------------------------------
+# degraded reads
+
+
+def test_ec_degraded_read_is_bit_exact_and_counted():
+    c = _client()
+    fd = c.open("/f", create=True)
+    data = _payload(3 * BLOCK + 12345, 21)
+    c.pwrite(fd, data, 0)
+    c.cluster.fail_target(2)
+    assert c.pread(fd, len(data), 0) == data      # any k survivors suffice
+    ctr = c.io.data_path_counters()
+    assert ctr["ec"]["degraded_reads"] >= 1
+    assert ctr["ec"]["reconstructions"] >= 1
+    _assert_rings_whole(c)
+    c.close()
+
+
+def test_ec_unrecoverable_below_k_survivors():
+    """More than p failures is a hard error on BOTH paths — the write
+    refuses before moving a byte (no torn stripe), the read refuses
+    instead of fabricating bytes."""
+    c = _client(n_targets=3)                      # every stripe uses all 3
+    fd = c.open("/f", create=True)
+    data = _payload(2 * BLOCK, 31)
+    c.pwrite(fd, data, 0)
+    c.cluster.fail_target(1)
+    c.cluster.fail_target(2)
+    with pytest.raises(StorageError):
+        c.pwrite(fd, _payload(BLOCK, 32), 0)
+    with pytest.raises(StorageError):
+        c.pread(fd, len(data), 0)
+    _assert_rings_whole(c)                        # error exits stay leak-free
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# rebuild: dirty markers -> regenerate exactly the lost cells
+
+
+def test_ec_outage_writes_mark_dirty_and_rebuild_regenerates_only_lost():
+    c = _client()
+    k, p, cs = c.io._ec
+    fd = c.open("/f", create=True)
+    base = _payload(6 * BLOCK, 41)
+    c.pwrite(fd, base, 0)
+    c.cluster.fail_target(1)
+    fresh = _payload(4 * BLOCK, 42)
+    c.pwrite(fd, fresh, 0)                        # cells homed on 1 dropped
+    shadow = fresh + base[len(fresh):]
+    dirty = _dirty_union(c, k + p)
+    lost = sum(len(v) for v in dirty.values())
+    assert lost >= 1                              # the outage marked cells
+    n = len(c.cluster.targets)
+    for (oid, dk), cells in dirty.items():        # ...and ONLY cells homed
+        order = placement_order(n, oid, dk)       #    on the down target
+        assert {order[i] for i in cells} == {1}
+    before = c.cluster.stats.ec_rebuilt_cells
+    c.cluster.recover_target(1)
+    assert c.cluster.stats.ec_rebuilt_cells - before == lost
+    assert not _dirty_union(c, k + p)             # ledgers cleared + punched
+    for cont in c.ccontainer._per_target.values():
+        for _oid, obj in list(cont._objects.items()):
+            assert not obj.dkeys(EC_DIRTY_AKEY)
+    assert c.pread(fd, len(shadow), 0) == shadow  # healthy read, no decode
+    ctr = c.io.data_path_counters()
+    assert ctr["ec"]["rebuilt_cells"] == c.cluster.stats.ec_rebuilt_cells
+    c.close()
+
+
+class _FakePacer:
+    idle_aware = True
+
+    def __init__(self, budgets, max_deferrals=2):
+        self.budgets = list(budgets)
+        self.max_deferrals = max_deferrals
+
+    def idle_budget(self):
+        return self.budgets.pop(0) if self.budgets else 0
+
+
+def test_ec_rebuild_heals_through_throttle():
+    """Cell regeneration rides the same idle-aware heal budget as replica
+    re-replication: under sustained foreground load it DEFERS (counted),
+    then the starvation floor drives it to completion anyway."""
+    c = _client()
+    fd = c.open("/f", create=True)
+    c.pwrite(fd, _payload(2 * BLOCK, 51), 0)
+    c.cluster.fail_target(1)
+    data = _payload(2 * BLOCK, 52)
+    c.pwrite(fd, data, 0)
+    assert _dirty_union(c, 3)
+    c.cluster.heal_pause_s = 0.0005
+    c.cluster.heal_pacer = _FakePacer([], max_deferrals=2)
+    c.cluster.recover_target(1)
+    assert c.cluster.stats.ec_rebuilt_cells >= 1
+    assert c.cluster.stats.heal_deferrals >= 2
+    assert c.cluster.stats.heal_floor_grants >= 1
+    assert c.pread(fd, len(data), 0) == data
+    c.close()
+
+
+def test_ec_add_target_placement_repair_rehomes_cells():
+    c = _client()
+    fd = c.open("/f", create=True)
+    data = _payload(8 * BLOCK, 61)
+    c.pwrite(fd, data, 0)
+    _flush(c)
+    before = {(oid, dk, cell): tid
+              for tid, cells in _cells_by_target(c).items()
+              for (oid, dk, cell) in cells}
+    c.add_target()                                # rebalances on the way in
+    after = {(oid, dk, cell): tid
+             for tid, cells in _cells_by_target(c).items()
+             for (oid, dk, cell) in cells}
+    assert sorted(after) == sorted(before)        # same cells, no dupes
+    moved = sum(after[key] != before[key] for key in before)
+    assert moved >= 1                             # jump-hash moved ~1/5
+    # every cell now lives at its NEW placement home, nowhere else
+    n = len(c.cluster.targets)
+    k, p, cs = c.io._ec
+    for tid, cells in _cells_by_target(c).items():
+        for oid, dk, cell in cells:
+            assert placement_order(n, oid, dk)[cell] == tid
+    assert c.pread(fd, len(data), 0) == data
+    ctr = c.io.data_path_counters()
+    assert ctr["ec"]["degraded_reads"] == 0       # repair, not reconstruction
+    c.close()

@@ -105,10 +105,32 @@ def test_injector_probability_rules_are_reproducible():
 
 def test_backoff_is_capped_exponential_with_free_first_retry():
     t = Timeouts(retry_backoff_s=0.05, retry_backoff_cap_s=0.4)
+    assert t.backoff_cap(1) == 0.0
+    assert t.backoff_cap(2) == 0.05
+    assert t.backoff_cap(3) == 0.1
+    assert t.backoff_cap(10) == 0.4                      # capped
+
+
+def test_backoff_full_jitter_is_seeded_and_decorrelated():
+    t = Timeouts(retry_backoff_s=0.05, retry_backoff_cap_s=0.4,
+                 retry_jitter_seed=7)
+    # first retry stays free regardless of jitter
     assert t.backoff(1) == 0.0
-    assert t.backoff(2) == 0.05
-    assert t.backoff(3) == 0.1
-    assert t.backoff(10) == 0.4                          # capped
+    # jittered sleeps land strictly inside (0, cap] of the envelope
+    for attempt in (2, 3, 10):
+        for salt in (0, 1, 5):
+            b = t.backoff(attempt, salt=salt)
+            assert 0.0 < b <= t.backoff_cap(attempt)
+    # stateless + seeded: same (seed, attempt, salt) replays exactly
+    assert t.backoff(3, salt=1) == t.backoff(3, salt=1)
+    assert Timeouts(retry_jitter_seed=7).backoff(3, salt=1) == \
+        Timeouts(retry_jitter_seed=7).backoff(3, salt=1)
+    # decorrelated: different salts (co-retrying streams) and different
+    # seeds (different clients) draw different sleeps
+    assert t.backoff(3, salt=1) != t.backoff(3, salt=2)
+    assert t.backoff(3, salt=1) != \
+        Timeouts(retry_backoff_s=0.05, retry_backoff_cap_s=0.4,
+                 retry_jitter_seed=8).backoff(3, salt=1)
 
 
 def test_staging_acquire_timeout_carries_op_context():
@@ -522,8 +544,9 @@ SOAK_SCHEDULE = [
 ]
 
 
-@pytest.mark.parametrize("transport", ["rdma", "tcp"])
-def test_seeded_crash_recovery_soak(transport):
+@pytest.mark.parametrize("transport,redundancy",
+                         [("rdma", "rep"), ("tcp", "rep"), ("rdma", "ec")])
+def test_seeded_crash_recovery_soak(transport, redundancy):
     """A few hundred mixed striped ops while the injector fires at EVERY
     layer boundary reachable on this transport — wire errors and partial
     transfers, media I/O errors during commit and read, a target crash
@@ -531,11 +554,23 @@ def test_seeded_crash_recovery_soak(transport):
     pool-map recall around a real fail/recover cycle, and a dropped
     get_pool_map refresh. The run must stay bit-exact against a shadow
     model, recover every class (counters prove injection AND recovery),
-    and leak nothing: no donated lease, no ring slot, no rkey grant."""
+    and leak nothing: no donated lease, no ring slot, no rkey grant.
+
+    The "ec" variant runs the same schedule against an erasure-coded
+    ec(2,1) container over 4 targets in 2 fault domains: every read in
+    the outage window is served by reconstruction from k survivors, a
+    cell-level media failure degrades (dirty marker + decode-around)
+    instead of failing the op, and recovery rebuilds exactly the marked
+    cells — degraded reads, reconstructions AND rebuilt cells must all
+    prove they fired."""
     inj = FaultInjector(schedule=SOAK_SCHEDULE, seed=1234)
-    c = ROS2Client(mode="host", transport=transport, n_targets=2,
+    ec = redundancy == "ec"
+    c = ROS2Client(mode="host", transport=transport,
+                   n_targets=4 if ec else 2,
                    n_devices=4, replication=3, write_quorum=2,
-                   scrub_interval_s=None, fault_injector=inj)
+                   scrub_interval_s=None, fault_injector=inj,
+                   ec=(2, 1) if ec else None,
+                   domains=["a", "a", "b", "b"] if ec else None)
     # must-fire singles armed AFTER bring-up so connect/mount stay clean
     inj.arm("engine.crash", Fault("crash"), 4)
     if transport == "rdma":
@@ -559,7 +594,7 @@ def test_seeded_crash_recovery_soak(transport):
         off = int(rng.integers(0, span - 1))
         ln = int(rng.integers(1, min(int(2.5 * BLOCK), span - off) + 1))
         kind = int(rng.integers(0, 4))
-        if in_outage and kind == 2:
+        if in_outage and kind == 2 and not ec:
             # a single-target outage makes blocks homed there unreadable
             # (placement stripes, it does not replicate across targets) —
             # during the window only writes and exact read-after-write of
@@ -591,15 +626,30 @@ def test_seeded_crash_recovery_soak(transport):
         assert f["injected"].get(op, 0) >= 1, f"{op} never fired"
     rec = f["recovered"]
     assert rec.get("transport.retry", 0) >= 1    # RC retransmit path
-    assert rec.get("dispatch.retry", 0) >= 1     # surgical re-dispatch path
     assert rec.get("control.rpc_retry", 0) >= 1  # refresh RPC retry path
     if transport == "rdma":
         assert rec.get("cap.renewed", 0) >= 1    # renew-and-retry path
-    assert c.io.target_retries >= 1
-    assert c.io.retried_runs >= 1
+    if not ec:
+        assert rec.get("dispatch.retry", 0) >= 1  # surgical re-dispatch
+        assert c.io.target_retries >= 1
+        assert c.io.retried_runs >= 1
     # injections ride the fleet counters exactly once (not per-session)
     counters = c.io.data_path_counters()
     assert counters["faults"]["total_injected"] == f["total_injected"]
     assert counters["cluster"]["retried_runs"] == c.io.retried_runs
+    if ec:
+        # the EC recovery machinery all provably fired: reads in the
+        # outage window reconstructed from survivors, and the recovery
+        # rebuilt exactly the ledgered cells (zero ledger left behind)
+        assert counters["ec"]["degraded_reads"] >= 1
+        assert counters["ec"]["reconstructions"] >= 1
+        assert counters["ec"]["rebuilt_cells"] >= 1
+        assert rec.get("ec.degraded_read", 0) >= 1
+        assert rec.get("ec.rebuilt", 0) >= 1
+        from repro.core.object_store import EC_DIRTY_AKEY
+        c.cluster.resync()                       # drain any late markers
+        for cont in c.ccontainer._per_target.values():
+            for _oid, obj in list(cont._objects.items()):
+                assert not obj.dkeys(EC_DIRTY_AKEY)
     _assert_no_leaks(c)
     c.close()
