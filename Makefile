@@ -1,10 +1,16 @@
 # Dev workflow targets (see ROADMAP.md "Dev workflow").
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-smoke check
+.PHONY: test test-witnessed lint bench bench-smoke check
 
 test:                 ## tier-1 verify
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+test-witnessed:       ## tier-1 + lock-order witness (latent deadlocks)
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q --lockgraph
+
+lint:                 ## repo-invariant linter (tools/analysis), <2s
+	python -m tools.analysis.lint
 
 bench:                ## full data-path benchmark -> BENCH_data_path.json
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_data_path.py
@@ -12,7 +18,9 @@ bench:                ## full data-path benchmark -> BENCH_data_path.json
 bench-smoke:          ## ~30s gate: fails if zero_copy regresses below sg
 	bash benchmarks/smoke.sh
 
-# check = tier-1 tests + the smoke gate (4-target two-domain pool map:
-# data-path, control-path, cluster-routing, fault and EC regressions all
-# fail fast) — run it before landing anything that touches the stack.
-check: test bench-smoke  ## tier-1 tests + smoke gate in one shot
+# check = lint + witnessed tier-1 tests + the smoke gate (4-target
+# two-domain pool map: data-path, control-path, cluster-routing, fault
+# and EC regressions all fail fast; the lock-order and leak witnesses
+# ride the test run) — run it before landing anything that touches the
+# stack.
+check: lint test-witnessed bench-smoke  ## lint + tests + smoke gate

@@ -77,6 +77,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import transport_model as tm
+from repro.core import counters_registry
 from repro.core.control_plane import ControlPlane
 from repro.core.data_plane import (AccessError, MemoryRegion,
                                    MemoryRegistry, RDMATransport,
@@ -246,7 +247,7 @@ class _StagingRing:
                         detail=f"ring exhausted ({k} slots wanted, "
                                f"{len(self._free)} free, "
                                f"{len(self._donated)} donated)")
-                self._cv.wait(0.05)
+                self._cv.wait(self.timeouts.poll_interval_s)
         for s in slots:
             acquired = self._locks[s].acquire(blocking=False)
             assert acquired, "staging slot handed out twice"
@@ -531,7 +532,7 @@ class _ServerIO:
             # next to the costs they perturb (injector shared fleet-wide —
             # the router reports it once, not summed per session)
             out["faults"] = self._faults.counters()
-        return out
+        return counters_registry.verify(out)
 
     # -- vectored write path -------------------------------------------------
     def write(self, oid: int, offset: int, data) -> None:
@@ -709,8 +710,8 @@ class _ServerIO:
                     self.creg.renew(token, ttl)
                     self._dst_rkeys[mr.region_id] = \
                         (token, mr, time.monotonic() + ttl)
-                except Exception:     # revoked/gone: hard-fails at use
-                    pass
+                except (AccessError, KeyError):
+                    pass              # revoked/gone: hard-fails at use
                 return token
         rk = self.creg.grant(mr, "w", ttl_s=ttl)
         dead = []
@@ -1913,7 +1914,7 @@ class _ClusterRouter:
                         int(asdict(self._cluster_stats()).get(
                             "ec_rebuilt_cells", 0)),
                 }
-        return out
+        return counters_registry.verify(out)
 
     def close(self) -> None:
         self._ec_drain()
@@ -2318,6 +2319,13 @@ class ROS2Client:
         self.scrubber.stop()
         if self.dpu:
             self.dpu.stop()
+        # persistent client registrations (loader rings, raw read sinks
+        # the caller never deregistered) die with the client: capability
+        # first, then the registration, so no stale NIC translation-cache
+        # entry can land bytes in recycled memory
+        for mr in self.client_registry.regions():
+            self.io.drop_dst_rkey(mr)
+            self.client_registry.deregister(mr)
         if isinstance(self.io, _ClusterRouter):
             self.io.close()
         self.cluster.close()   # drain background replica commits fleet-wide

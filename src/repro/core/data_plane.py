@@ -102,6 +102,10 @@ class MemoryRegistry:
     def deregister(self, mr: MemoryRegion) -> None:
         self._regions.pop(mr.region_id, None)
 
+    def regions(self) -> List[MemoryRegion]:
+        """Snapshot of live registrations (owner teardown sweeps)."""
+        return list(self._regions.values())
+
     def grant(self, mr: MemoryRegion, perms: str = "rw",
               ttl_s: float = 3600.0) -> RKey:
         rk = RKey(secrets.token_hex(8), mr.region_id, mr.tenant, perms,

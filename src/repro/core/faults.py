@@ -52,6 +52,8 @@ class Timeouts:
     dpu_wait_s: float = 120.0           # DPURuntime.wait_all / _dpu_call
     dpu_tag_s: float = 30.0             # DPURuntime.wait_tag
     op_deadline_s: float = 120.0        # _ClusterRouter._dispatch per-op
+    poll_interval_s: float = 0.05       # bounded re-check polls (cv/cq/queue)
+    thread_join_s: float = 5.0          # service-thread join on stop/close
     retry_budget: int = 3               # dispatch re-route attempts
     retry_backoff_s: float = 0.05       # base backoff (2nd retry onward)
     retry_backoff_cap_s: float = 1.0    # capped exponential ceiling

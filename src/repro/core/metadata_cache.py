@@ -27,6 +27,8 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from repro.core.faults import DEFAULT_TIMEOUTS
+
 DEFAULT_SKEW_MARGIN = 0.25    # fraction of the TTL surrendered to skew
 RENEW_INTERVAL_S = 1.0
 
@@ -173,5 +175,5 @@ class MetadataCache:
         if self._renew_thread is None:
             return
         self._stop.set()
-        self._renew_thread.join(timeout=5)
+        self._renew_thread.join(timeout=DEFAULT_TIMEOUTS.thread_join_s)
         self._renew_thread = None

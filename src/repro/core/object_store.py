@@ -442,7 +442,7 @@ class DAOSObject:
         try:
             dev.write(key, payload, lease=lease,
                       pre_pinned=lease is not None)
-        except Exception as e:                    # degraded replica
+        except (StorageError, OSError) as e:      # degraded replica
             if lease is not None:
                 lease.unpin()                     # write never consumed it
             acked, cancelled = rec.record(False, dev.name, key, e)
@@ -496,8 +496,13 @@ class DAOSObject:
             if cb is not None:
                 try:
                     cb(self, ext)
-                except Exception:      # cluster heal must never break the
-                    pass               # straggler worker's demotion path
+                # lint: allow(broad-except): cluster heal is best-effort
+                # from a straggler commit worker — ANY escalation failure
+                # (peer down mid-heal, map churn) must not break the
+                # demotion path; the extent stays degraded and rebuild
+                # retries it
+                except Exception:
+                    pass
             return
         if rec is not None:
             with rec.cv:
@@ -530,7 +535,7 @@ class DAOSObject:
             key = cont.store.new_block_key()
             try:
                 dev.write(key, data)
-            except Exception as e:
+            except (StorageError, OSError) as e:
                 last_err = e
                 continue
             ext.block_keys[dev.name] = key
@@ -645,7 +650,7 @@ class DAOSObject:
                 name, key = pending.pop(fut)
                 try:
                     data = fut.result()
-                except Exception as e:
+                except (StorageError, OSError, KeyError) as e:
                     last_err = e
                     continue
                 if fut is backup:
@@ -680,7 +685,7 @@ class DAOSObject:
         if hedge is not None and len(live) >= 2:
             try:
                 name, key, data = self._hedged_read(live, hedge)
-            except Exception as e:
+            except (StorageError, OSError, KeyError) as e:
                 last_err = e
             else:
                 err = self._verify_replica(ext, name, key, verify, cache,
@@ -692,7 +697,7 @@ class DAOSObject:
         for name, key, dev in live:
             try:
                 data = dev.read(key)
-            except Exception as e:     # degraded replica
+            except (StorageError, OSError, KeyError) as e:  # degraded
                 last_err = e
                 continue
             err = self._verify_replica(ext, name, key, verify, cache, data)
@@ -1926,7 +1931,7 @@ class MediaScrubber:
                     continue
                 try:
                     data = dev.read(key)
-                except Exception:     # block reclaimed or device failed
+                except (OSError, KeyError):  # reclaimed or device failed
                     cont.vcache.invalidate_block(name, key)
                     continue
                 scanned += n
@@ -1955,5 +1960,5 @@ class MediaScrubber:
         if self._thread is None:
             return
         self._stop.set()
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=DEFAULT_TIMEOUTS.thread_join_s)
         self._thread = None

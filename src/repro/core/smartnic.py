@@ -250,7 +250,11 @@ class DPURuntime:
             while not stop.wait(interval_s):
                 try:
                     fn()
-                except Exception:    # noqa: housekeeping must never die loud
+                # lint: allow(broad-except): a periodic housekeeping tick
+                # (lease renewal, scrub pacing) must never kill the Arm
+                # service thread — the next tick retries, and the real
+                # failure surfaces at the op that needed the lease
+                except Exception:
                     pass
                 with self._lock:
                     self.housekeeping_runs += 1
@@ -278,7 +282,12 @@ class DPURuntime:
                 fn = self._handlers[sqe.op]
                 res = fn(**sqe.args)
                 self.cq.put(CQE(sqe.tag, True, res))
-            except Exception as e:   # noqa
+            # lint: allow(broad-except): not a swallow — the worker
+            # CONVERTS any handler failure into an error CQE, so the
+            # initiator's wait_tag sees the typed message and the Arm
+            # core survives to serve the next SQE (a dead worker would
+            # hang every later doorbell)
+            except Exception as e:
                 self.cq.put(CQE(sqe.tag, False, None,
                                 f"{type(e).__name__}: {e}"))
             with self._lock:
@@ -326,7 +335,8 @@ class DPURuntime:
             out[tag] = self.wait_tag(tag, timeout=remaining)
         return out
 
-    def poll(self, timeout: float = 30.0) -> CQE:
+    def poll(self, timeout: Optional[float] = None) -> CQE:
+        timeout = self.timeouts.dpu_tag_s if timeout is None else timeout
         return self.cq.get(timeout=timeout)
 
     def wait_tag(self, tag: int, timeout: Optional[float] = None) -> CQE:
@@ -342,7 +352,7 @@ class DPURuntime:
                 if c is not None:
                     return c
                 try:
-                    c = self.cq.get(timeout=0.05)
+                    c = self.cq.get(timeout=self.timeouts.poll_interval_s)
                 except queue.Empty:
                     continue
                 if c.tag == tag:
@@ -352,18 +362,20 @@ class DPURuntime:
                         elapsed_s=_time.monotonic() - start,
                         detail="no completion")
 
-    def drain(self, n: int, timeout: float = 30.0) -> Dict[int, CQE]:
+    def drain(self, n: int, timeout: Optional[float] = None
+              ) -> Dict[int, CQE]:
         return {c.tag: c for c in (self.poll(timeout) for _ in range(n))}
 
     def stop(self) -> None:
+        join_s = self.timeouts.thread_join_s
         for _t, ev in self._services:
             ev.set()
         for t, _ev in self._services:
-            t.join(timeout=5)
+            t.join(timeout=join_s)
         self._services.clear()
         for _ in self._workers:
             self.sq.put(None)
         for t in self._workers:
-            t.join(timeout=5)
+            t.join(timeout=join_s)
         self._workers.clear()
         self._started = False

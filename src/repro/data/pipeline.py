@@ -36,6 +36,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.faults import DEFAULT_TIMEOUTS, Timeouts, note_recovery
+
 TOKEN_DTYPE = np.int32
 TOKEN_BYTES = 4
 META_FILE = "meta.json"
@@ -109,8 +111,13 @@ class ROS2TokenLoader:
     def __init__(self, client, root: str, *, global_batch: int, seq_len: int,
                  dp_rank: int = 0, dp_size: int = 1, seed: int = 0,
                  prefetch: int = 2, hedge_timeout_s: Optional[float] = None,
-                 read_delay_hook=None):
+                 read_delay_hook=None,
+                 timeouts: Timeouts = DEFAULT_TIMEOUTS):
         self.client = client
+        # one policy object for every loader wait (retry backoff, queue
+        # polls, batch deadline, producer join) — same discipline as the
+        # storage stack's data-path deadlines
+        self.timeouts = timeouts
         self.root = root
         self.meta = read_meta(client, root)
         self.seq_len = seq_len
@@ -154,7 +161,8 @@ class ROS2TokenLoader:
         self.read_retries = 0
         self.last_error = ""
         self.failed = False
-        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread = threading.Thread(target=self._producer,
+                                        name="loader-producer", daemon=True)
         self._thread.start()
 
     MAX_READ_RETRIES = 5
@@ -179,6 +187,10 @@ class ROS2TokenLoader:
             eng = self.client.io.data_path_counters()["engine"]
             return (int(eng.get("hedges_issued", 0)),
                     int(eng.get("hedges_won", 0)))
+        # lint: allow(broad-except): a gauge read over another
+        # subsystem's counter dict — any shape drift or closed client
+        # reads as "no engine hedges yet" (0, 0); failing the data path
+        # over a metrics peek would invert the dependency
         except Exception:
             return 0, 0
 
@@ -247,24 +259,37 @@ class ROS2TokenLoader:
                                     for i in idxs])
                     batch = {"tokens": arr[:, :-1].astype(TOKEN_DTYPE),
                              "labels": arr[:, 1:].astype(TOKEN_DTYPE)}
+                    if attempt:      # stall recovered: ledger the retry
+                        note_recovery(getattr(self.client, "faults", None),
+                                      "pipeline.read_retry")
                     break
-                except Exception as e:   # transient storage stall: retry
+                # lint: allow(broad-except): a COUNTED recovery, not a
+                # swallow — the retry is bounded (MAX_READ_RETRIES), every
+                # attempt is recorded in read_retries/last_error, success
+                # after a retry ledgers pipeline.read_retry, and
+                # exhaustion surfaces to the consumer via self.failed
+                except Exception as e:
                     self.read_retries += 1
                     self.last_error = repr(e)
-                    time.sleep(min(0.2 * 2 ** attempt, 2.0))
+                    time.sleep(self.timeouts.backoff(attempt + 2,
+                                                     salt=step))
             if batch is None:
                 # persistent failure — surface to the consumer and stop
                 self.failed = True
                 return
             while not self._stop.is_set():
                 try:
-                    self._q.put((gen, step, batch), timeout=0.2)
+                    self._q.put((gen, step, batch),
+                                timeout=self.timeouts.poll_interval_s)
                     break
                 except queue.Full:
                     continue
 
     # -- consumer API ---------------------------------------------------------
-    def next_batch(self, timeout: float = 120.0) -> Dict[str, np.ndarray]:
+    def next_batch(self, timeout: Optional[float] = None
+                   ) -> Dict[str, np.ndarray]:
+        if timeout is None:
+            timeout = self.timeouts.op_deadline_s
         t0 = time.monotonic()
         deadline = t0 + timeout
         while True:
@@ -273,7 +298,8 @@ class ROS2TokenLoader:
                               f"{self.read_retries} retries: "
                               f"{self.last_error}")
             try:
-                gen, step, batch = self._q.get(timeout=0.5)
+                gen, step, batch = self._q.get(
+                    timeout=self.timeouts.poll_interval_s)
             except queue.Empty:
                 if time.monotonic() > deadline:
                     raise
@@ -316,7 +342,7 @@ class ROS2TokenLoader:
 
     def close(self) -> None:
         self._stop.set()
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=self.timeouts.thread_join_s)
         self._pool.shutdown(wait=False)
 
 

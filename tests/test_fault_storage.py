@@ -24,6 +24,7 @@ from repro.core.faults import (DEFAULT_TIMEOUTS, Fault, FaultInjector,
 from repro.core.object_store import (StorageCluster, StorageError,
                                      TargetDownError, _PendingCommit,
                                      placement_order)
+from tools.analysis.leakwitness import assert_no_client_leaks
 
 
 def _payload(n, seed=0):
@@ -53,19 +54,13 @@ def _assert_no_leaks(c):
     * every ring's free list is whole (no leaked, no duplicated slots);
     * no client-side rkey grant outlived its op (transient dst
       capabilities retired with their registrations).
+
+    Since PR 8 the checks live in tools/analysis/leakwitness (the
+    conftest fixture applies them to every storage test automatically);
+    the explicit calls below remain as mid-test assertions at points
+    where the invariants must ALREADY hold, not just at teardown.
     """
-    def drained():
-        for t in c.cluster.targets:
-            for d in t.store.devices:
-                if d.alive:
-                    d.writeback()
-        return all(not s.ring.donated_slots() for s in _sessions(c))
-    assert _wait(drained), "donated slot leases leaked"
-    for s in _sessions(c):
-        with s.ring._cv:
-            assert sorted(s.ring._free) == list(range(s.ring.n_slots))
-        assert not s._dst_rkeys, "dst rkey cache entry leaked"
-    assert not c.client_registry._rkeys, "client rkey grant leaked"
+    assert_no_client_leaks(c)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,25 @@
+"""Concurrency & resource-lifecycle static analysis for the ROS2 stack.
+
+Two parts:
+
+  * ``python -m tools.analysis.lint`` — an AST-based repo-invariant
+    linter with six passes over ``src/repro/core`` and ``src/repro/data``
+    (resource-lifecycle pairing, timeout hygiene, counter-registry
+    consistency, exception-swallow detection, thread discipline, and a
+    nondeterminism guard).  Wired into ``make lint`` / ``make check`` and
+    the CI lint job; findings are merge-blocking.
+
+  * runtime witnesses — :mod:`tools.analysis.lockgraph` records the
+    global lock-acquisition-order graph across the test suite (pytest
+    ``--lockgraph``) and fails on cycles; :mod:`tools.analysis.leakwitness`
+    generalizes the fault-suite's end-state leak assertion
+    (slots/leases/rkeys/threads) into a fixture every storage test module
+    runs under.
+
+Suppressions are inline and must carry a reason::
+
+    except Exception:   # lint: allow(broad-except): <why this is safe>
+
+An allow annotation with an empty reason, or one that suppresses
+nothing, is itself a finding — the allowlist cannot silently rot.
+"""

@@ -1,0 +1,201 @@
+"""Shared machinery for the lint passes: the parsed-module model, the
+inline suppression ("allowlist") format, and AST helpers.
+
+Suppression format (one per line, reason mandatory)::
+
+    <flagged code>   # lint: allow(<rule>): <reason>
+
+or, when the line is too long, on a comment-only line directly above the
+flagged statement::
+
+    # lint: allow(timeout-literal): bounded poll, deadline enforced above
+    self._cv.wait(0.05)
+
+The reason is part of the contract: an empty reason, and an annotation
+that suppressed no finding, are both reported as findings themselves
+(rules ``suppression-empty`` / ``suppression-unused``), so the allowlist
+stays an auditable list of justified exceptions rather than a mute
+button.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\((?P<rule>[a-z][a-z0-9-]*)\)\s*"
+    r"(?::\s*(?P<reason>.*\S)?\s*)?$")
+
+COMMENT_ONLY_RE = re.compile(r"^\s*#")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation, anchored to a file:line."""
+
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+@dataclass
+class Suppression:
+    rule: str
+    reason: str
+    line: int          # line the annotation lives on
+    used: bool = False
+
+
+@dataclass
+class Module:
+    """A parsed source module plus its inline suppressions."""
+
+    path: str
+    source: str
+    tree: ast.AST
+    lines: List[str] = field(default_factory=list)
+    suppressions: List[Suppression] = field(default_factory=list)
+    parents: Dict[ast.AST, ast.AST] = field(default_factory=dict)
+
+    @property
+    def name(self) -> str:
+        return Path(self.path).stem
+
+    # -- suppression matching ----------------------------------------------
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """True iff an allow(rule) annotation covers `line`.
+
+        An annotation covers the line it sits on, and — when it lives on
+        a comment-only line — the next non-comment line below it (so a
+        long statement can carry its annotation just above itself).
+        """
+        for sup in self.suppressions:
+            if sup.rule != rule:
+                continue
+            if sup.line == line:
+                sup.used = True
+                return True
+            if sup.line < line and COMMENT_ONLY_RE.match(
+                    self.lines[sup.line - 1]):
+                # comment-only annotation: walk down over blank/comment
+                # lines; it covers the first code line it lands on
+                cursor = sup.line
+                while cursor < len(self.lines):
+                    nxt = self.lines[cursor]          # 0-based: line cursor+1
+                    if nxt.strip() and not COMMENT_ONLY_RE.match(nxt):
+                        break
+                    cursor += 1
+                if cursor + 1 == line:
+                    sup.used = True
+                    return True
+        return False
+
+    def filter(self, findings: List[Finding]) -> List[Finding]:
+        return [f for f in findings if not self.suppressed(f.rule, f.line)]
+
+
+def parse_module(path: str, source: Optional[str] = None) -> Module:
+    if source is None:
+        source = Path(path).read_text()
+    tree = ast.parse(source, filename=path)
+    lines = source.splitlines()
+    sups = []
+    for i, text in enumerate(lines, start=1):
+        m = ALLOW_RE.search(text)
+        if m:
+            sups.append(Suppression(rule=m.group("rule"),
+                                    reason=(m.group("reason") or "").strip(),
+                                    line=i))
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return Module(path=path, source=source, tree=tree, lines=lines,
+                  suppressions=sups, parents=parents)
+
+
+def suppression_findings(mod: Module) -> List[Finding]:
+    """Meta-findings about the allowlist itself (run after all passes):
+    empty reasons and annotations that suppressed nothing."""
+    out = []
+    for sup in mod.suppressions:
+        if not sup.reason:
+            out.append(Finding(
+                "suppression-empty", mod.path, sup.line,
+                f"allow({sup.rule}) carries no reason — every "
+                f"suppression must explain why it is safe"))
+        elif not sup.used:
+            out.append(Finding(
+                "suppression-unused", mod.path, sup.line,
+                f"allow({sup.rule}) suppresses nothing — remove it "
+                f"(stale allowlist entries hide future violations)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the passes
+
+
+def ancestors(mod: Module, node: ast.AST) -> Iterator[ast.AST]:
+    cur = mod.parents.get(node)
+    while cur is not None:
+        yield cur
+        cur = mod.parents.get(cur)
+
+
+def enclosing_function(mod: Module, node: ast.AST) -> Optional[ast.AST]:
+    for anc in ancestors(mod, node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def call_name(node: ast.Call) -> str:
+    """Dotted best-effort name of a call target: ``time.sleep``,
+    ``self._cv.wait`` -> ``_cv.wait`` (attribute chains keep the last two
+    segments; plain names keep the name)."""
+    return dotted(node.func)
+
+
+def dotted(node: ast.AST) -> str:
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+    elif parts:
+        parts.append("<expr>")
+    return ".".join(reversed(parts))
+
+
+def attr_name(node: ast.AST) -> Optional[str]:
+    """Final attribute segment of a call target (``x.y.acquire`` ->
+    ``acquire``), or the bare name."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def numeric_constants(node: ast.AST) -> List[Tuple[int, float]]:
+    """(line, value) for every non-zero numeric literal in the subtree.
+    Zero is exempt everywhere: ``timeout=0`` means non-blocking, not an
+    unmanaged deadline."""
+    out = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) \
+                and isinstance(sub.value, (int, float)) \
+                and not isinstance(sub.value, bool) and sub.value != 0:
+            out.append((getattr(sub, "lineno", 0), float(sub.value)))
+    return out

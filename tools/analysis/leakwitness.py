@@ -1,0 +1,156 @@
+"""Reusable resource-leak witness for the test suite.
+
+Generalizes the structural end-state invariants test_fault_storage has
+asserted since PR 6 — every donated staging slot drained, every ring's
+free list whole, no client or dst rkey grant outliving its op — into
+helpers any storage test module can apply, plus two new dimensions:
+
+  * sinks: DeviceDirectSink ring registrations/capabilities retired;
+  * threads: every repo service thread (lease renewal, scrubber, DPU
+    cores, router/commit/hedge pools, loader producer) actually exits
+    once its owner is closed — a stuck service thread is a leak even
+    though nothing in a rkey table shows it.
+
+The pytest plugin in ``tests/conftest.py`` turns this into an autouse
+``leak_witness`` fixture: clients and sinks constructed during a test in
+a storage module are tracked (via instrumented ``__init__``), closed at
+teardown if the test didn't, and the invariants asserted — so EVERY
+storage test doubles as a leak test, not just the ones that remembered
+to call ``_assert_no_leaks``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Set
+
+# Every long-lived thread the repo spawns carries one of these names
+# (the `thread` lint pass forbids anonymous threads precisely so this
+# witness can account for them).
+REPO_THREAD_PREFIXES = (
+    "lease-renew", "media-scrub", "loader-producer", "dpu-", "arm",
+    "cluster-router", "replica-commit", "hedge-read", "ros2-loader",
+)
+
+DEFAULT_SETTLE_S = 10.0
+POLL_S = 0.005
+
+
+def wait_until(pred: Callable[[], bool],
+               timeout: float = DEFAULT_SETTLE_S) -> bool:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(POLL_S)
+    return bool(pred())
+
+
+def sessions(client) -> list:
+    io = client.io
+    return list(io.sessions.values()) if hasattr(io, "sessions") else [io]
+
+
+def drain_writebacks(client) -> None:
+    """Land every deferred media writeback still queued on a live device
+    (dead devices hold no pins: their crash already dropped them)."""
+    for t in client.cluster.targets:
+        for d in t.store.devices:
+            if d.alive:
+                d.writeback()
+
+
+def client_leaks(client, timeout: float = DEFAULT_SETTLE_S) -> List[str]:
+    """The PR-6 end-state invariants, returned as a list of violations
+    (empty == clean) so a fixture can aggregate across clients."""
+    problems: List[str] = []
+
+    def drained() -> bool:
+        drain_writebacks(client)
+        return all(not s.ring.donated_slots() for s in sessions(client))
+
+    if not wait_until(drained, timeout):
+        held = {id(s): s.ring.donated_slots() for s in sessions(client)}
+        problems.append(f"donated slot leases leaked: {held}")
+    for s in sessions(client):
+        with s.ring._cv:
+            free = sorted(s.ring._free)
+        if free != list(range(s.ring.n_slots)):
+            problems.append(
+                f"staging ring free list not whole: {free} != "
+                f"0..{s.ring.n_slots - 1} (leaked or duplicated slot)")
+        if s._dst_rkeys:
+            problems.append(
+                f"dst rkey cache entries leaked: {sorted(s._dst_rkeys)}")
+    if client.client_registry._rkeys:
+        problems.append(
+            f"client rkey grants leaked: "
+            f"{sorted(client.client_registry._rkeys)}")
+    return problems
+
+
+def assert_no_client_leaks(client,
+                           timeout: float = DEFAULT_SETTLE_S) -> None:
+    problems = client_leaks(client, timeout)
+    assert not problems, "; ".join(problems)
+
+
+def repo_threads(exclude: Set[int] = frozenset()) -> List[threading.Thread]:
+    return [t for t in threading.enumerate()
+            if t.is_alive() and t.ident not in exclude
+            and t.name.startswith(REPO_THREAD_PREFIXES)]
+
+
+def thread_leaks(baseline: Set[int],
+                 timeout: float = DEFAULT_SETTLE_S) -> List[str]:
+    """Repo-named threads alive beyond the pre-test baseline after every
+    owner was closed. Pool workers are joined by their executors'
+    shutdown(wait=True); service loops by their stop() joins — so
+    anything still running here escaped its owner's lifecycle."""
+    if wait_until(lambda: not repo_threads(exclude=baseline), timeout):
+        return []
+    return [f"service thread leaked past owner close: {t.name!r}"
+            for t in repo_threads(exclude=baseline)]
+
+
+class LeakWitness:
+    """Per-test tracker the conftest fixture drives.
+
+    ``track_client``/``track_sink`` are called from instrumented
+    ``__init__``s; ``finish()`` closes what the test left open (sinks
+    before clients — a sink's capability rides its client's session) and
+    returns every violation found."""
+
+    def __init__(self) -> None:
+        self.clients: list = []
+        self.sinks: list = []
+        self.baseline_threads: Set[int] = {
+            t.ident for t in threading.enumerate() if t.ident is not None}
+
+    def track_client(self, client) -> None:
+        self.clients.append(client)
+
+    def track_sink(self, sink) -> None:
+        self.sinks.append(sink)
+
+    def finish(self, timeout: float = DEFAULT_SETTLE_S) -> List[str]:
+        problems: List[str] = []
+        for sink in self.sinks:
+            try:
+                sink.close()
+            except Exception as e:  # lint: allow(broad-except): a close
+                # failure is itself reported as a leak finding below
+                problems.append(f"sink close failed: {e!r}")
+        # close BEFORE asserting: an open client legitimately holds
+        # persistent registrations (loader rings); the invariants
+        # describe the post-lifecycle end state
+        for client in self.clients:
+            try:
+                client.close()
+            except Exception as e:  # lint: allow(broad-except): same —
+                # surfaced as a finding, not swallowed
+                problems.append(f"client close failed: {e!r}")
+        for client in self.clients:
+            problems.extend(client_leaks(client, timeout))
+        problems.extend(thread_leaks(self.baseline_threads, timeout))
+        return problems

@@ -1,0 +1,136 @@
+"""Repo-invariant linter driver: ``python -m tools.analysis.lint``.
+
+Runs the six AST passes (tools/analysis/passes/) over the concurrent
+core of the stack — ``src/repro/core`` and ``src/repro/data`` — applies
+inline suppressions (which must carry reasons), then audits the
+suppressions themselves.  Exit status 0 = clean; any finding is
+merge-blocking (``make lint``, folded into ``make check`` and the CI
+lint job).
+
+Usage::
+
+    python -m tools.analysis.lint                 # full scoped run
+    python -m tools.analysis.lint --list-passes
+    python -m tools.analysis.lint --pass timeout-literal --pass thread
+    python -m tools.analysis.lint path/to/file.py # explicit files
+
+The programmatic entry points (``lint_paths``, ``lint_source``) are what
+tests/test_static_analysis.py drives with seeded-violation snippets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from tools.analysis import passes as pass_registry
+from tools.analysis.common import (Finding, Module, parse_module,
+                                   suppression_findings)
+
+# lint scope: the deeply concurrent modules whose invariants the passes
+# encode.  Kernel/model/config code is out of scope on purpose — it is
+# single-threaded JAX, with different idioms (e.g. seeded jax PRNG keys).
+SCOPE_DIRS = ("src/repro/core", "src/repro/data")
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parents[2]
+
+
+def scoped_files(root: Path) -> List[Path]:
+    out: List[Path] = []
+    for rel in SCOPE_DIRS:
+        out.extend(sorted((root / rel).glob("*.py")))
+    return out
+
+
+def _selected(names: Optional[Sequence[str]]):
+    if not names:
+        return list(pass_registry.ALL_PASSES)
+    unknown = set(names) - set(pass_registry.PASS_BY_RULE)
+    if unknown:
+        raise SystemExit(f"unknown pass(es): {sorted(unknown)} "
+                         f"(have: {sorted(pass_registry.PASS_BY_RULE)})")
+    return [pass_registry.PASS_BY_RULE[n] for n in names]
+
+
+def lint_module(mod: Module, passes=None,
+                audit_suppressions: bool = True) -> List[Finding]:
+    findings: List[Finding] = []
+    for p in (passes or pass_registry.ALL_PASSES):
+        findings.extend(p.run(mod))
+    findings = mod.filter(findings)
+    if audit_suppressions:
+        findings.extend(suppression_findings(mod))
+    return findings
+
+
+def lint_source(source: str, name: str = "<snippet>.py",
+                passes: Optional[Sequence[str]] = None,
+                audit_suppressions: bool = False) -> List[Finding]:
+    """Lint a source string (the test harness entry point).  Suppression
+    auditing is off by default so a snippet exercising one rule is not
+    noisy about the others."""
+    mod = parse_module(name, source)
+    return lint_module(mod, _selected(passes), audit_suppressions)
+
+
+def lint_paths(paths: Sequence[Path],
+               passes: Optional[Sequence[str]] = None,
+               finalize: bool = True) -> List[Finding]:
+    selected = _selected(passes)
+    mods = [parse_module(str(p)) for p in paths]
+    findings: List[Finding] = []
+    for mod in mods:
+        findings.extend(lint_module(mod, selected))
+    if finalize:
+        for p in selected:
+            fin = getattr(p, "finalize", None)
+            if fin is not None:
+                findings.extend(fin(mods))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis.lint",
+        description="ROS2 repo-invariant linter (see tools/analysis/)")
+    ap.add_argument("files", nargs="*", type=Path,
+                    help="explicit files (default: the scoped modules)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    metavar="RULE", help="run only this pass (repeatable)")
+    ap.add_argument("--list-passes", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="summary line only")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in pass_registry.ALL_PASSES:
+            doc = (p.__doc__ or "").strip().splitlines()[0]
+            print(f"{p.RULE:20s} {doc}")
+        return 0
+
+    root = (args.root or repo_root()).resolve()
+    files = [p for p in args.files] if args.files else scoped_files(root)
+    missing = [str(p) for p in files if not p.exists()]
+    if missing:
+        print(f"lint: no such file(s): {missing}", file=sys.stderr)
+        return 2
+
+    findings = lint_paths(files, args.passes)
+    if not args.quiet:
+        for f in findings:
+            print(f.render())
+    n_files = len(files)
+    n_sup = sum(len(parse_module(str(p)).suppressions) for p in files)
+    status = "FAIL" if findings else "OK"
+    print(f"lint: {status} — {len(findings)} finding(s) across "
+          f"{n_files} file(s), {n_sup} justified suppression(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,314 @@
+"""Runtime lock-order witness (lockdep-style), part 2 of the analysis
+toolkit.
+
+Static passes can't see dynamic lock ordering, so this module records it
+at runtime: ``install()`` patches ``threading.Lock``/``threading.RLock``
+so every lock *allocated from repo code* is wrapped in a witness that
+knows its allocation site (``file:line``).  Each time a thread acquires a
+witnessed lock while already holding others, the witness adds directed
+edges ``held-site -> acquired-site`` to a global graph.  A cycle in that
+graph is a latent deadlock: two code paths that take the same pair of
+locks in opposite orders — even if the interleaving that would actually
+deadlock never fired in this run.
+
+Nodes are allocation *sites*, not lock instances: every
+``_StagingRing._cv`` allocated at client.py:NNN is the same node, so an
+ABBA inversion between two client instances is still a cycle.  Same-site
+self-edges (two instances from one allocation site acquired nested, e.g.
+iterating sessions) are recorded separately as warnings — they are only a
+deadlock if the *instance* order can invert, which site granularity can't
+prove — and never fail the run.
+
+``threading.Condition`` interop: the witness exposes ``_release_save`` /
+``_acquire_restore`` / ``_is_owned``, the private hooks Condition probes
+for, so a Condition built on a witnessed lock keeps the held-set honest
+across ``wait()`` (fully released while waiting, edges re-recorded on
+restore).
+
+Driven by the pytest plugin in ``tests/conftest.py`` under
+``--lockgraph``; ``make check`` runs the suite with it on.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+_THIS_FILE = os.path.abspath(__file__)
+# Condition()/Event() allocate their inner lock from inside threading.py;
+# skip those frames so the site attributes to the repo code that built
+# the Condition, not the stdlib.
+_SKIP_FILES = {_THIS_FILE, threading.__file__,
+               os.path.abspath(threading.__file__)}
+
+
+class LockGraph:
+    """Global acquisition-order graph over lock allocation sites."""
+
+    def __init__(self) -> None:
+        self._mu = _REAL_LOCK()            # guards graph structures only
+        # site -> set of sites acquired while holding it
+        self.edges: Dict[str, Set[str]] = defaultdict(set)
+        # (held_site, acquired_site) -> example "thread: held@.. -> new@.."
+        self.examples: Dict[Tuple[str, str], str] = {}
+        self.self_edges: Set[str] = set()  # same-site nesting (warn only)
+        self.n_acquires = 0
+        # thread id -> list of (witness, reentry_count)
+        self._held: Dict[int, List[List]] = defaultdict(list)
+
+    # -- per-thread held-stack bookkeeping -----------------------------------
+    def on_acquire(self, w: "_WitnessLock") -> None:
+        tid = threading.get_ident()
+        with self._mu:
+            self.n_acquires += 1
+            stack = self._held[tid]
+            for entry in stack:
+                if entry[0] is w:          # RLock re-entry: no new edges
+                    entry[1] += 1
+                    return
+            holder = threading.current_thread().name
+            for entry in stack:
+                held = entry[0]
+                if held.site == w.site:
+                    self.self_edges.add(w.site)
+                    continue
+                self.edges[held.site].add(w.site)
+                self.examples.setdefault(
+                    (held.site, w.site),
+                    f"thread '{holder}': held {held.site} "
+                    f"then acquired {w.site}")
+            stack.append([w, 1])
+
+    def on_release(self, w: "_WitnessLock") -> None:
+        tid = threading.get_ident()
+        with self._mu:
+            stack = self._held.get(tid, [])
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i][0] is w:
+                    stack[i][1] -= 1
+                    if stack[i][1] == 0:
+                        del stack[i]
+                    return
+
+    def drop_all(self, w: "_WitnessLock") -> int:
+        """Condition.wait released the lock entirely; forget its depth
+        and return it so _acquire_restore can put it back."""
+        tid = threading.get_ident()
+        with self._mu:
+            stack = self._held.get(tid, [])
+            for i in range(len(stack) - 1, -1, -1):
+                if stack[i][0] is w:
+                    depth = stack[i][1]
+                    del stack[i]
+                    return depth
+        return 0
+
+    def restore(self, w: "_WitnessLock", depth: int) -> None:
+        """Re-held after Condition.wait: record edges exactly like a
+        fresh acquisition (it IS one: the thread re-entered the lock
+        while holding whatever else it holds)."""
+        self.on_acquire(w)
+        if depth > 1:
+            tid = threading.get_ident()
+            with self._mu:
+                for entry in self._held[tid]:
+                    if entry[0] is w:
+                        entry[1] = depth
+                        break
+
+    # -- analysis ------------------------------------------------------------
+    def cycles(self) -> List[List[str]]:
+        """Every elementary cycle reachable in the site graph (one
+        representative per strongly connected component is enough to
+        fail the run and name the sites involved)."""
+        index: Dict[str, int] = {}
+        low: Dict[str, int] = {}
+        on_stack: Set[str] = set()
+        stack: List[str] = []
+        sccs: List[List[str]] = []
+        counter = [0]
+
+        def strongconnect(v: str) -> None:
+            # iterative Tarjan: (node, edge-iterator) work stack
+            work = [(v, iter(sorted(self.edges.get(v, ()))))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on_stack.add(v)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on_stack.add(w)
+                        work.append((w, iter(sorted(self.edges.get(w,
+                                                                   ())))))
+                        advanced = True
+                        break
+                    if w in on_stack:
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+                if low[node] == index[node]:
+                    comp = []
+                    while True:
+                        u = stack.pop()
+                        on_stack.discard(u)
+                        comp.append(u)
+                        if u == node:
+                            break
+                    if len(comp) > 1:
+                        sccs.append(sorted(comp))
+
+        for v in sorted(self.edges):
+            if v not in index:
+                strongconnect(v)
+        return sccs
+
+    def report(self) -> str:
+        lines = []
+        for comp in self.cycles():
+            lines.append("lock-order cycle between allocation sites:")
+            for site in comp:
+                lines.append(f"  {site}")
+            ring = comp + [comp[0]]
+            for a, b in zip(ring, ring[1:]):
+                ex = self.examples.get((a, b))
+                if ex:
+                    lines.append(f"    {ex}")
+        return "\n".join(lines)
+
+
+class _WitnessLock:
+    """Wraps a real Lock/RLock; reports acquire/release to the graph."""
+
+    __slots__ = ("_inner", "site", "_graph")
+
+    def __init__(self, inner, site: str, graph: LockGraph):
+        self._inner = inner
+        self.site = site
+        self._graph = graph
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._graph.on_acquire(self)
+        return got
+
+    def release(self) -> None:
+        self._graph.on_release(self)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -- threading.Condition private interface -------------------------------
+    def _release_save(self):
+        depth = self._graph.drop_all(self)
+        if hasattr(self._inner, "_release_save"):
+            return (self._inner._release_save(), depth)
+        self._inner.release()
+        return (None, depth)
+
+    def _acquire_restore(self, state) -> None:
+        saved, depth = state
+        if hasattr(self._inner, "_acquire_restore"):
+            self._inner._acquire_restore(saved)
+        else:
+            self._inner.acquire()
+        self._graph.restore(self, depth)
+
+    def _is_owned(self) -> bool:
+        if hasattr(self._inner, "_is_owned"):
+            return self._inner._is_owned()
+        # plain-Lock heuristic, same as Condition's own fallback
+        if self._inner.acquire(False):
+            self._inner.release()
+            return False
+        return True
+
+    def __repr__(self) -> str:
+        return f"<witness {self._inner!r} @ {self.site}>"
+
+
+_active: Optional[LockGraph] = None
+_repo_prefixes: Tuple[str, ...] = ()
+_label_root: str = os.getcwd()
+
+
+def _alloc_site() -> Optional[str]:
+    """Allocation site of the lock being constructed: nearest caller
+    frame inside the witnessed prefixes, or None (don't wrap)."""
+    f = sys._getframe(2)
+    for _ in range(8):
+        if f is None:
+            return None
+        fn = f.f_code.co_filename
+        if fn not in _SKIP_FILES:
+            if fn.startswith(_repo_prefixes):
+                return f"{os.path.relpath(fn, _label_root)}:{f.f_lineno}"
+            return None
+        f = f.f_back
+    return None
+
+
+def _lock_factory():
+    inner = _REAL_LOCK()
+    site = _alloc_site()
+    if _active is None or site is None:
+        return inner
+    return _WitnessLock(inner, site, _active)
+
+
+def _rlock_factory():
+    inner = _REAL_RLOCK()
+    site = _alloc_site()
+    if _active is None or site is None:
+        return inner
+    return _WitnessLock(inner, site, _active)
+
+
+def install(repo_dirs: List[str],
+            label_root: Optional[str] = None) -> LockGraph:
+    """Start witnessing: locks allocated from files under ``repo_dirs``
+    are wrapped; everything else (stdlib, numpy, pytest) passes through
+    untouched. Returns the live graph."""
+    global _active, _repo_prefixes, _label_root
+    if _active is not None:
+        return _active
+    _repo_prefixes = tuple(os.path.abspath(d) + os.sep for d in repo_dirs)
+    _label_root = os.path.abspath(label_root or os.getcwd())
+    _active = LockGraph()
+    threading.Lock = _lock_factory
+    threading.RLock = _rlock_factory
+    return _active
+
+
+def uninstall() -> None:
+    global _active, _repo_prefixes
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    _active = None
+    _repo_prefixes = ()
+
+
+def active() -> Optional[LockGraph]:
+    return _active

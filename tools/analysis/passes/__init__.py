@@ -1,0 +1,19 @@
+"""Lint pass registry.
+
+Each pass module exposes ``RULE`` (the finding/suppression id) and
+``run(mod: Module) -> List[Finding]``.  Adding a pass = adding a module
+here and listing it in ``ALL_PASSES`` (see ROADMAP "Static analysis").
+"""
+from tools.analysis.passes import (counters, exceptions, lifecycle,
+                                   nondeterminism, threads, timeouts)
+
+ALL_PASSES = [
+    lifecycle,        # resource-lifecycle pairing (leases/slots/rkeys)
+    timeouts,         # no raw sleeps / literal deadlines outside Timeouts
+    counters,         # every counter key declared in counters_registry
+    exceptions,       # broad except swallows need a written reason
+    threads,          # no ad-hoc anonymous threads on the data path
+    nondeterminism,   # no unseeded RNG / wall clock in recovery paths
+]
+
+PASS_BY_RULE = {p.RULE: p for p in ALL_PASSES}

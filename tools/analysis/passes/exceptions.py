@@ -1,0 +1,62 @@
+"""Pass: exception-swallow detection.
+
+A ``except Exception:`` on the data path that quietly ``pass``es is a
+fault-hiding device: the fault-injection suite can prove a recovery ran
+only when failures surface somewhere (a typed catch, a counted recovery,
+a re-raise).  This pass flags every broad handler — bare ``except``,
+``except Exception``/``BaseException`` (alone or in a tuple) — unless it
+visibly re-raises.  Handlers that are genuinely broad by design (a
+housekeeping loop that must never die, best-effort cache sweeps) carry
+an ``allow(broad-except)`` annotation whose reason documents why
+swallowing is safe there.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.common import Finding, Module
+
+RULE = "broad-except"
+
+BROAD = {"Exception", "BaseException"}
+
+
+def _names(type_node) -> List[str]:
+    if type_node is None:
+        return ["<bare>"]
+    nodes = type_node.elts if isinstance(type_node, ast.Tuple) \
+        else [type_node]
+    out = []
+    for n in nodes:
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+    return False
+
+
+def run(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        names = _names(node.type)
+        broad = node.type is None or any(n in BROAD for n in names)
+        if not broad or _reraises(node):
+            continue
+        caught = "bare except" if node.type is None \
+            else f"except {'/'.join(names)}"
+        out.append(Finding(
+            RULE, mod.path, node.lineno,
+            f"{caught} swallows faults — catch the concrete error types "
+            f"(StorageError/OSError/...), count a recovery, or allow "
+            f"with a written reason"))
+    return out

@@ -1,0 +1,201 @@
+"""Pass: resource-lifecycle pairing.
+
+The leak classes this guards: a staging-ring slot batch that is never
+released when an op throws mid-stage, a donated SlotLease pinned by a
+replica that never unpins on its error exit, an rkey granted for a
+transient destination and never retired.  Each of those is exactly the
+bug the fault-suite's end-state witness hunts at runtime; this pass
+rejects the shape at review time instead.
+
+Rule: a call to an acquire-like API (``acquire``/``pin``/``grant``)
+must satisfy ONE of:
+
+  * it is the context expression of a ``with`` (RAII discipline);
+  * a ``try`` enclosing it has a ``finally`` (or an ``except`` handler —
+    error-path cleanup) that calls the paired release
+    (``release``/``unpin``/``retire``/``revoke``/``unwind helpers``);
+  * its result (or the receiver) escapes the function — returned,
+    yielded, stored on ``self``/a container, or passed to another call —
+    i.e. ownership is transferred to a longer-lived structure that the
+    runtime witness then holds accountable.
+
+Anything else leaks on the first exception between acquire and release
+and is flagged.  Cross-function pairings that the analysis cannot see
+(e.g. per-slot locks released by a different method by design) carry an
+``allow(lifecycle)`` annotation with the reason spelled out.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.analysis.common import (Finding, Module, ancestors, attr_name,
+                                   enclosing_function)
+
+RULE = "lifecycle"
+
+# acquire method -> names that count as its paired release
+PAIRS = {
+    "acquire": {"release", "_return_slot", "shutdown"},
+    "pin": {"unpin"},
+    "grant": {"retire", "revoke", "drop_dst_rkey"},
+}
+
+
+def _is_with_context(mod: Module, call: ast.Call) -> bool:
+    parent = mod.parents.get(call)
+    return isinstance(parent, ast.withitem)
+
+
+def _handler_releases(body: List[ast.stmt], releases) -> bool:
+    for stmt in body:
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Call):
+                name = attr_name(sub.func)
+                if name in releases:
+                    return True
+    return False
+
+
+def _try_releases(node: ast.Try, releases) -> bool:
+    if node.finalbody and _handler_releases(node.finalbody, releases):
+        return True
+    return any(_handler_releases(h.body, releases) for h in node.handlers)
+
+
+def _paired_in_try(mod: Module, call: ast.Call, releases) -> bool:
+    """A Try ancestor whose finally (or an except handler) releases —
+    or the canonical sibling idiom, where the acquire statement is
+    IMMEDIATELY followed by such a Try::
+
+        slots = ring.acquire(k)
+        try:
+            ...
+        finally:
+            ring.release(slots)
+
+    (Nothing can raise between the assignment and entering the try, so
+    the pairing is airtight; any statement in between reopens the leak
+    window and is flagged.)
+    """
+    stmt = call
+    for anc in ancestors(mod, call):
+        if isinstance(anc, ast.Try):
+            if _try_releases(anc, releases):
+                return True
+        # sibling check BEFORE the stmt update: when `anc` is the body
+        # holder (function, with, if), `stmt` must still be the acquire
+        # statement, not `anc` itself
+        body = getattr(anc, "body", None)
+        if isinstance(body, list) and stmt in body:
+            idx = body.index(stmt)
+            if idx + 1 < len(body) and isinstance(body[idx + 1], ast.Try) \
+                    and _try_releases(body[idx + 1], releases):
+                return True
+        if isinstance(anc, ast.stmt) and not isinstance(anc, ast.Try):
+            stmt = anc
+    return False
+
+
+def _assigned_names(mod: Module, call: ast.Call) -> List[str]:
+    parent = mod.parents.get(call)
+    names: List[str] = []
+    if isinstance(parent, ast.Assign):
+        for tgt in parent.targets:
+            if isinstance(tgt, ast.Name):
+                names.append(tgt.id)
+            elif isinstance(tgt, ast.Tuple):
+                names.extend(e.id for e in tgt.elts
+                             if isinstance(e, ast.Name))
+    elif isinstance(parent, (ast.AnnAssign, ast.AugAssign)) \
+            and isinstance(parent.target, ast.Name):
+        names.append(parent.target.id)
+    return names
+
+
+def _escapes(mod: Module, call: ast.Call, fn: ast.AST, releases) -> bool:
+    """Ownership transfer: the acquired value outlives the function by
+    design, so pairing is someone else's (witnessed) responsibility."""
+    parent = mod.parents.get(call)
+    # returned / yielded directly, or stored onto an attribute/container
+    if isinstance(parent, (ast.Return, ast.Yield, ast.YieldFrom)):
+        return True
+    if isinstance(parent, ast.Assign):
+        for tgt in parent.targets:
+            if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                return True
+    if isinstance(parent, ast.Call) and parent is not call:
+        return True                      # fed straight into another call
+    names = _assigned_names(mod, call)
+    if not names:
+        # result-less acquires (`lease.pin()`): the RECEIVER is the
+        # tracked resource — a receiver that is stored state
+        # (self.x.pin()) or escapes by name transfers ownership to the
+        # longer-lived structure the runtime witness holds accountable
+        recv = call.func.value if isinstance(call.func, ast.Attribute) \
+            else None
+        if isinstance(recv, (ast.Attribute, ast.Subscript)):
+            return True
+        if isinstance(recv, ast.Name):
+            names = [recv.id]
+        else:
+            return False
+    wanted = set(names)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Return, ast.Yield)) \
+                and node.value is not None:
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name) and sub.id in wanted:
+                    return True
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                    for sub in ast.walk(node.value):
+                        if isinstance(sub, ast.Name) and sub.id in wanted:
+                            return True
+        if isinstance(node, ast.Call):
+            callee = attr_name(node.func)
+            if callee in releases:
+                continue                 # the pairing itself, not an escape
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and sub.id in wanted:
+                        return True
+    return False
+
+
+def _receiver_root(call: ast.Call) -> Optional[str]:
+    cur = call.func
+    while isinstance(cur, ast.Attribute):
+        cur = cur.value
+    return cur.id if isinstance(cur, ast.Name) else None
+
+
+def run(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = attr_name(node.func)
+        if name not in PAIRS or not isinstance(node.func, ast.Attribute):
+            continue
+        releases = PAIRS[name]
+        fn = enclosing_function(mod, node)
+        if fn is None:
+            continue                     # module-level: out of scope
+        if getattr(fn, "name", "") in {name} | releases:
+            continue                     # the resource API's own impl
+        if _is_with_context(mod, node):
+            continue
+        if _paired_in_try(mod, node, releases):
+            continue
+        if _escapes(mod, node, fn, releases):
+            continue
+        recv = _receiver_root(node) or "<expr>"
+        out.append(Finding(
+            RULE, mod.path, node.lineno,
+            f"'{recv}.{name}(...)' result may leak on exception paths — "
+            f"no with/try-finally pairing with "
+            f"{'/'.join(sorted(releases))}, and the value does not "
+            f"escape the function"))
+    return out

@@ -1,0 +1,67 @@
+"""Pass: nondeterminism guard.
+
+Fault schedules, retry backoff and placement are all replayable BY
+CONSTRUCTION in this stack: the injector owns one seeded RNG, backoff
+jitter is a seeded stateless hash stream, placement is FNV-1a + jump
+consistent hashing.  One unseeded ``random.random()`` or wall-clock
+``time.time()`` in those paths and a failing soak stops reproducing.
+This pass flags, in every scoped module:
+
+  * module-level ``random.<fn>()`` draws (the shared unseeded RNG) and
+    ``random.Random()`` constructed without a seed;
+  * ``np.random.default_rng()`` without a seed and any legacy
+    ``np.random.<fn>`` global draw;
+  * wall-clock reads: ``time.time()``, ``datetime.now()``/``utcnow()``.
+    (``time.monotonic()`` is fine — elapsed time, not wall time.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.common import Finding, Module, call_name
+
+RULE = "nondeterminism"
+
+RANDOM_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "betavariate", "expovariate",
+    "getrandbits", "randbytes",
+}
+
+WALL_CLOCK = {"time.time", "datetime.now", "datetime.utcnow",
+              "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+
+def run(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+
+        def flag(msg: str) -> None:
+            out.append(Finding(RULE, mod.path, node.lineno, msg))
+
+        if name in WALL_CLOCK:
+            flag(f"wall-clock read {name}() — use time.monotonic() for "
+                 f"elapsed time, or inject a clock (metadata_cache "
+                 f"pattern) so tests control it")
+        elif name.startswith("random.") and name[7:] in RANDOM_FNS:
+            flag(f"{name}() draws from the shared UNSEEDED global RNG — "
+                 f"use a seeded random.Random(seed) owned by the "
+                 f"subsystem (FaultInjector pattern)")
+        elif name in ("random.Random", "Random") and not node.args \
+                and not node.keywords:
+            flag("random.Random() without a seed — fault/backoff/"
+                 "placement decisions must replay; pass an explicit seed")
+        elif name.endswith("random.default_rng") and not node.args \
+                and not node.keywords:
+            flag("np.random.default_rng() without a seed — reads will "
+                 "not replay; derive the seed from the op identity")
+        elif (name.startswith("np.random.")
+              or name.startswith("numpy.random.")) \
+                and not name.endswith("default_rng"):
+            flag(f"legacy global numpy RNG {name}() — use a seeded "
+                 f"np.random.default_rng(seed)")
+    return out

@@ -1,0 +1,42 @@
+"""Pass: thread discipline.
+
+Concurrency on the data path goes through NAMED, owned execution
+resources: long-lived service threads with a ``name=`` (so the leak
+witness and a stack dump can attribute them) and pools with a
+``thread_name_prefix`` (``replica-commit``, ``hedge-read``,
+``cluster-router``, ``ros2-loader``).  An anonymous ``threading.Thread``
+fired from op code is untrackable and unjoinable by the witnesses; this
+pass rejects it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.common import Finding, Module, call_name
+
+RULE = "thread"
+
+
+def run(mod: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        kwargs = {kw.arg for kw in node.keywords}
+        if name in ("threading.Thread", "Thread"):
+            if "name" not in kwargs:
+                out.append(Finding(
+                    RULE, mod.path, node.lineno,
+                    "ad-hoc anonymous threading.Thread — data-path work "
+                    "runs on named service threads (name=...) or the "
+                    "owned pools, so the leak witness can attribute and "
+                    "join it"))
+        elif name.endswith("ThreadPoolExecutor"):
+            if "thread_name_prefix" not in kwargs:
+                out.append(Finding(
+                    RULE, mod.path, node.lineno,
+                    "ThreadPoolExecutor without thread_name_prefix — "
+                    "pools must be nameable for the thread-leak witness"))
+    return out

@@ -1,0 +1,83 @@
+"""Pass: timeout hygiene.
+
+PR 6 unified every data-path deadline behind the injectable ``Timeouts``
+policy precisely so tests stop monkeypatching five scattered
+``timeout=120.0`` defaults.  This pass keeps it that way: a raw
+``time.sleep(<literal>)``, a ``timeout=<literal>`` keyword, a literal
+``.wait(0.05)`` poll or a numeric ``timeout`` parameter default anywhere
+outside ``faults.py`` (the policy's home) is a finding.  Route the value
+through a ``Timeouts`` field instead — or, for the rare constant that is
+genuinely not a deadline, annotate with the reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analysis.common import (Finding, Module, call_name,
+                                   numeric_constants)
+
+RULE = "timeout-literal"
+
+# the policy module itself is where the literals are allowed to live
+EXEMPT_MODULES = {"faults"}
+
+SLEEP_NAMES = {"time.sleep", "sleep", "time_sleep", "_time.sleep"}
+
+
+def _policy_routed(node: ast.AST) -> bool:
+    """True when the expression visibly derives from the Timeouts policy
+    (``self.timeouts.backoff(attempt + 2, ...)`` carries literals, but
+    they parameterize a policy call, not a raw wait)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and "timeout" in sub.attr.lower():
+            return True
+        if isinstance(sub, ast.Name) and "timeout" in sub.id.lower():
+            return True
+    return False
+
+
+def run(mod: Module) -> List[Finding]:
+    if mod.name in EXEMPT_MODULES:
+        return []
+    out: List[Finding] = []
+
+    def flag(line: int, what: str) -> None:
+        out.append(Finding(
+            RULE, mod.path, line,
+            f"{what} — route it through the injectable Timeouts policy "
+            f"(core/faults.py) so tests and soaks control every "
+            f"data-path wait"))
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in SLEEP_NAMES or name.endswith(".sleep"):
+                lits = [v for v in
+                        (numeric_constants(a) for a in node.args) if v]
+                if lits and not _policy_routed(node):
+                    flag(node.lineno, "raw sleep with a literal duration")
+                continue
+            # literal timeout= keyword on any call (queue get/put, join,
+            # future wait, cv wait, rpc, ...)
+            for kw in node.keywords:
+                if kw.arg == "timeout" and numeric_constants(kw.value):
+                    flag(node.lineno, "literal timeout= argument")
+            # literal positional poll on a condition/event wait
+            if name.endswith(".wait") and node.args \
+                    and numeric_constants(node.args[0]):
+                flag(node.lineno, "literal wait() poll interval")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            params = args.posonlyargs + args.args + args.kwonlyargs
+            defaults = ([None] * (len(args.posonlyargs + args.args)
+                                  - len(args.defaults))
+                        + list(args.defaults) + list(args.kw_defaults))
+            for param, default in zip(params, defaults):
+                if default is None or "timeout" not in param.arg:
+                    continue
+                if numeric_constants(default):
+                    flag(default.lineno,
+                         f"numeric default for parameter "
+                         f"'{param.arg}' in {node.name}()")
+    return out
