@@ -626,6 +626,171 @@ def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
     return out
 
 
+def _bench_async(io_depth: int = 16, n_ops: int = RAND_OPS,
+                 service_s: float = 0.002) -> dict:
+    """Async submit/reap section (PR 9, gated under --smoke too).
+
+    4 KiB random reads against a modeled remote-NVMe media service time
+    (`read_delay_s`, the same per-device knob the hedged-read tests
+    drive): the blocking API pays the service time once per op, serially;
+    the submit/reap path keeps `io_depth` completion handles in flight
+    over the shared CQ, so service times overlap exactly as the fio
+    io_uring model predicts (`fio.iouring_per_op` amortizes the doorbell
+    over the SAME knob). Hard gates:
+
+      * submit+wait is bit-identical to the blocking API (same bytes,
+        checked before any delay is modeled AND under the async window);
+      * async IOPS at io_depth 16 >= 4x the synchronous path (host/rdma);
+      * a faulted async run (wire partials + media errors under a seeded
+        injector) stays bit-exact and leaks nothing: no staging slot, no
+        donated lease, no rkey grant, no in-flight completion handle.
+
+    The tcp_registered comparison rides along as MEASUREMENT ONLY (no
+    gate): the io_uring-style registered-buffer read leg skips the
+    kernel staging bounce, so its wire copies/byte drop below the
+    classic two-copy stream while `registered_read_bytes` proves the leg
+    actually ran."""
+    from repro.core.faults import Fault, FaultInjector
+    from repro.core.fio import iouring_per_op
+
+    gates = []
+    out: dict = {"io_depth": io_depth, "n_ops": n_ops,
+                 "io_bytes": RAND_IO, "service_s": service_s,
+                 "modeled_submit_per_op_s": iouring_per_op(io_depth)}
+
+    c = ROS2Client(mode="host", transport="rdma", scrub_interval_s=None,
+                   io_depth=io_depth)
+    fd = c.open("/async", create=True)
+    rng = np.random.default_rng(7)
+    data = rng.integers(0, 256, RAND_FILE, dtype=np.uint8).tobytes()
+    c.pwrite(fd, data, 0)
+    offs = [int(o) * RAND_IO
+            for o in rng.integers(0, RAND_FILE // RAND_IO, n_ops)]
+
+    for off in offs[:8]:
+        if c.submit_pread(fd, RAND_IO, off).wait() != c.pread(fd, RAND_IO,
+                                                              off):
+            gates.append("submit+wait diverged from blocking pread")
+            break
+
+    for tgt in c.cluster.targets:        # model remote-NVMe service time
+        for d in tgt.store.devices:
+            d.read_delay_s = service_s
+    t0 = time.perf_counter()
+    sync_got = [c.pread(fd, RAND_IO, off) for off in offs]
+    sync_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    window: list = []
+    async_got: list = [None] * n_ops
+    for i, off in enumerate(offs):
+        window.append((i, c.submit_pread(fd, RAND_IO, off)))
+        if len(window) >= io_depth:
+            j, h = window.pop(0)
+            async_got[j] = h.wait()
+    for j, h in window:
+        async_got[j] = h.wait()
+    async_s = time.perf_counter() - t0
+    for tgt in c.cluster.targets:
+        for d in tgt.store.devices:
+            d.read_delay_s = 0.0
+    if async_got != sync_got:
+        gates.append("async submit/reap returned different bytes than "
+                     "the blocking path")
+    out["sync_iops"] = n_ops / sync_s
+    out["async_iops"] = n_ops / async_s
+    out["async_speedup"] = round(sync_s / async_s, 2)
+    # service-time-bound ceiling at this depth, for calibration context
+    out["modeled_ceiling"] = round(
+        (service_s + iouring_per_op(1))
+        / max(service_s / io_depth, iouring_per_op(io_depth)), 2)
+    if out["async_speedup"] < 4.0:
+        gates.append(f"async rand-read speedup {out['async_speedup']}x "
+                     f"< 4x at io_depth {io_depth}")
+    out["cq"] = dict(c.io.data_path_counters()["cq"])
+    if out["cq"]["inflight_peak"] < 2:
+        gates.append("async window never overlapped (cq inflight_peak < 2)")
+    c.close()
+
+    # -- faulted async leg: bit-exact under injection, zero leaks --------
+    inj = FaultInjector([
+        ("transport.place_sg", Fault("partial"), lambda m: m % 11 == 4),
+        ("media.read", Fault("error",
+                             exc=lambda: IOError("injected media read")),
+         lambda m: m % 29 == 5),
+    ], seed=43)
+    cf = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                    n_devices=4, replication=3, write_quorum=2,
+                    scrub_interval_s=None, io_depth=io_depth,
+                    fault_injector=inj)
+    fdf = cf.open("/async-faulted", create=True)
+    cf.pwrite(fdf, data, 0)
+    exact = True
+    fwindow: list = []
+    for i in range(2 * n_ops):
+        off = offs[i % n_ops]
+        fwindow.append((off, cf.submit_pread(fdf, RAND_IO, off)))
+        if len(fwindow) >= io_depth:
+            o, h = fwindow.pop(0)
+            exact &= h.wait() == data[o:o + RAND_IO]
+    for o, h in fwindow:
+        exact &= h.wait() == data[o:o + RAND_IO]
+    if not exact:
+        gates.append("faulted async run not bit-exact")
+    fc = inj.counters()
+    if fc["total_injected"] == 0:
+        gates.append("async fault schedule never fired")
+    sessions = list(cf.io.sessions.values())
+    deadline = time.perf_counter() + 5.0
+    while (any(s.ring.donated_slots() for s in sessions)
+           and time.perf_counter() < deadline):
+        for tgt in cf.cluster.targets:       # land pending writebacks
+            for d in tgt.store.devices:
+                if d.alive:
+                    d.writeback()
+        time.sleep(0.01)
+    if any(s.ring.donated_slots() for s in sessions):
+        gates.append("faulted async run leaked donated staging leases")
+    for s in sessions:
+        with s.ring._cv:
+            if sorted(s.ring._free) != list(range(s.ring.n_slots)):
+                gates.append("faulted async run leaked staging slots")
+                break
+    if any(s._dst_rkeys for s in sessions) or cf.client_registry._rkeys:
+        gates.append("faulted async run leaked rkey grants")
+    if any(q.inflight() for q in [s.cq for s in sessions] + [cf.io.cq]):
+        gates.append("faulted async run left completion handles in flight")
+    out["faulted"] = {"injected": fc["total_injected"],
+                      "recovered": fc["recovered"],
+                      "cq": dict(cf.io.data_path_counters()["cq"])}
+    cf.close()
+
+    # -- tcp registered-buffer comparison column (measurement only) ------
+    def tcp_leg(registered: bool) -> dict:
+        ct = ROS2Client(mode="host", transport="tcp",
+                        scrub_interval_s=None, io_depth=io_depth,
+                        tcp_registered=registered)
+        fdt = ct.open("/tcp-col", create=True)
+        ct.pwrite(fdt, data, 0)
+        before = _flat(ct.io.data_path_counters())
+        t0 = time.perf_counter()
+        got = b"".join(ct.pread(fdt, RAND_IO, off) for off in offs)
+        wall = time.perf_counter() - t0
+        d = _delta(before, _flat(ct.io.data_path_counters()))
+        ct.close()
+        assert got == b"".join(data[o:o + RAND_IO] for o in offs)
+        return {"path": "tcp_registered" if registered else "tcp_stream",
+                "rand_read_iops": round(n_ops / wall),
+                "read_copies_per_byte":
+                    d["transport.copy_bytes"]
+                    / max(1, d["transport.bytes_moved"]),
+                "registered_read_bytes":
+                    d.get("transport.registered_read_bytes", 0)}
+
+    out["tcp_column"] = [tcp_leg(False), tcp_leg(True)]
+    out["gates"] = gates
+    return out
+
+
 def _print_run(r: dict) -> None:
     print(f"{r['mode']:4s}/{r['transport']:4s} {r['path']:13s} "
           f"seq_w {r['seq_write_steady_s']*1e3:7.1f} ms  "
@@ -775,6 +940,21 @@ def main(argv=None) -> int:
         print(f"device-direct {m}/rdma: {dd['single_tensors_per_s']:.0f} "
               f"tensors/s single vs {dd['batched_tensors_per_s']:.0f} "
               f"batched ({dd['batched_speedup']:.2f}x)")
+    async_bench = _bench_async()
+    tcp_col = {leg["path"]: leg for leg in async_bench["tcp_column"]}
+    print(f"async submit/reap: {async_bench['sync_iops']:.0f} -> "
+          f"{async_bench['async_iops']:.0f} iops at io_depth "
+          f"{async_bench['io_depth']} ({async_bench['async_speedup']:.1f}x "
+          f"vs modeled ceiling {async_bench['modeled_ceiling']:.1f}x); "
+          f"faulted leg {async_bench['faulted']['injected']} injections, "
+          f"cq {async_bench['faulted']['cq']['completed']}/"
+          f"{async_bench['faulted']['cq']['submitted']} reaped")
+    print(f"tcp read leg: stream "
+          f"{tcp_col['tcp_stream']['read_copies_per_byte']:.2f} copies/B "
+          f"-> registered "
+          f"{tcp_col['tcp_registered']['read_copies_per_byte']:.2f} "
+          f"copies/B ({tcp_col['tcp_registered']['registered_read_bytes']}"
+          f" bytes via registered buffers)")
 
     by = {(r["mode"], r["transport"], r["path"]): r for r in runs}
     speedups = {}
@@ -838,6 +1018,7 @@ def main(argv=None) -> int:
     fails += cluster.pop("gates")        # routing/striping/scaling gates
     fails += faulted.pop("gates")        # PR-6 fault-injection gates
     fails += ec_bench.pop("gates")       # PR-7 erasure-coding gates
+    fails += async_bench.pop("gates")    # PR-9 submit/reap gates
 
     for f in fails:
         print(f"FAIL: {f}")
@@ -847,6 +1028,7 @@ def main(argv=None) -> int:
                "block_bytes": BLOCK, "runs": runs, "speedups": speedups,
                "quorum": quorum, "device_direct": device_direct,
                "cluster": cluster, "faulted": faulted, "ec": ec_bench,
+               "async": async_bench,
                # fleet totals across every run (the shared merge_counters)
                "counter_totals": merge_counters(
                    [r["seq_counters"] for r in runs]),

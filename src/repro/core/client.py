@@ -70,7 +70,8 @@ from __future__ import annotations
 import threading
 import time
 from collections import OrderedDict
-from concurrent.futures import ThreadPoolExecutor, as_completed
+from concurrent.futures import (CancelledError, ThreadPoolExecutor,
+                                as_completed)
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -297,7 +298,297 @@ class _StagingRing:
         return self.region.buf[off:off + self.slot_bytes]
 
 
-class _ServerIO:
+def _chain(fn: Callable[[], Any],
+           then: Optional[Callable[[Any], Any]]) -> Callable[[], Any]:
+    """Compose a post-processing step INTO the submitted op so it runs on
+    the executing thread (inside the op's own resource scope), never at
+    reap time under the CQ lock — a `_then` that does control RPCs (the
+    DFS size delegation) must not nest inside the CQ condition variable."""
+    if then is None:
+        return fn
+
+    def run() -> Any:
+        return then(fn())
+    return run
+
+
+class CompletionHandle:
+    """A lightweight completion token for one submitted op — the WR the
+    caller keeps after posting to the SQ. States move strictly
+    pending -> running -> done|error, or pending -> cancelled, all under
+    the owning completion queue's condition variable. The op function owns
+    every resource it touches via its own try/finally (slots, leases,
+    rkeys, SQ ring slot), so a handle abandoned after `wait()` times out
+    cannot leak: the op drains in the background and releases on its own
+    exit path, exactly once."""
+
+    def __init__(self, cq: "_CompletionQueue", op: str,
+                 fn: Callable[[], Any],
+                 deadline_s: Optional[float] = None):
+        self._cq = cq
+        self.op = op
+        self._fn = fn
+        self._state = "pending"
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+        self._reaped = False
+        self._t0 = time.monotonic()
+        self._deadline_s = deadline_s
+        cq._register(self)
+
+    def _run(self) -> None:
+        cq = self._cq
+        with cq._cv:
+            if self._state != "pending":
+                return                # cancelled before a worker picked it up
+            self._state = "running"
+        try:
+            res = self._fn()
+        except Exception as e:  # lint: allow(broad-except): not a swallow —
+            # the failure is STORED on the handle and re-raised verbatim at
+            # wait(); resource release already ran in the op's own
+            # try/finally on this thread
+            cq._settle(self, error=e)
+            return
+        cq._settle(self, result=res)
+
+    def cancel(self) -> bool:
+        """Cancel iff still pending (never dispatched). A running op is
+        already holding resources mid-verb and must drain; reap it or
+        abandon it — either way its own try/finally releases."""
+        cq = self._cq
+        with cq._cv:
+            if self._state != "pending":
+                return False
+            self._state = "cancelled"
+        cq._settle(self, cancelled=True)
+        return True
+
+    def done(self) -> bool:
+        with self._cq._cv:
+            return self._state not in ("pending", "running")
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        """Reap this op: block until it settles, then return its result or
+        re-raise its error. The deadline is measured from SUBMIT time
+        under the injectable Timeouts policy (explicit `timeout` wins,
+        then the per-handle deadline, then `timeouts.op_deadline_s`).
+        Deadline expiry on a still-pending handle cancels it in place;
+        on a running handle it abandons it (OpTimeout) with the completion
+        draining in the background."""
+        cq = self._cq
+        budget = timeout if timeout is not None else self._deadline_s
+        if budget is None:
+            budget = cq.timeouts.op_deadline_s
+        deadline = self._t0 + budget
+        with cq._cv:
+            while self._state in ("pending", "running"):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                cq._cv.wait(remaining)
+            state = self._state
+        if state == "pending":
+            if self.cancel():
+                raise OpTimeout(self.op,
+                                elapsed_s=time.monotonic() - self._t0,
+                                detail="deadline before dispatch; "
+                                       "handle cancelled in place")
+            return self.wait(timeout)   # lost the race with _run: settled
+        if state == "running":
+            raise OpTimeout(self.op, elapsed_s=time.monotonic() - self._t0,
+                            detail="op still in flight; completion drains "
+                                   "in background")
+        return self._reap()
+
+    # concurrent.futures-flavoured alias so handles drop into code written
+    # against Future-shaped objects
+    def result(self, timeout: Optional[float] = None) -> Any:
+        return self.wait(timeout)
+
+    def _reap(self) -> Any:
+        cq = self._cq
+        with cq._cv:
+            first = not self._reaped
+            self._reaped = True
+            state, err, res = self._state, self._error, self._result
+        if first:
+            cq._note_reap()
+        if state == "cancelled":
+            raise CancelledError(self.op)
+        if err is not None:
+            raise err
+        return res
+
+
+class _CompletionQueue:
+    """THE shared per-client completion queue all submitted ops drain
+    into. Caller-reaped — like polling a hardware CQ, the reap logic runs
+    on whichever thread calls wait()/drain(); there is no dedicated reaper
+    thread to leak or deadlock. One condition variable orders every handle
+    state transition and carries the counters the registry declares under
+    `cq.*`."""
+
+    def __init__(self, timeouts: Timeouts = DEFAULT_TIMEOUTS):
+        self.timeouts = timeouts
+        self._cv = threading.Condition()
+        self._inflight: set = set()
+        self.submitted = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.inflight_peak = 0
+        self.reap_batches = 0
+
+    def _register(self, h: CompletionHandle) -> None:
+        with self._cv:
+            self.submitted += 1
+            self._inflight.add(h)
+            if len(self._inflight) > self.inflight_peak:
+                self.inflight_peak = len(self._inflight)
+
+    def _settle(self, h: CompletionHandle, result: Any = None,
+                error: Optional[BaseException] = None,
+                cancelled: bool = False) -> None:
+        with self._cv:
+            if cancelled:
+                self.cancelled += 1
+            else:
+                h._result = result
+                h._error = error
+                h._state = "error" if error is not None else "done"
+                self.completed += 1
+            self._inflight.discard(h)
+            self._cv.notify_all()
+
+    def _note_reap(self) -> None:
+        with self._cv:
+            self.reap_batches += 1
+
+    def inflight(self) -> int:
+        with self._cv:
+            return len(self._inflight)
+
+    def counters(self) -> Dict[str, int]:
+        with self._cv:
+            return {"submitted": self.submitted,
+                    "completed": self.completed,
+                    "inflight_peak": self.inflight_peak,
+                    "reap_batches": self.reap_batches,
+                    "cancelled": self.cancelled}
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every in-flight handle settles (close path)."""
+        if timeout is None:
+            timeout = self.timeouts.drain_s
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._inflight:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise OpTimeout("cq.drain", elapsed_s=timeout,
+                                    detail=f"{len(self._inflight)} handles "
+                                           "still in flight at drain "
+                                           "deadline")
+                self._cv.wait(remaining)
+
+
+class _SubmissionRing:
+    """Per-target SQ depth bound: at most `depth` ops of one target
+    execute at once — the verbs/io_uring submission-queue semantics. The
+    slot is taken by the EXECUTING thread (inside the op wrapper), not at
+    submit, so submitters never block, pending handles stay cancellable,
+    and `io_depth` bounds running ops per target."""
+
+    def __init__(self, depth: int, timeouts: Timeouts = DEFAULT_TIMEOUTS):
+        self.depth = max(1, int(depth))
+        self.timeouts = timeouts
+        self._cv = threading.Condition()
+        self._inflight = 0
+        self.peak = 0
+
+    def acquire(self, timeout: Optional[float] = None) -> None:
+        if timeout is None:
+            timeout = self.timeouts.op_deadline_s
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._inflight >= self.depth:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise OpTimeout("sq.acquire", elapsed_s=timeout,
+                                    detail=f"submission ring full at depth "
+                                           f"{self.depth}")
+                self._cv.wait(remaining)
+            self._inflight += 1
+            if self._inflight > self.peak:
+                self.peak = self._inflight
+
+    def release(self) -> None:
+        with self._cv:
+            self._inflight -= 1
+            self._cv.notify()
+
+
+class _SubmitReap:
+    """Submit/reap plumbing shared by _ServerIO and _ClusterRouter: a lazy
+    dispatch pool feeds ops into the shared _CompletionQueue; subclasses
+    override `_sq_ring()` to bound in-flight depth (the router bounds
+    per-target inside `_run_batch` instead). `_inline=True` runs the op on
+    the calling thread — the synchronous API is exactly submit + wait with
+    inline execution, so results are bit-identical to the old blocking
+    path while still flowing through full CQ accounting."""
+
+    def _init_submit(self, io_depth: int,
+                     timeouts: Timeouts = DEFAULT_TIMEOUTS) -> None:
+        self.io_depth = max(1, int(io_depth))
+        self.cq = _CompletionQueue(timeouts)
+        self._submit_pool: Optional[ThreadPoolExecutor] = None
+        self._submit_pool_lock = threading.Lock()
+
+    def _sq_ring(self) -> Optional[_SubmissionRing]:
+        return None
+
+    def _get_submit_pool(self) -> ThreadPoolExecutor:
+        with self._submit_pool_lock:
+            if self._submit_pool is None:
+                self._submit_pool = ThreadPoolExecutor(
+                    max_workers=max(2, self.io_depth),
+                    thread_name_prefix="cq-submit")
+            return self._submit_pool
+
+    def _submit(self, op: str, fn: Callable[[], Any],
+                timeout: Optional[float] = None,
+                inline: bool = False) -> CompletionHandle:
+        ring = self._sq_ring()
+        if ring is None:
+            run = fn
+        else:
+            def run() -> Any:
+                ring.acquire()
+                try:
+                    return fn()
+                finally:
+                    ring.release()
+        h = CompletionHandle(self.cq, op, run, deadline_s=timeout)
+        if inline:
+            h._run()
+        else:
+            # the handle IS the completion token; the executor Future is
+            # redundant with it
+            self._get_submit_pool().submit(h._run)
+        return h
+
+    def _close_submit(self) -> None:
+        """Drain the CQ then retire the dispatch pool — every in-flight
+        handle settles (releasing its slots/leases/rkeys on its own exit
+        path) before teardown proceeds."""
+        self.cq.drain()
+        with self._submit_pool_lock:
+            pool, self._submit_pool = self._submit_pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+
+class _ServerIO(_SubmitReap):
     """ONE engine target's data-plane session (and, for a single-target
     deployment, the whole transport-aware I/O adapter DFSClient uses).
     Each session owns its target's staging ring, transport endpoint and
@@ -332,7 +623,8 @@ class _ServerIO:
                  target_up: Optional[Callable[[], bool]] = None,
                  faults: Optional[FaultInjector] = None,
                  timeouts: Timeouts = DEFAULT_TIMEOUTS,
-                 label: Optional[str] = None):
+                 label: Optional[str] = None,
+                 io_depth: int = 16, tcp_registered: bool = False):
         self.container = engine_container
         self._target_up = target_up
         self._faults = faults
@@ -368,12 +660,17 @@ class _ServerIO:
         self.staging = self.ring.region
         if self.zero_copy:
             self.ring.set_reclaim(self._reclaim_donations)
+        self.tcp_registered = tcp_registered and transport != "rdma"
         if transport == "rdma":
             self.xport = RDMATransport(local=self.creg, remote=self.sreg)
         else:
             self.xport = TCPTransport(local=self.creg, remote=self.sreg,
-                                      sendmsg_batching=self.zero_copy)
+                                      sendmsg_batching=self.zero_copy,
+                                      registered=self.tcp_registered)
         self.xport.faults = faults
+        # submit/reap state: shared CQ + this target's submission ring
+        self._init_submit(io_depth, timeouts)
+        self.sq = _SubmissionRing(self.io_depth, timeouts)
         # capability exchange happens in the owner's bring-up compound
         # (ROS2Client) — attach_session hands us the session + staging rkey
         self._sid: Optional[int] = None
@@ -515,6 +812,8 @@ class _ServerIO:
                         "reclaims": self.ring.reclaims,
                         "acquires": self.ring.acquires,
                         "bounce_bytes": self.bounce_bytes},
+            # submit/reap accounting for the shared completion queue
+            "cq": self.cq.counters(),
             # the control path is a measured subsystem, not an uncounted
             # tax: round-trips, payload bytes, compound batching and lease
             # traffic all show up next to the per-byte data-plane costs
@@ -542,6 +841,12 @@ class _ServerIO:
             self.writev(oid, offset, [data])
 
     def writev(self, oid: int, offset: int, buffers: Sequence) -> int:
+        """Blocking vectored write — submit + wait with inline execution
+        (bit-identical to the pre-async path; see `_writev_impl` for the
+        data-plane mechanics)."""
+        return self.submit_writev(oid, offset, buffers, _inline=True).wait()
+
+    def _writev_impl(self, oid: int, offset: int, buffers: Sequence) -> int:
         """Scatter-gather write: every iovec buffer is registered once
         (zero-copy wrap, no concatenation), moved in ring-sized SG batches
         (one transport op each, descriptors pointing into the caller's own
@@ -661,6 +966,13 @@ class _ServerIO:
         return self.zero_copy
 
     def readv_into(self, oid: int, offset: int, bufs: Sequence) -> int:
+        """Blocking vectored gather-read — submit + wait with inline
+        execution (bit-identical; see `_readv_into_impl`)."""
+        return self.submit_readv_into(oid, offset, bufs,
+                                      _inline=True).wait()
+
+    def _readv_into_impl(self, oid: int, offset: int,
+                         bufs: Sequence) -> int:
         """Vectored gather-read filling N caller buffers (np.uint8 arrays)
         directly from the contiguous file range [offset, offset+total) —
         the `preadv` fast path. Each buffer is registered once (zero-copy
@@ -677,6 +989,13 @@ class _ServerIO:
 
     def read_into(self, oid: int, offset: int, size: int,
                   dst_mr: MemoryRegion, dst_off: int = 0) -> int:
+        """Blocking device-direct read — submit + wait with inline
+        execution (bit-identical; see `_read_into_impl`)."""
+        return self.submit_read_into(oid, offset, size, dst_mr, dst_off,
+                                     _inline=True).wait()
+
+    def _read_into_impl(self, oid: int, offset: int, size: int,
+                        dst_mr: MemoryRegion, dst_off: int = 0) -> int:
         """Device-direct gather-read into the caller's registered region:
         over RDMA the engine scatters straight into it (ONE copy per byte,
         zero staging acquires); over TCP blocks stage through ring slots
@@ -888,15 +1207,82 @@ class _ServerIO:
         return size
 
     def read(self, oid: int, offset: int, size: int) -> bytes:
+        """Blocking materializing read — submit + wait with inline
+        execution (bit-identical; see `_read_impl`)."""
+        return self.submit_read(oid, offset, size, _inline=True).wait()
+
+    def _read_impl(self, oid: int, offset: int, size: int) -> bytes:
         if self.legacy:
             return self._read_legacy(oid, offset, size)
         dst = self.creg.register(np.empty(size, np.uint8), self.tenant)
         try:
-            self.read_into(oid, offset, size, dst, 0)
+            self._read_into_impl(oid, offset, size, dst, 0)
             return dst.buf.tobytes()
         finally:
             self.drop_dst_rkey(dst)       # per-op capability dies with MR
             self.creg.deregister(dst)
+
+    # -- submit/reap surface (async completion-driven API) -------------------
+    # Submitted op functions call the `_impl` bodies, NEVER the public
+    # blocking wrappers: a wrapper re-submitting from inside a submitted op
+    # would nest two SQ ring slots for one logical op and deadlock at
+    # depth 1. The optional `_then` post-processing step is composed INTO
+    # the op (see `_chain`). The `_inline` flag is how the blocking API is
+    # expressed as submit + wait without a thread hop.
+
+    def submit_writev(self, oid: int, offset: int, buffers: Sequence,
+                      timeout: Optional[float] = None,
+                      _inline: bool = False,
+                      _then: Optional[Callable[[Any], Any]] = None
+                      ) -> CompletionHandle:
+        """Queue a vectored write; the handle's wait() yields the byte
+        count."""
+        return self._submit(
+            "writev",
+            _chain(lambda: self._writev_impl(oid, offset, buffers), _then),
+            timeout=timeout, inline=_inline)
+
+    def submit_readv_into(self, oid: int, offset: int, bufs: Sequence,
+                          timeout: Optional[float] = None,
+                          _inline: bool = False,
+                          _then: Optional[Callable[[Any], Any]] = None
+                          ) -> CompletionHandle:
+        """Queue a vectored gather-read into caller buffers."""
+        return self._submit(
+            "readv_into",
+            _chain(lambda: self._readv_into_impl(oid, offset, bufs), _then),
+            timeout=timeout, inline=_inline)
+
+    def submit_read_into(self, oid: int, offset: int, size: int,
+                         dst_mr: MemoryRegion, dst_off: int = 0,
+                         timeout: Optional[float] = None,
+                         _inline: bool = False,
+                         _then: Optional[Callable[[Any], Any]] = None
+                         ) -> CompletionHandle:
+        """Queue a device-direct read into a registered region."""
+        return self._submit(
+            "read_into",
+            _chain(lambda: self._read_into_impl(oid, offset, size, dst_mr,
+                                                dst_off), _then),
+            timeout=timeout, inline=_inline)
+
+    def submit_read(self, oid: int, offset: int, size: int,
+                    timeout: Optional[float] = None,
+                    _inline: bool = False,
+                    _then: Optional[Callable[[Any], Any]] = None
+                    ) -> CompletionHandle:
+        """Queue a materializing read; the handle's wait() yields bytes."""
+        return self._submit(
+            "read",
+            _chain(lambda: self._read_impl(oid, offset, size), _then),
+            timeout=timeout, inline=_inline)
+
+    def _sq_ring(self) -> Optional[_SubmissionRing]:
+        return self.sq
+
+    def close(self) -> None:
+        """Drain in-flight completions and retire the dispatch pool."""
+        self._close_submit()
 
     # -- EC cell plane (block-relative extent addressing) --------------------
     # Cells are MEDIA-domain bytes end to end: parity is linear over what
@@ -1088,7 +1474,7 @@ class _ServerIO:
         return out.tobytes()
 
 
-class _ClusterRouter:
+class _ClusterRouter(_SubmitReap):
     """Thin client-side router over per-target data-plane sessions.
 
     The monolithic `_ServerIO` of the single-server stack is now the PER-
@@ -1126,7 +1512,8 @@ class _ClusterRouter:
                  faults: Optional[FaultInjector] = None,
                  timeouts: Timeouts = DEFAULT_TIMEOUTS,
                  redundancy_key: Optional[str] = None,
-                 crypto: Optional[InlineCrypto] = None):
+                 crypto: Optional[InlineCrypto] = None,
+                 io_depth: int = 16):
         self.sessions = sessions
         self.cp = control
         self.creg = client_registry
@@ -1161,6 +1548,21 @@ class _ClusterRouter:
         # surgical: only the FAILED target's fragments, never the whole op
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
+        # submit/reap state: ONE shared CQ for the whole client plus one
+        # submission ring per target so io_depth bounds in-flight per
+        # target (a coalesced per-target run takes ONE slot — fragments
+        # inside it still ride a single SG/placement verb)
+        self._init_submit(io_depth, timeouts)
+        self._rings: Dict[int, _SubmissionRing] = {}
+        self._rings_lock = threading.Lock()
+
+    def _target_ring(self, tid: int) -> _SubmissionRing:
+        with self._rings_lock:
+            ring = self._rings.get(tid)
+            if ring is None:
+                ring = _SubmissionRing(self.io_depth, self.timeouts)
+                self._rings[tid] = ring
+            return ring
 
     # -- session / map lifecycle ---------------------------------------------
     def attach_session(self, session_id: int,
@@ -1339,15 +1741,29 @@ class _ClusterRouter:
                              key=lambda f: f[1])
 
     def _run_batch(self, tid: int, oid: int, runs, call) -> None:
-        sess = self.sessions[tid]
-        for fo, payload in runs:
-            call(sess, oid, fo, payload)
+        # one per-target SQ slot per coalesced batch: io_depth batches of
+        # one target may execute at once, whether they come from the async
+        # submit surface or the striping pool's concurrent per-target tasks
+        ring = self._target_ring(tid)
+        ring.acquire()
+        try:
+            sess = self.sessions[tid]
+            for fo, payload in runs:
+                call(sess, oid, fo, payload)
+        finally:
+            ring.release()
 
     # -- vectored write path -------------------------------------------------
     def write(self, oid: int, offset: int, data) -> None:
         self.writev(oid, offset, [data])
 
     def writev(self, oid: int, offset: int, buffers: Sequence) -> int:
+        """Blocking striped write — submit + wait with inline execution
+        (bit-identical; see `_writev_impl`)."""
+        return self.submit_writev(oid, offset, buffers, _inline=True).wait()
+
+    def _writev_impl(self, oid: int, offset: int,
+                     buffers: Sequence) -> int:
         """Striped scatter-gather write: each 1 MiB block routes to its
         placement target; per-target runs commit through that target's own
         session (ring, transport, epoch) concurrently. EC containers take
@@ -1418,9 +1834,19 @@ class _ClusterRouter:
 
     def read_into(self, oid: int, offset: int, size: int,
                   dst_mr: MemoryRegion, dst_off: int = 0) -> int:
+        return self.submit_read_into(oid, offset, size, dst_mr, dst_off,
+                                     _inline=True).wait()
+
+    def _read_into_impl(self, oid: int, offset: int, size: int,
+                        dst_mr: MemoryRegion, dst_off: int = 0) -> int:
         return self._gather_into(oid, offset, [(dst_mr, dst_off, size)])
 
     def readv_into(self, oid: int, offset: int, bufs: Sequence) -> int:
+        return self.submit_readv_into(oid, offset, bufs,
+                                      _inline=True).wait()
+
+    def _readv_into_impl(self, oid: int, offset: int,
+                         bufs: Sequence) -> int:
         mrs = [self.creg.register(b, self.tenant) for b in bufs]
         try:
             return self._gather_into(
@@ -1431,13 +1857,67 @@ class _ClusterRouter:
                 self.creg.deregister(mr)
 
     def read(self, oid: int, offset: int, size: int) -> bytes:
+        return self.submit_read(oid, offset, size, _inline=True).wait()
+
+    def _read_impl(self, oid: int, offset: int, size: int) -> bytes:
         dst = self.creg.register(np.empty(size, np.uint8), self.tenant)
         try:
-            self.read_into(oid, offset, size, dst, 0)
+            self._read_into_impl(oid, offset, size, dst, 0)
             return dst.buf.tobytes()
         finally:
             self.drop_dst_rkey(dst)
             self.creg.deregister(dst)
+
+    # -- submit/reap surface --------------------------------------------------
+    # Same contract as _ServerIO's: op functions call the `_impl` bodies;
+    # depth is bounded PER TARGET inside `_run_batch` (no router-global
+    # ring), so a deep queue against one target never starves another.
+
+    def submit_writev(self, oid: int, offset: int, buffers: Sequence,
+                      timeout: Optional[float] = None,
+                      _inline: bool = False,
+                      _then: Optional[Callable[[Any], Any]] = None
+                      ) -> CompletionHandle:
+        """Queue a striped vectored write; wait() yields the byte count."""
+        return self._submit(
+            "writev",
+            _chain(lambda: self._writev_impl(oid, offset, buffers), _then),
+            timeout=timeout, inline=_inline)
+
+    def submit_readv_into(self, oid: int, offset: int, bufs: Sequence,
+                          timeout: Optional[float] = None,
+                          _inline: bool = False,
+                          _then: Optional[Callable[[Any], Any]] = None
+                          ) -> CompletionHandle:
+        """Queue a striped gather-read into caller buffers."""
+        return self._submit(
+            "readv_into",
+            _chain(lambda: self._readv_into_impl(oid, offset, bufs), _then),
+            timeout=timeout, inline=_inline)
+
+    def submit_read_into(self, oid: int, offset: int, size: int,
+                         dst_mr: MemoryRegion, dst_off: int = 0,
+                         timeout: Optional[float] = None,
+                         _inline: bool = False,
+                         _then: Optional[Callable[[Any], Any]] = None
+                         ) -> CompletionHandle:
+        """Queue a striped read into a registered region."""
+        return self._submit(
+            "read_into",
+            _chain(lambda: self._read_into_impl(oid, offset, size, dst_mr,
+                                                dst_off), _then),
+            timeout=timeout, inline=_inline)
+
+    def submit_read(self, oid: int, offset: int, size: int,
+                    timeout: Optional[float] = None,
+                    _inline: bool = False,
+                    _then: Optional[Callable[[Any], Any]] = None
+                    ) -> CompletionHandle:
+        """Queue a striped materializing read; wait() yields bytes."""
+        return self._submit(
+            "read",
+            _chain(lambda: self._read_impl(oid, offset, size), _then),
+            timeout=timeout, inline=_inline)
 
     def drop_dst_rkey(self, mr: MemoryRegion) -> None:
         """Retire the destination capability on EVERY target session (each
@@ -1886,9 +2366,12 @@ class _ClusterRouter:
                for _tid, s in sorted(self.sessions.items())]
         out = {k: merge_counters([p[k] for p in per])
                for k in ("transport", "engine", "media", "client",
-                         "staging")}
+                         "staging", "cq")}
         out["engine"] = merge_counters([out["engine"],
                                         asdict(self._cluster_stats())])
+        # the router's own CQ (the client-level submit surface) merges
+        # with the per-session CQs: ONE fleet view of submit/reap traffic
+        out["cq"] = merge_counters([out["cq"], self.cq.counters()])
         out["control"] = per[0]["control"]
         # the injector is ONE fleet-shared object: report it once (summing
         # per-session copies would multiply every count by n_targets)
@@ -1918,10 +2401,53 @@ class _ClusterRouter:
 
     def close(self) -> None:
         self._ec_drain()
+        # reap every in-flight handle (router CQ) before the striping pool
+        # and the per-target sessions retire underneath them
+        self._close_submit()
         with self._pool_lock:
             pool, self._pool = self._pool, None
         if pool is not None:
             pool.shutdown(wait=True)
+        for _tid, sess in sorted(self.sessions.items()):
+            sess.close()
+
+
+class _DPUSubmitHandle:
+    """Client-level completion handle for a dpu-mode batched submission.
+    The SQE does NOT ring a doorbell at submit: it queues in the owner's
+    batch and crosses to the NIC when the batch fills (io_depth entries)
+    or on the first wait()/flush_submits() — ONE doorbell per batch via
+    DPURuntime.submit_many, the host<->NIC crossing amortization the
+    offload papers measure. wait() mirrors CompletionHandle's contract
+    (result or re-raised error; CancelledError after a cancel)."""
+
+    def __init__(self, client: "ROS2Client", op: str, args: Dict[str, Any],
+                 timeout: Optional[float] = None):
+        self._client = client
+        self.op = op
+        self._args = args
+        self._timeout = timeout
+        self._tag: Optional[int] = None
+        self._cancelled = False
+
+    def cancel(self) -> bool:
+        """Cancel iff still queued (doorbell not yet rung)."""
+        return self._client._dpu_cancel(self)
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        if self._cancelled:
+            raise CancelledError(self.op)
+        self._client.flush_submits()
+        t = timeout if timeout is not None else self._timeout
+        if t is None:
+            t = self._client.timeouts.dpu_wait_s
+        c = self._client.dpu.wait_tag(self._tag, timeout=t)
+        if not c.ok:
+            raise IOError(c.error)
+        return c.result
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        return self.wait(timeout)
 
 
 class ROS2Client:
@@ -1942,7 +2468,8 @@ class ROS2Client:
                  fault_injector: Optional[FaultInjector] = None,
                  timeouts: Optional[Timeouts] = None,
                  ec: Optional[Tuple[int, int]] = None,
-                 domains: Optional[Sequence[Optional[str]]] = None):
+                 domains: Optional[Sequence[Optional[str]]] = None,
+                 io_depth: int = 16, tcp_registered: bool = False):
         assert mode in ("host", "dpu") and transport in ("tcp", "rdma")
         assert n_targets >= 1
         assert n_targets == 1 or not legacy, \
@@ -1957,6 +2484,14 @@ class ROS2Client:
         self.tenant = tenant
         self._n_staging_slots = n_staging_slots
         self._rkey_ttl_s = rkey_ttl_s
+        # submit/reap knobs: io_depth bounds in-flight ops per target (SQ
+        # ring depth) and sizes the dpu-mode doorbell batch;
+        # tcp_registered turns on the io_uring-style registered-buffer
+        # receive leg (TCP only — RDMA reads are already zero-staging)
+        self.io_depth = max(1, int(io_depth))
+        self.tcp_registered = tcp_registered
+        self._submit_batch: List["_DPUSubmitHandle"] = []
+        self._submit_batch_lock = threading.Lock()
         # one injectable policy for every data-path wait (staging ring,
         # commit quorum/drain, DPU completions, dispatch deadline/budget)
         self.timeouts = timeouts or DEFAULT_TIMEOUTS
@@ -2035,7 +2570,8 @@ class ROS2Client:
                 cluster_stats=lambda: self.cluster.stats,
                 zero_copy=zero_copy,
                 faults=fault_injector, timeouts=self.timeouts,
-                redundancy_key="pool0/cont0", crypto=crypto)
+                redundancy_key="pool0/cont0", crypto=crypto,
+                io_depth=self.io_depth)
         # ---- session bring-up ----
         rkey, rkey_ttl = None, None
         if legacy:
@@ -2150,7 +2686,8 @@ class ROS2Client:
                          target_up=lambda tid=tid:
                              self.cluster.pool_map.is_up(tid),
                          faults=self.faults, timeouts=self.timeouts,
-                         label=f"t{tid}")
+                         label=f"t{tid}", io_depth=self.io_depth,
+                         tcp_registered=self.tcp_registered)
 
     def _attach_target_session(self, tid: int) -> _ServerIO:
         """Router factory for a target discovered on a map refresh
@@ -2215,53 +2752,123 @@ class ROS2Client:
             return self._dpu_call("open", path=path, create=create)
         return self.dfs.open(path, create)
 
-    def pwrite(self, fd: int, data, offset: int) -> int:
+    # ONE routing point for the POSIX-ish data surface: every op below is
+    # `_data_op(dpu_op, dfs_method, **kwargs)` — dpu mode doorbells the
+    # runtime (after per-op marshalling from `_DPU_MARSHAL`, the SQE-safe
+    # deep-copy rules), host mode calls the in-process DFS client. The
+    # submit_* variants reuse the same marshal table, so each op's
+    # dpu-vs-host shape is defined exactly once (previously triplicated
+    # across this facade, core/dfs.py and the dpu handler table).
+    _DPU_MARSHAL: Dict[str, Dict[str, Callable[[Any], Any]]] = {
+        "write": {"data": bytes},
+        "writev": {"buffers": lambda bs: [bytes(b) for b in bs]},
+        "readv": {"sizes": list},
+        "read_into_many": {"descs": lambda ds: [tuple(d) for d in ds]},
+    }
+
+    def _marshal(self, op: str, **args) -> Dict[str, Any]:
+        for k, conv in self._DPU_MARSHAL.get(op, {}).items():
+            args[k] = conv(args[k])
+        return args
+
+    def _data_op(self, op: str, dfs_name: str, **args) -> Any:
         if self.dpu:
-            return self._dpu_call("write", fd=fd, data=bytes(data),
-                                  offset=offset)
-        return self.dfs.pwrite(fd, data, offset)
+            return self._dpu_call(op, **self._marshal(op, **args))
+        return getattr(self.dfs, dfs_name)(**args)
+
+    def pwrite(self, fd: int, data, offset: int) -> int:
+        return self._data_op("write", "pwrite", fd=fd, data=data,
+                             offset=offset)
 
     def pread(self, fd: int, size: int, offset: int) -> bytes:
-        if self.dpu:
-            return self._dpu_call("read", fd=fd, size=size, offset=offset)
-        return self.dfs.pread(fd, size, offset)
+        return self._data_op("read", "pread", fd=fd, size=size,
+                             offset=offset)
 
     def pwritev(self, fd: int, buffers: Sequence, offset: int) -> int:
         """Vectored write: the whole iovec moves as scatter-gather transport
         ops with ONE set_size control RPC (vs one per pwrite)."""
-        if self.dpu:
-            return self._dpu_call("writev", fd=fd,
-                                  buffers=[bytes(b) for b in buffers],
-                                  offset=offset)
-        return self.dfs.pwritev(fd, buffers, offset)
+        return self._data_op("writev", "pwritev", fd=fd, buffers=buffers,
+                             offset=offset)
 
-    def preadv(self, fd: int, sizes: Sequence[int], offset: int) -> List[bytes]:
+    def preadv(self, fd: int, sizes: Sequence[int],
+               offset: int) -> List[bytes]:
         """Vectored read: fills len(sizes) logically separate buffers from
         one contiguous file range with a single gather op."""
-        if self.dpu:
-            return self._dpu_call("readv", fd=fd, sizes=list(sizes),
-                                  offset=offset)
-        return self.dfs.preadv(fd, sizes, offset)
+        return self._data_op("readv", "preadv", fd=fd, sizes=sizes,
+                             offset=offset)
 
     def pread_into(self, fd: int, size: int, offset: int,
                    dst_mr, dst_off: int = 0) -> int:
         """Device-direct read into a registered region (no staging copy)."""
-        if self.dpu:
-            return self._dpu_call("read_into", fd=fd, size=size,
-                                  offset=offset, dst_mr=dst_mr,
-                                  dst_off=dst_off)
-        return self.dfs.pread_into(fd, size, offset, dst_mr, dst_off)
+        return self._data_op("read_into", "pread_into", fd=fd, size=size,
+                             offset=offset, dst_mr=dst_mr, dst_off=dst_off)
 
     def pread_into_many(self, descs: Sequence, dst_mr) -> int:
         """Vectored device-direct read: one descriptor list — [(fd, size,
         offset, dst_off)] — lands N file ranges in one registered region.
         In dpu mode the WHOLE list rides a single SQE (one doorbell, one
         completion), the batched-placement leg DeviceDirectSink uses."""
+        return self._data_op("read_into_many", "pread_into_many",
+                             descs=descs, dst_mr=dst_mr)
+
+    # ---- async submit/reap (client-level) ----
+    # Host mode returns DFS CompletionHandles (shared CQ, io_depth rings);
+    # dpu mode returns _DPUSubmitHandles whose SQEs join the doorbell
+    # batch — ONE host<->NIC crossing per io_depth queued submissions.
+    def _dpu_submit(self, op: str, timeout: Optional[float],
+                    **args) -> "_DPUSubmitHandle":
+        h = _DPUSubmitHandle(self, op, self._marshal(op, **args),
+                             timeout=timeout)
+        flush = False
+        with self._submit_batch_lock:
+            self._submit_batch.append(h)
+            flush = len(self._submit_batch) >= self.io_depth
+        if flush:
+            self.flush_submits()
+        return h
+
+    def flush_submits(self) -> int:
+        """Ring ONE doorbell for every queued dpu-mode submission
+        (DPURuntime.submit_many); host mode has nothing queued (handles
+        dispatch at submit) so this is a no-op. Returns the batch size."""
+        with self._submit_batch_lock:
+            batch, self._submit_batch = self._submit_batch, []
+        if not batch:
+            return 0
+        tags = self.dpu.submit_many([(h.op, h._args) for h in batch])
+        for h, tag in zip(batch, tags):
+            h._tag = tag
+        return len(batch)
+
+    def _dpu_cancel(self, h: "_DPUSubmitHandle") -> bool:
+        with self._submit_batch_lock:
+            if h in self._submit_batch:
+                self._submit_batch.remove(h)
+                h._cancelled = True
+                return True
+        return False
+
+    def submit_pread(self, fd: int, size: int, offset: int,
+                     timeout: Optional[float] = None):
         if self.dpu:
-            return self._dpu_call("read_into_many",
-                                  descs=[tuple(d) for d in descs],
-                                  dst_mr=dst_mr)
-        return self.dfs.pread_into_many(descs, dst_mr)
+            return self._dpu_submit("read", timeout, fd=fd, size=size,
+                                    offset=offset)
+        return self.dfs.submit_pread(fd, size, offset, timeout=timeout)
+
+    def submit_preadv(self, fd: int, sizes: Sequence[int], offset: int,
+                      timeout: Optional[float] = None):
+        if self.dpu:
+            return self._dpu_submit("readv", timeout, fd=fd, sizes=sizes,
+                                    offset=offset)
+        return self.dfs.submit_preadv(fd, sizes, offset, timeout=timeout)
+
+    def submit_pwritev(self, fd: int, buffers: Sequence, offset: int,
+                       timeout: Optional[float] = None):
+        if self.dpu:
+            return self._dpu_submit("writev", timeout, fd=fd,
+                                    buffers=buffers, offset=offset)
+        return self.dfs.submit_pwritev(fd, buffers, offset,
+                                       timeout=timeout)
 
     def register_region(self, nbytes: int):
         """Register a client-side memory region (loader rings, sinks)."""
@@ -2318,6 +2925,11 @@ class ROS2Client:
             self.cache.stop_renewal()
         self.scrubber.stop()
         if self.dpu:
+            # never-doorbelled queued submissions die with the client
+            with self._submit_batch_lock:
+                dropped, self._submit_batch = self._submit_batch, []
+            for h in dropped:
+                h._cancelled = True
             self.dpu.stop()
         # persistent client registrations (loader rings, raw read sinks
         # the caller never deregistered) die with the client: capability
@@ -2326,8 +2938,9 @@ class ROS2Client:
         for mr in self.client_registry.regions():
             self.io.drop_dst_rkey(mr)
             self.client_registry.deregister(mr)
-        if isinstance(self.io, _ClusterRouter):
-            self.io.close()
+        # drain the CQ(s) and retire submit pools — router AND the bare
+        # single-target session both expose close() now
+        self.io.close()
         self.cluster.close()   # drain background replica commits fleet-wide
 
     # ---- calibrated performance model ----

@@ -340,10 +340,21 @@ class DFSClient:
                 self._pending_size[path] = size
         self.cache.bump_size(path, size)   # keep our own lease coherent
 
-    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+    def _handle(self, fd: int) -> FileHandle:
         h = self._open.get(fd)
         if h is None:
             raise DFSError("EBADF")
+        return h
+
+    def _wrote(self, path: str, offset: int, written: int) -> int:
+        """Post-write size delegation, composed INTO submitted write ops
+        (`_then`) so it runs on the completing thread — a reap under the
+        CQ lock must never do control RPCs."""
+        self._note_size(path, offset + written)
+        return written
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        h = self._handle(fd)
         self.io.write(h.oid, offset, data)
         self._note_size(h.path, offset + len(data))
         return len(data)
@@ -352,19 +363,14 @@ class DFSClient:
         """Vectored write: the iovec is coalesced into scatter-gather
         transport ops by the server I/O adapter; file-size metadata rides
         the size delegation (0 RPCs here, ONE piggybacked set_size at
-        close/fsync — or one eager RPC per writev without a cache)."""
-        h = self._open.get(fd)
-        if h is None:
-            raise DFSError("EBADF")
-        written = self.io.writev(h.oid, offset, buffers)
-        self._note_size(h.path, offset + written)
-        return written
+        close/fsync — or one eager RPC per writev without a cache).
+        Blocking = submit + wait with inline execution (bit-identical;
+        the op surface is defined ONCE, in `submit_pwritev`)."""
+        return self.submit_pwritev(fd, buffers, offset,
+                                   _inline=True).wait()
 
     def pread(self, fd: int, size: int, offset: int) -> bytes:
-        h = self._open.get(fd)
-        if h is None:
-            raise DFSError("EBADF")
-        return self.io.read(h.oid, offset, size)
+        return self.submit_pread(fd, size, offset, _inline=True).wait()
 
     def preadv(self, fd: int, sizes, offset: int) -> List[bytes]:
         """Vectored read: one gather op over the contiguous range. On the
@@ -373,43 +379,94 @@ class DFSClient:
         intermediate `bytes` is materialized and re-sliced; the only
         remaining copy is the `bytes` materialization the return type
         demands. Falls back to the contiguous blob+slice path when the
-        I/O adapter lacks vectored fill (legacy / PR-1 sg mode)."""
-        h = self._open.get(fd)
-        if h is None:
-            raise DFSError("EBADF")
+        I/O adapter lacks vectored fill (legacy / PR-1 sg mode).
+        Blocking = submit + wait (op surface defined in `submit_preadv`)."""
+        return self.submit_preadv(fd, sizes, offset, _inline=True).wait()
+
+    # -- async submit/reap -----------------------------------------------
+    def submit_pwritev(self, fd: int, buffers, offset: int,
+                       timeout: Optional[float] = None,
+                       _inline: bool = False):
+        """Queue a vectored write; the handle's wait() yields the byte
+        count. The size delegation lands when the WRITE completes (not at
+        reap), so an abandoned handle still leaves metadata coherent."""
+        h = self._handle(fd)
+        return self.io.submit_writev(
+            h.oid, offset, buffers, timeout=timeout, _inline=_inline,
+            _then=lambda n, p=h.path, o=offset: self._wrote(p, o, n))
+
+    def submit_pread(self, fd: int, size: int, offset: int,
+                     timeout: Optional[float] = None,
+                     _inline: bool = False):
+        """Queue a read; the handle's wait() yields bytes."""
+        h = self._handle(fd)
+        return self.io.submit_read(h.oid, offset, size, timeout=timeout,
+                                   _inline=_inline)
+
+    def submit_preadv(self, fd: int, sizes, offset: int,
+                      timeout: Optional[float] = None,
+                      _inline: bool = False):
+        """Queue a vectored read; the handle's wait() yields the per-size
+        list of bytes. Result assembly (`tobytes` / blob slicing) is
+        composed into the op via `_then` — it runs on the completing
+        thread, never under the CQ lock."""
+        h = self._handle(fd)
         sizes = [int(s) for s in sizes]
         if getattr(self.io, "supports_readv_into", False):
             bufs = [np.empty(s, np.uint8) for s in sizes]
-            self.io.readv_into(h.oid, offset, bufs)
-            return [b.tobytes() for b in bufs]
-        total = sum(sizes)
-        blob = self.io.read(h.oid, offset, total)
-        out, pos = [], 0
-        for s in sizes:
-            out.append(blob[pos:pos + s])
-            pos += s
-        return out
+            return self.io.submit_readv_into(
+                h.oid, offset, bufs, timeout=timeout, _inline=_inline,
+                _then=lambda _n, bs=bufs: [b.tobytes() for b in bs])
+
+        def slice_out(blob: bytes) -> List[bytes]:
+            out, pos = [], 0
+            for s in sizes:
+                out.append(blob[pos:pos + s])
+                pos += s
+            return out
+        return self.io.submit_read(h.oid, offset, sum(sizes),
+                                   timeout=timeout, _inline=_inline,
+                                   _then=slice_out)
 
     def pread_into(self, fd: int, size: int, offset: int,
                    dst_mr, dst_off: int = 0) -> int:
         """Zero-copy read into a pre-registered memory region."""
-        h = self._open.get(fd)
-        if h is None:
-            raise DFSError("EBADF")
+        h = self._handle(fd)
         return self.io.read_into(h.oid, offset, size, dst_mr, dst_off)
 
-    def pread_into_many(self, descs, dst_mr) -> int:
+    def pread_into_many(self, descs, dst_mr,
+                        io_depth: Optional[int] = None) -> int:
         """Vectored zero-copy read: a descriptor list — [(fd, size,
         offset, dst_off)] — landing N file ranges (possibly from N
         different files) in one registered region. On the DPU this whole
         list arrives in a single SQE; each range is its own direct-splice
-        placement. Returns total bytes read."""
+        placement. With a submit-capable adapter, up to `io_depth` ranges
+        stay in flight as completion handles (default: the adapter's own
+        io_depth) instead of one blocking read at a time; results are
+        reaped in submit order. Returns total bytes read."""
+        depth = io_depth if io_depth is not None \
+            else getattr(self.io, "io_depth", 1)
+        if depth <= 1 or not hasattr(self.io, "submit_read_into"):
+            total = 0
+            for fd, size, offset, dst_off in descs:
+                h = self._handle(fd)
+                total += self.io.read_into(h.oid, offset, size, dst_mr,
+                                           dst_off)
+            return total
         total = 0
-        for fd, size, offset, dst_off in descs:
-            h = self._open.get(fd)
-            if h is None:
-                raise DFSError("EBADF")
-            total += self.io.read_into(h.oid, offset, size, dst_mr, dst_off)
+        window: List[Any] = []
+        try:
+            for fd, size, offset, dst_off in descs:
+                h = self._handle(fd)
+                window.append(self.io.submit_read_into(
+                    h.oid, offset, size, dst_mr, dst_off))
+                if len(window) >= depth:
+                    total += window.pop(0).wait()
+            while window:
+                total += window.pop(0).wait()
+        finally:
+            for w in window:    # error exit: never-dispatched handles die
+                w.cancel()      # here; running ones drain in background
         return total
 
     def fsync(self, fd: int) -> None:

@@ -18,11 +18,27 @@ from repro.core.sim import GiB, KiB, MiB, Station, mva
 
 IODEPTH = 8                      # FIO iodepth per job (closed-loop jobs)
 
-# io_uring submission/completion path per I/O on one core (syscall batch,
-# sqe/cqe handling, page pinning) and the shared block-layer/irq path that
-# caps small-I/O scaling regardless of drive count.
-IOURING_PER_OP = 10.0e-6
+# io_uring submission/completion path per I/O on one core, split into the
+# per-SQE cost (sqe/cqe handling, page pinning) and the per-doorbell
+# syscall/batch cost amortized over the queue depth — the same SQ/CQ
+# model the async client's `io_depth` knob drives, so the bench's 4× gate
+# calibrates against the modeled ceiling at ITS depth instead of a magic
+# constant. At the calibration depth (IODEPTH=8) the per-op sum is
+# bit-identical to the historical flat 10.0e-6 constant.
+IOURING_PER_SQE = 8.6e-6
+IOURING_DOORBELL = 11.2e-6
 BLOCK_LAYER_SHARED = 1.6e-6
+
+
+def iouring_per_op(iodepth: int = IODEPTH) -> float:
+    """Modeled io_uring per-op service time at a given queue depth: the
+    doorbell cost amortizes over every SQE it submits."""
+    return IOURING_PER_SQE + IOURING_DOORBELL / max(1, int(iodepth))
+
+
+# historical flat constant (kept for reference/back-compat; equals the
+# split model at the calibration depth)
+IOURING_PER_OP = iouring_per_op(IODEPTH)
 
 WORKLOADS = ("read", "write", "randread", "randwrite")
 
@@ -32,11 +48,11 @@ def is_write(workload: str) -> bool:
 
 
 def local_stations(n_dev: int, io_size: int, workload: str,
-                   jobs: int) -> List[Station]:
+                   jobs: int, iodepth: int = IODEPTH) -> List[Station]:
     devs = make_nvme_array(n_dev)
     write = is_write(workload)
     out = [
-        Station("host:iouring", IOURING_PER_OP, servers=jobs),
+        Station("host:iouring", iouring_per_op(iodepth), servers=jobs),
         Station("host:blklayer", BLOCK_LAYER_SHARED, servers=1),
     ]
     out += striped_stations(devs, io_size, write)
@@ -46,7 +62,7 @@ def local_stations(n_dev: int, io_size: int, workload: str,
 def local_fio(n_dev: int, io_size: int, workload: str, jobs: int,
               iodepth: int = IODEPTH):
     """Returns (ops/s, bytes/s) for the local io_uring benchmark."""
-    x, _ = mva(local_stations(n_dev, io_size, workload, jobs),
+    x, _ = mva(local_stations(n_dev, io_size, workload, jobs, iodepth),
                jobs * iodepth)
     return x, x * io_size
 

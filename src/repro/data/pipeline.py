@@ -111,7 +111,7 @@ class ROS2TokenLoader:
     def __init__(self, client, root: str, *, global_batch: int, seq_len: int,
                  dp_rank: int = 0, dp_size: int = 1, seed: int = 0,
                  prefetch: int = 2, hedge_timeout_s: Optional[float] = None,
-                 read_delay_hook=None,
+                 read_delay_hook=None, io_depth: int = 8,
                  timeouts: Timeouts = DEFAULT_TIMEOUTS):
         self.client = client
         # one policy object for every loader wait (retry backoff, queue
@@ -136,8 +136,14 @@ class ROS2TokenLoader:
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, prefetch))
         self._stop = threading.Event()
         self._reshard_lock = threading.Lock()
-        self._pool = ThreadPoolExecutor(max_workers=4,
-                                        thread_name_prefix="ros2-loader")
+        # submit/reap depth: with a submit-capable client the producer
+        # keeps up to io_depth preads in flight as completion handles
+        # (reaped in submit order) instead of a thread-per-op pool
+        self.io_depth = max(1, int(io_depth))
+        # LAZY whole-op hedge pool: only the fallback hedging path (no
+        # engine support) ever builds threads now
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
         self.hedge_timeout_s = hedge_timeout_s
         self.read_delay_hook = read_delay_hook    # tests: inject stragglers
         # extent-level hedging: hand the budget to the ENGINE (it races
@@ -167,15 +173,33 @@ class ROS2TokenLoader:
 
     MAX_READ_RETRIES = 5
 
+    def _get_pool(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=4, thread_name_prefix="ros2-loader")
+            return self._pool
+
     # -- byte-level read, possibly spanning shards, possibly hedged ---------
-    def _read_span(self, byte_off: int, size: int) -> bytes:
+    def _span_reads(self, byte_off: int,
+                    size: int) -> List[Tuple[int, int, int]]:
+        """[(shard, shard_off, len)] covering the span (may cross shard
+        files)."""
         st = self.meta["shard_tokens"] * TOKEN_BYTES
-        out = bytearray(size)
+        out = []
         pos = 0
         while pos < size:
             shard = (byte_off + pos) // st
             so = (byte_off + pos) - shard * st
             ln = min(st - so, size - pos)
+            out.append((shard, so, ln))
+            pos += ln
+        return out
+
+    def _read_span(self, byte_off: int, size: int) -> bytes:
+        out = bytearray(size)
+        pos = 0
+        for shard, so, ln in self._span_reads(byte_off, size):
             out[pos:pos + ln] = self._read_one(shard, so, ln)
             pos += ln
         return bytes(out)
@@ -216,13 +240,14 @@ class ROS2TokenLoader:
             return attempt(0)
         # whole-op fallback for clients without engine hedging: duplicate
         # the entire read against the replicated store; first wins
-        primary = self._pool.submit(attempt, 0)
+        pool = self._get_pool()
+        primary = pool.submit(attempt, 0)
         done, _ = wait([primary], timeout=self.hedge_timeout_s,
                        return_when=FIRST_COMPLETED)
         if done:
             return primary.result()
         self._local_hedges_issued += 1
-        backup = self._pool.submit(attempt, 1)
+        backup = pool.submit(attempt, 1)
         done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
         winner = done.pop()
         if winner is backup:
@@ -237,6 +262,56 @@ class ROS2TokenLoader:
         self.read_s += time.monotonic() - t0
         self.bytes_read += size
         return np.frombuffer(raw, TOKEN_DTYPE)
+
+    # -- step fetch: io_depth submit/reap when the client supports it -------
+    def _submit_capable(self) -> bool:
+        """Handle-based fetch preconditions: a submit-capable client, no
+        per-read test hook (its per-attempt semantics belong to the
+        blocking path), and hedging — if armed — running inside the
+        engine (extent-level), not as whole-op duplication."""
+        return (hasattr(self.client, "submit_pread")
+                and self.read_delay_hook is None
+                and (self.hedge_timeout_s is None or self._engine_hedging))
+
+    def _fetch_step(self, idxs) -> np.ndarray:
+        """Fetch one step's samples. With a submit-capable client, every
+        (sample, shard-segment) read is submitted as a completion handle
+        with up to io_depth in flight — the deep-queue dispatch that
+        replaces the old one-blocking-read-at-a-time producer — and
+        reaped in submit order, so assembly (and therefore the batch) is
+        deterministic. Otherwise the blocking per-sample path runs
+        unchanged."""
+        if self.io_depth <= 1 or not self._submit_capable():
+            return np.stack([self._fetch_sample(int(i)) for i in idxs])
+        size = self.sample_tokens * TOKEN_BYTES
+        t0 = time.monotonic()
+        bufs = [bytearray(size) for _ in idxs]
+        plan = []                     # (sample_i, buf_off, shard, so, ln)
+        for si, i in enumerate(idxs):
+            pos = 0
+            for shard, so, ln in self._span_reads(int(i) * size, size):
+                plan.append((si, pos, shard, so, ln))
+                pos += ln
+        window: List[Tuple[int, int, int, object]] = []
+        try:
+            for si, pos, shard, so, ln in plan:
+                h = self.client.submit_pread(self._fds[shard], ln, so)
+                window.append((si, pos, ln, h))
+                if len(window) >= self.io_depth:
+                    self._reap_read(bufs, window.pop(0))
+            while window:
+                self._reap_read(bufs, window.pop(0))
+        finally:
+            for _si, _pos, _ln, h in window:   # error exit: cancel the
+                h.cancel()                     # never-dispatched tail
+        self.read_s += time.monotonic() - t0
+        self.bytes_read += size * len(idxs)
+        return np.stack([np.frombuffer(bytes(b), TOKEN_DTYPE)
+                         for b in bufs])
+
+    def _reap_read(self, bufs: List[bytearray], rd) -> None:
+        si, pos, ln, h = rd
+        bufs[si][pos:pos + ln] = h.wait()
 
     # -- producer thread ------------------------------------------------------
     def _producer(self) -> None:
@@ -255,8 +330,7 @@ class ROS2TokenLoader:
             batch = None
             for attempt in range(self.MAX_READ_RETRIES):
                 try:
-                    arr = np.stack([self._fetch_sample(int(i))
-                                    for i in idxs])
+                    arr = self._fetch_step(idxs)
                     batch = {"tokens": arr[:, :-1].astype(TOKEN_DTYPE),
                              "labels": arr[:, 1:].astype(TOKEN_DTYPE)}
                     if attempt:      # stall recovered: ledger the retry
@@ -343,7 +417,10 @@ class ROS2TokenLoader:
     def close(self) -> None:
         self._stop.set()
         self._thread.join(timeout=self.timeouts.thread_join_s)
-        self._pool.shutdown(wait=False)
+        with self._pool_lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
 
 def coverage_check(n_samples: int, global_batch: int, dp_size: int,

@@ -1,0 +1,331 @@
+"""Async completion-driven client I/O (PR 9): submit/reap over the
+shared per-client CQ.
+
+Covers the handle lifecycle contract end to end: the synchronous API is
+bit-identical submit+wait, cancel only wins while a handle is still
+pending, deadline expiry cancels-in-place (pending) or abandons with a
+background drain (running), close with work in flight drains cleanly,
+the SQ ring bounds per-target depth, dpu-mode submissions amortize to
+ONE doorbell per batch, and a faulted async run leaks zero
+slots/leases/rkeys/handles — the same end-state the autouse leak
+witness asserts for every test in this module.
+"""
+import threading
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core.client import ROS2Client, _SubmissionRing
+from repro.core.faults import (DEFAULT_TIMEOUTS, Fault, FaultInjector,
+                               OpTimeout, Timeouts)
+from tools.analysis import leakwitness
+
+
+def _payload(n, seed=0):
+    return bytes(np.random.default_rng(seed).integers(0, 256, n,
+                                                      dtype=np.uint8))
+
+
+def _host(io_depth=8, **kw):
+    return ROS2Client(mode="host", transport="rdma",
+                      scrub_interval_s=None, io_depth=io_depth, **kw)
+
+
+class _SlowReads:
+    """Instance-level patch making a session's read impl block on a gate;
+    `started` releases once per read that actually entered the impl, so
+    tests can wait until the pool workers are provably occupied."""
+
+    def __init__(self, io):
+        self.io = io
+        self.gate = threading.Event()
+        self.started = threading.Semaphore(0)
+        self._orig = io._read_impl
+
+    def __enter__(self):
+        def slow(*a, **kw):
+            self.started.release()
+            assert self.gate.wait(10.0)
+            return self._orig(*a, **kw)
+        self.io._read_impl = slow
+        return self
+
+    def __exit__(self, *exc):
+        self.gate.set()
+        self.io._read_impl = self._orig
+        return False
+
+
+# ---------------------------------------------------------------------------
+# sync == submit + wait
+
+
+def test_sync_api_is_submit_plus_wait_bit_identical():
+    c = _host()
+    fd = c.open("/cq-ident", create=True)
+    data = _payload(300_000, seed=3)
+    c.pwrite(fd, data, 0)
+    # every read flavour: blocking wrapper vs explicit submit+wait
+    assert c.submit_pread(fd, 70_000, 123).wait() == c.pread(fd, 70_000, 123)
+    assert (b"".join(c.submit_preadv(fd, [4096, 9000], 8192).wait())
+            == b"".join(c.preadv(fd, [4096, 9000], 8192)))
+    # writes: submit_pwritev lands the same bytes (and the size
+    # delegation rides the handle's _then, not the reap path)
+    w = _payload(50_000, seed=4)
+    n = c.submit_pwritev(fd, [w[:20_000], w[20_000:]], 100_000).wait()
+    assert n == len(w)
+    assert c.pread(fd, len(w), 100_000) == w
+    # inline execution still flows through full CQ accounting
+    cq = c.io.data_path_counters()["cq"]
+    assert cq["submitted"] >= 5
+    assert cq["completed"] == cq["submitted"]
+    c.close()
+
+
+def test_async_reads_overlap_under_io_depth():
+    c = _host(io_depth=8)
+    fd = c.open("/cq-overlap", create=True)
+    data = _payload(256 * 1024, seed=5)
+    c.pwrite(fd, data, 0)
+    hs = [(c.submit_pread(fd, 16 * 1024, i * 16 * 1024), i)
+          for i in range(16)]
+    for h, i in hs:
+        assert h.wait() == data[i * 16 * 1024:(i + 1) * 16 * 1024]
+    cq = c.io.data_path_counters()["cq"]
+    assert cq["inflight_peak"] >= 2        # real overlap, not serialized
+    assert cq["cancelled"] == 0
+    assert cq["completed"] == cq["submitted"]
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# cancel / deadline lifecycle
+
+
+def test_cancel_wins_only_while_pending():
+    c = _host(io_depth=2)                 # dispatch pool of exactly 2
+    fd = c.open("/cq-cancel", create=True)
+    c.pwrite(fd, _payload(64 * 1024, seed=6), 0)
+    with _SlowReads(c.io) as slow:
+        hs = [c.submit_pread(fd, 4096, i * 4096) for i in range(4)]
+        assert slow.started.acquire(timeout=10.0)
+        assert slow.started.acquire(timeout=10.0)            # both workers provably running
+        assert hs[2].cancel()             # still pending: cancel wins
+        assert hs[3].cancel()
+        assert not hs[3].cancel()         # idempotent-but-false second try
+        slow.gate.set()
+        assert not hs[0].cancel()         # was already running
+        hs[0].wait(), hs[1].wait()
+    for h in (hs[2], hs[3]):
+        with pytest.raises(CancelledError):
+            h.wait()
+    cq = c.io.cq.counters()
+    assert cq["cancelled"] == 2
+    assert cq["completed"] == cq["submitted"] - 2
+    assert c.io.cq.inflight() == 0
+    c.close()
+
+
+def test_deadline_on_pending_handle_cancels_in_place():
+    c = _host(io_depth=2)
+    fd = c.open("/cq-deadline-pending", create=True)
+    c.pwrite(fd, _payload(32 * 1024, seed=7), 0)
+    with _SlowReads(c.io) as slow:
+        hs = [c.submit_pread(fd, 4096, 0) for _ in range(3)]
+        assert slow.started.acquire(timeout=10.0)
+        assert slow.started.acquire(timeout=10.0)
+        with pytest.raises(OpTimeout) as ei:   # hs[2] never dispatched
+            hs[2].wait(timeout=0.05)
+        assert "cancelled in place" in str(ei.value)
+        assert hs[2].done()
+        slow.gate.set()
+        hs[0].wait(), hs[1].wait()
+    assert c.io.cq.counters()["cancelled"] == 1
+    c.close()
+
+
+def test_deadline_on_running_handle_abandons_and_drains():
+    c = _host(io_depth=2)
+    fd = c.open("/cq-deadline-running", create=True)
+    want = _payload(4096, seed=8)
+    c.pwrite(fd, want, 0)
+    with _SlowReads(c.io) as slow:
+        h = c.submit_pread(fd, 4096, 0)
+        assert slow.started.acquire(timeout=10.0)   # provably running
+        with pytest.raises(OpTimeout) as ei:
+            h.wait(timeout=0.05)
+        assert "drains in background" in str(ei.value)
+        assert not h.done()               # abandoned, NOT cancelled
+        slow.gate.set()
+        assert h.wait() == want           # late reap still yields result
+    assert c.io.cq.inflight() == 0
+    c.close()
+
+
+def test_close_with_inflight_handles_drains_cleanly():
+    c = _host(io_depth=4)
+    fd = c.open("/cq-close", create=True)
+    c.pwrite(fd, _payload(128 * 1024, seed=9), 0)
+    orig = c.io._read_impl
+
+    def slowish(*a, **kw):
+        time.sleep(0.02)
+        return orig(*a, **kw)
+
+    c.io._read_impl = slowish
+    hs = [c.submit_pread(fd, 4096, i * 4096) for i in range(8)]
+    c.close()                             # drains the CQ before teardown
+    assert c.io.cq.inflight() == 0
+    for h in hs:                          # everything settled, nothing hung
+        assert h.done()
+    assert leakwitness.client_leaks(c, timeout=1.0) == []
+
+
+# ---------------------------------------------------------------------------
+# submission-ring depth bound
+
+
+def test_submission_ring_bounds_inflight_depth():
+    ring = _SubmissionRing(3, Timeouts(op_deadline_s=0.05))
+    for _ in range(3):
+        ring.acquire()
+    try:
+        with pytest.raises(OpTimeout) as ei:
+            ring.acquire(timeout=0.05)    # ring full: deadline, not hang
+        assert "submission ring full" in str(ei.value)
+    finally:
+        ring.release()
+    ring.acquire()                        # freed slot is reacquirable
+    assert ring.peak == 3                 # never exceeded the depth bound
+    for _ in range(3):
+        ring.release()
+
+
+def test_router_per_target_rings_bound_and_settle():
+    c = ROS2Client(mode="host", transport="rdma", n_targets=3,
+                   scrub_interval_s=None, io_depth=4)
+    fd = c.open("/cq-rings", create=True)
+    data = _payload(512 * 1024, seed=10)
+    c.pwrite(fd, data, 0)
+    hs = [c.submit_pread(fd, 32 * 1024, i * 32 * 1024) for i in range(16)]
+    for i, h in enumerate(hs):
+        assert h.wait() == data[i * 32 * 1024:(i + 1) * 32 * 1024]
+    for ring in c.io._rings.values():
+        assert ring.peak <= c.io.io_depth
+        assert ring._inflight == 0
+    # fleet counters merge the router CQ with every session CQ
+    cq = c.io.data_path_counters()["cq"]
+    assert cq["submitted"] >= 17
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# dpu mode: doorbell batching
+
+
+def test_dpu_submissions_share_one_doorbell_per_batch():
+    c = ROS2Client(mode="dpu", transport="rdma", scrub_interval_s=None,
+                   io_depth=4)
+    fd = c.open("/cq-dpu", create=True)
+    data = _payload(64 * 1024, seed=11)
+    c.pwrite(fd, data, 0)
+    before = c.dpu.doorbells
+    hs = [c.submit_pread(fd, 4096, i * 4096) for i in range(4)]
+    assert c.dpu.doorbells == before + 1  # batch filled: ONE crossing
+    for i, h in enumerate(hs):
+        assert h.wait() == data[i * 4096:(i + 1) * 4096]
+    # a partial batch crosses on the first wait(), again as one doorbell
+    before = c.dpu.doorbells
+    h1 = c.submit_pread(fd, 4096, 0)
+    h2 = c.submit_pread(fd, 4096, 4096)
+    assert c.dpu.doorbells == before      # queued, doorbell NOT yet rung
+    assert h1.wait() == data[:4096]
+    assert h2.wait() == data[4096:8192]
+    assert c.dpu.doorbells == before + 1
+    # cancelling a queued SQE drops it from the batch entirely
+    h3 = c.submit_pread(fd, 4096, 0)
+    assert h3.cancel()
+    with pytest.raises(CancelledError):
+        h3.wait()
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# faulted async run: correct bytes, zero leaks
+
+
+def test_faulted_async_run_is_bit_exact_and_leak_free():
+    inj = FaultInjector(schedule=[
+        ("transport.read_sg", Fault("error"), lambda m: m % 5 == 2),
+        ("transport.read_sg", Fault("partial"), lambda m: m % 7 == 3),
+    ], seed=77)
+    # tcp: its read leg traverses transport.read_sg (rdma reads ride the
+    # placement verbs — the soak covers that side)
+    c = ROS2Client(mode="host", transport="tcp", n_targets=2,
+                   scrub_interval_s=None, io_depth=8, fault_injector=inj)
+    fd = c.open("/cq-faulted", create=True)
+    data = _payload(256 * 1024, seed=12)
+    c.pwrite(fd, data, 0)
+    window = []
+    for i in range(40):
+        off = (i * 7919) % (len(data) - 8192)
+        window.append((c.submit_pread(fd, 8192, off), off))
+        if len(window) >= 8:
+            h, o = window.pop(0)
+            assert h.wait() == data[o:o + 8192]   # retried inside the op
+    for h, o in window:
+        assert h.wait() == data[o:o + 8192]
+    assert inj.counters()["recovered"].get("transport.retry", 0) >= 1
+    c.close()
+    assert leakwitness.client_leaks(c, timeout=1.0) == []
+
+
+def test_erroring_handle_reraises_and_releases_everything():
+    c = _host(io_depth=4)
+    fd = c.open("/cq-err", create=True)
+    c.pwrite(fd, _payload(16 * 1024, seed=13), 0)
+    orig = c.io._read_impl
+    boom = {"armed": True}
+
+    def flaky(*a, **kw):
+        if boom.pop("armed", False):
+            raise IOError("injected async read failure")
+        return orig(*a, **kw)
+
+    c.io._read_impl = flaky
+    bad = c.submit_pread(fd, 4096, 0)
+    good = c.submit_pread(fd, 4096, 4096)
+    results = []
+    with pytest.raises(IOError, match="injected async read"):
+        results.append(bad.wait())
+    good.wait()                           # neighbours unaffected
+    c.io._read_impl = orig
+    cq = c.io.cq.counters()
+    assert cq["completed"] == cq["submitted"]   # errors COMPLETE, not leak
+    c.close()
+    assert leakwitness.client_leaks(c, timeout=1.0) == []
+
+
+# ---------------------------------------------------------------------------
+# loader: handle-based prefetch is bit-identical to the blocking path
+
+
+def test_loader_io_depth_batches_match_blocking_path():
+    from repro.data.pipeline import ROS2TokenLoader, write_token_shards
+    c = _host(io_depth=8)
+    tokens = np.arange(30_000, dtype=np.int32) % 991
+    write_token_shards(c, "/cq-data", tokens, shard_tokens=4096)
+    ld_sync = ROS2TokenLoader(c, "/cq-data", global_batch=4, seq_len=65,
+                              io_depth=1)
+    ld_async = ROS2TokenLoader(c, "/cq-data", global_batch=4, seq_len=65,
+                               io_depth=8)
+    try:
+        for _ in range(6):
+            np.testing.assert_array_equal(ld_sync.next_batch()["tokens"],
+                                          ld_async.next_batch()["tokens"])
+    finally:
+        ld_sync.close()
+        ld_async.close()
+    c.close()

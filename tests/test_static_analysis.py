@@ -82,6 +82,45 @@ def test_lifecycle_flags_statement_inside_leak_window():
     assert _rules(bad) == ["lifecycle"]
 
 
+def test_lifecycle_flags_abandoned_submit_handle():
+    bad = _lint("""
+        def prefetch(self, fd, size, off):
+            self.client.submit_pread(fd, size, off)
+            self.steps += 1
+    """, passes=["lifecycle"])
+    assert _rules(bad) == ["lifecycle"]
+    assert "completion handle" in bad[0].msg
+
+
+def test_lifecycle_accepts_reaped_or_handed_off_submits():
+    clean = _lint("""
+        def read_sync(self, fd, size, off):
+            return self.client.submit_pread(fd, size, off).wait()
+
+        def read_windowed(self, plan):
+            window = []
+            for fd, size, off in plan:
+                window.append(self.client.submit_pread(fd, size, off))
+            return [h.wait() for h in window]
+
+        def read_named(self, fd, size, off):
+            h = self.client.submit_pread(fd, size, off)
+            self.touch()
+            return h.wait()
+
+        def read_cancelled(self, fd, size, off):
+            h = self.client.submit_pread(fd, size, off)
+            try:
+                self.touch()
+            finally:
+                h.cancel()
+
+        def submit_pread_far(self, fd, size, off):
+            return self.client.submit_pread(fd, size, off)
+    """, passes=["lifecycle"])
+    assert clean == []
+
+
 def test_timeouts_flags_literals_and_accepts_policy():
     bad = _lint("""
         import time

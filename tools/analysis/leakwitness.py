@@ -30,6 +30,7 @@ from typing import Callable, List, Optional, Set
 REPO_THREAD_PREFIXES = (
     "lease-renew", "media-scrub", "loader-producer", "dpu-", "arm",
     "cluster-router", "replica-commit", "hedge-read", "ros2-loader",
+    "cq-submit",
 )
 
 DEFAULT_SETTLE_S = 10.0
@@ -49,6 +50,18 @@ def wait_until(pred: Callable[[], bool],
 def sessions(client) -> list:
     io = client.io
     return list(io.sessions.values()) if hasattr(io, "sessions") else [io]
+
+
+def completion_queues(client) -> list:
+    """Every completion queue the client owns: one per target session
+    plus the cluster router's own client-level CQ (submit/reap fleet
+    dispatch both carry in-flight handle accounting)."""
+    cqs = [s.cq for s in sessions(client)
+           if getattr(s, "cq", None) is not None]
+    io_cq = getattr(client.io, "cq", None)
+    if io_cq is not None and all(io_cq is not c for c in cqs):
+        cqs.append(io_cq)
+    return cqs
 
 
 def drain_writebacks(client) -> None:
@@ -86,6 +99,20 @@ def client_leaks(client, timeout: float = DEFAULT_SETTLE_S) -> List[str]:
         problems.append(
             f"client rkey grants leaked: "
             f"{sorted(client.client_registry._rkeys)}")
+
+    def handles_settled() -> bool:
+        return (all(not cq.inflight() for cq in completion_queues(client))
+                and not getattr(client, "_submit_batch", ()))
+
+    if not wait_until(handles_settled, timeout):
+        held = {f"cq#{i}": cq.inflight()
+                for i, cq in enumerate(completion_queues(client))
+                if cq.inflight()}
+        queued = len(getattr(client, "_submit_batch", ()))
+        msg = f"in-flight completion handles leaked past close: {held}"
+        if queued:
+            msg += f"; {queued} queued dpu submission(s) never flushed"
+        problems.append(msg)
     return problems
 
 

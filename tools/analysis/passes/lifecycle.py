@@ -41,6 +41,48 @@ PAIRS = {
     "grant": {"retire", "revoke", "drop_dst_rkey"},
 }
 
+# submit-like APIs (the async completion-driven client): any `submit_*`
+# call mints an in-flight completion handle; it must be reaped (waited),
+# cancelled, or handed off to a longer-lived owner — the same discipline
+# as acquire/pin/grant, with the CQ leak witness as the runtime backstop.
+SUBMIT_PREFIX = "submit_"
+SUBMIT_RELEASES = {"wait", "result", "cancel", "drain", "wait_all",
+                   "wait_tag", "reap"}
+
+
+def _submit_chained(mod: Module, call: ast.Call) -> bool:
+    """`x.submit_y(...).wait()` — reaped on the spot."""
+    parent = mod.parents.get(call)
+    if isinstance(parent, ast.Attribute) \
+            and parent.attr in SUBMIT_RELEASES:
+        gp = mod.parents.get(parent)
+        return isinstance(gp, ast.Call) and gp.func is parent
+    return False
+
+
+def _waited_by_name(mod: Module, call: ast.Call, fn: ast.AST) -> bool:
+    """The handle is assigned and later reaped by name — either as the
+    receiver of a waiter call (`h.wait()`) or as an argument to one
+    (`cq.wait_all(handles)`). `_escapes` cannot see the receiver case
+    (it deliberately skips release-call receivers), so the submit rule
+    checks it here."""
+    names = set(_assigned_names(mod, call))
+    if not names:
+        return False
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call) \
+                or attr_name(node.func) not in SUBMIT_RELEASES:
+            continue
+        roots: List[ast.AST] = list(node.args) \
+            + [kw.value for kw in node.keywords]
+        if isinstance(node.func, ast.Attribute):
+            roots.append(node.func.value)
+        for root in roots:
+            for sub in ast.walk(root):
+                if isinstance(sub, ast.Name) and sub.id in names:
+                    return True
+    return False
+
 
 def _is_with_context(mod: Module, call: ast.Call) -> bool:
     parent = mod.parents.get(call)
@@ -113,9 +155,15 @@ def _assigned_names(mod: Module, call: ast.Call) -> List[str]:
     return names
 
 
-def _escapes(mod: Module, call: ast.Call, fn: ast.AST, releases) -> bool:
+def _escapes(mod: Module, call: ast.Call, fn: ast.AST, releases,
+             receiver_owns: bool = True) -> bool:
     """Ownership transfer: the acquired value outlives the function by
-    design, so pairing is someone else's (witnessed) responsibility."""
+    design, so pairing is someone else's (witnessed) responsibility.
+
+    ``receiver_owns`` covers result-less acquires (``lease.pin()``) where
+    the RECEIVER is the tracked resource; submit calls pass False — their
+    receiver is the factory, and a discarded return value means the
+    minted handle went nowhere."""
     parent = mod.parents.get(call)
     # returned / yielded directly, or stored onto an attribute/container
     if isinstance(parent, (ast.Return, ast.Yield, ast.YieldFrom)):
@@ -128,6 +176,8 @@ def _escapes(mod: Module, call: ast.Call, fn: ast.AST, releases) -> bool:
         return True                      # fed straight into another call
     names = _assigned_names(mod, call)
     if not names:
+        if not receiver_owns:
+            return False
         # result-less acquires (`lease.pin()`): the RECEIVER is the
         # tracked resource — a receiver that is stored state
         # (self.x.pin()) or escapes by name transfers ownership to the
@@ -177,21 +227,40 @@ def run(mod: Module) -> List[Finding]:
         if not isinstance(node, ast.Call):
             continue
         name = attr_name(node.func)
-        if name not in PAIRS or not isinstance(node.func, ast.Attribute):
+        if not isinstance(node.func, ast.Attribute):
             continue
-        releases = PAIRS[name]
+        is_submit = name is not None and name.startswith(SUBMIT_PREFIX)
+        if name not in PAIRS and not is_submit:
+            continue
+        releases = SUBMIT_RELEASES if is_submit else PAIRS[name]
         fn = enclosing_function(mod, node)
         if fn is None:
             continue                     # module-level: out of scope
-        if getattr(fn, "name", "") in {name} | releases:
+        fn_name = getattr(fn, "name", "")
+        if fn_name in {name} | releases:
             continue                     # the resource API's own impl
+        if is_submit and fn_name.startswith(SUBMIT_PREFIX):
+            continue                     # delegating submit wrappers
+        if is_submit and _submit_chained(mod, node):
+            continue
         if _is_with_context(mod, node):
             continue
         if _paired_in_try(mod, node, releases):
             continue
-        if _escapes(mod, node, fn, releases):
+        if is_submit and _waited_by_name(mod, node, fn):
+            continue
+        if _escapes(mod, node, fn, releases,
+                    receiver_owns=not is_submit):
             continue
         recv = _receiver_root(node) or "<expr>"
+        if is_submit:
+            out.append(Finding(
+                RULE, mod.path, node.lineno,
+                f"'{recv}.{name}(...)' returns an in-flight completion "
+                f"handle that is never waited, cancelled or handed off — "
+                f"reap it ({'/'.join(sorted(SUBMIT_RELEASES))}), or "
+                f"transfer ownership to a longer-lived structure"))
+            continue
         out.append(Finding(
             RULE, mod.path, node.lineno,
             f"'{recv}.{name}(...)' result may leak on exception paths — "
