@@ -15,12 +15,12 @@ lint:                 ## repo-invariant linter (tools/analysis), <2s
 bench:                ## full data-path benchmark -> BENCH_data_path.json
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_data_path.py
 
-bench-smoke:          ## ~30s gate: fails if zero_copy regresses below sg
+bench-smoke:          ## ~45s gate: fails if zero_copy regresses below sg
 	bash benchmarks/smoke.sh
 
-# check = lint + witnessed tier-1 tests + the smoke gate (4-target
-# two-domain pool map: data-path, control-path, cluster-routing, fault
-# and EC regressions all fail fast; the lock-order and leak witnesses
-# ride the test run) — run it before landing anything that touches the
-# stack.
+# check = lint + witnessed tier-1 tests + the smoke gate (8-target
+# four-domain pool map: data-path, control-path, cluster-routing,
+# scaling, fault, EC and delta-RMW regressions all fail fast; the
+# lock-order and leak witnesses ride the test run) — run it before
+# landing anything that touches the stack.
 check: lint test-witnessed bench-smoke  ## lint + tests + smoke gate

@@ -314,30 +314,49 @@ def _bench_device_direct(n_tensors: int = 96,
             "host": run("host"), "dpu": run("dpu")}
 
 
-def _bench_cluster(passes: int = 4) -> dict:
-    """Striped sequential reads on a 2-target pool map vs the 1-target
-    baseline (host/rdma). Measures the real routed data path end to end —
-    bit-exact roundtrip, per-target placement spread, one-copy/zero-
-    acquire read gates on the striped path — and reports fleet striped-
-    read capacity: ONE target's calibrated network+server+media pipeline
-    (the same MVA model the paper figures use) multiplied by the MEASURED
-    placement spread (1 / max target share). Perfect striping doubles the
-    fleet's capacity; a routing regression that collapses onto one target
-    leaves it at 1x and FAILS the >= 1.6x gate. (Wall-clock per pass is
-    reported for reference; on a shared 2-core CI host the functional
-    simulator is GIL-bound, so capacity scaling is gated on the
-    calibrated model + measured spread, exactly like figs 3-5.)"""
+_FLEET_DOMAINS = {
+    8: ["a", "a", "b", "b", "c", "c", "d", "d"],
+    16: ["a"] * 4 + ["b"] * 4 + ["c"] * 4 + ["d"] * 4,
+}
+
+
+def _bench_cluster(passes: int = 4, ns=(1, 2, 8)) -> dict:
+    """Striped sequential reads on 2/8(/16)-target pool maps vs the
+    1-target baseline (host/rdma). Measures the real routed data path end
+    to end — bit-exact roundtrip, per-target placement spread, one-copy/
+    zero-acquire read gates on the striped path — and reports fleet
+    striped-read capacity: ONE target's calibrated network+server+media
+    pipeline (the same MVA model the paper figures use) multiplied by the
+    MEASURED placement spread (1 / max target share). Perfect striping
+    doubles the 2-target fleet's capacity; a routing regression that
+    collapses onto one target leaves it at 1x and FAILS the >= 1.6x gate.
+    (Wall-clock per pass is reported for reference; on a shared 2-core CI
+    host the functional simulator is GIL-bound, so capacity scaling is
+    gated on the calibrated model + measured spread, exactly like
+    figs 3-5.)
+
+    SCALING GATE (8+ targets): jump-hash spread over this file's 64
+    blocks is lumpy (a 64-key sample cannot measure asymptotic spread at
+    8 ways), so the wide-fleet efficiency gate integrates the SAME
+    deterministic placement function over a 4096-key stripe population:
+    capacity = pipeline / max primary share must stay >= 0.8x linear
+    (n x one target's pipeline). The real 64-block run still proves the
+    routed path itself — roundtrip, every target serving, copies/byte —
+    on the wide map."""
     from repro.core import transport_model as tm
     from repro.core.media import striped_stations
+    from repro.core.object_store import placement_order
     from repro.core.sim import mva
 
     total, chunk = 64 * MiB, 16 * MiB
-    out = {"io_bytes": total, "chunk_bytes": chunk, "gates": []}
+    out = {"io_bytes": total, "chunk_bytes": chunk, "gates": [],
+           "n_targets": list(ns)}
     rng = np.random.default_rng(7)
     data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
-    for n in (1, 2):
+    for n in ns:
+        doms = _FLEET_DOMAINS.get(n)
         c = ROS2Client(mode="host", transport="rdma", n_targets=n,
-                       n_devices=2, scrub_interval_s=None)
+                       n_devices=2, domains=doms, scrub_interval_s=None)
         fd = c.open("/stripe", create=True)
         for off in range(0, total, chunk):
             c.pwrite(fd, data[off:off + chunk], off)
@@ -380,7 +399,7 @@ def _bench_cluster(passes: int = 4) -> dict:
         x, _ = mva(st, 32)
         pipeline_bw = x * BLOCK
         striped_bw = pipeline_bw / max(shares.values())
-        out[f"{n}_target"] = {
+        entry = {
             "wall_read_s": times,
             "wall_read_MiBps": total / MiB / (sum(times[-2:]) / 2),
             "placed_bytes_per_target": placed,
@@ -389,9 +408,32 @@ def _bench_cluster(passes: int = 4) -> dict:
             "read_staging_acquires": read_delta["staging.acquires"],
             "pipeline_GiBps": pipeline_bw / (1 << 30),
             "striped_read_GiBps": striped_bw / (1 << 30),
+            "placement_cache_hits": (c.io.data_path_counters()
+                                     .get("cluster") or
+                                     {}).get("placement_cache_hits", 0),
             "map_version": (c.io.data_path_counters().get("cluster") or
                             {}).get("map_version", 1),
         }
+        if n >= 8:
+            # population placement spread drives the wide scaling gate
+            dt = tuple(doms) if doms else None
+            counts: dict = {}
+            for o in range(1, 65):
+                for bkey in range(64):
+                    tid0 = placement_order(n, o, str(bkey), dt)[0]
+                    counts[tid0] = counts.get(tid0, 0) + 1
+            pop_share = max(counts.values()) / (64 * 64)
+            pop_bw = pipeline_bw / pop_share
+            entry["population_share_max"] = pop_share
+            entry["population_striped_read_GiBps"] = pop_bw / (1 << 30)
+            entry["scaling_efficiency"] = round(
+                pop_bw / (n * pipeline_bw), 3)
+            if pop_bw < 0.8 * n * pipeline_bw:
+                out["gates"].append(
+                    f"cluster {n}-target striped-read capacity "
+                    f"{entry['scaling_efficiency']:.2f}x linear < 0.8x "
+                    f"(population max share {pop_share:.3f})")
+        out[f"{n}_target"] = entry
         c.close()
     out["read_speedup"] = (out["2_target"]["striped_read_GiBps"]
                            / out["1_target"]["striped_read_GiBps"])
@@ -487,15 +529,28 @@ class _StarvedPacer:
 
 def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
               passes: int = 4) -> dict:
-    """Erasure-coding gate (PR 7): ec(2,1) vs replication-3 on the same
-    4-target, two-domain map — both survive any single target loss, but
-    the stripe moves 1.5x the logical bytes where the replica fan-out
-    moves 3x. Fleet write capacity is gated on the calibrated per-target
-    pipeline divided by the MEASURED per-target media spread and MEASURED
-    write amplification (wall-clock rides the interpret-mode Pallas
-    GF(256) matmul on CI hosts — the CPU stand-in for the offloaded
-    parity engine — so, exactly like the cluster section, capacity gates
-    ride the calibrated model while wall-clock is reported alongside).
+    """Erasure-coding gate (PR 7 + PR 10): ec(4,2) vs replication-3 on
+    the same 8-target, four-domain map — both survive any double target
+    loss... the stripe moves 1.5x the logical bytes where the replica
+    fan-out moves 3x. Fleet write capacity is gated on the calibrated
+    per-target pipeline divided by the MEASURED per-target media spread
+    and MEASURED write amplification (wall-clock rides the interpret-mode
+    Pallas GF(256) matmul on CI hosts — the CPU stand-in for the
+    offloaded parity engine — so, exactly like the cluster section,
+    capacity gates ride the calibrated model while wall-clock is reported
+    alongside).
+
+    DELTA-PARITY GATES (PR 10): a one-cell overwrite must take the
+    delta-RMW path — wire bytes <= (1 new cell + 1 old-cell fetch +
+    p parity deltas) + eps instead of the k-cell stripe read the full
+    re-encode pays, `ec.delta_writes` > 0, `ec.delta_bytes_saved`
+    covering the k-1 unread cells, bit-exact readback; and a separate
+    leg re-proves the delta path under the PR-6 fault schedule: clean
+    overwrites stay delta-driven and bit-exact, a write with a parity
+    target DOWN degrades to the counted full re-encode
+    (`ec.delta_fallbacks` + the `ec.delta_fallback` recovery path),
+    rebuild heals it, and nothing leaks.
+
     Then the failure legs run for real: degraded read with one target
     down must be bit-exact with reconstructions counted, outage writes
     must mark ONLY cells homed on the dead target, and rebuild must
@@ -508,7 +563,8 @@ def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
     gates = []
     rng = np.random.default_rng(17)
     data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
-    doms = ["a", "a", "b", "b"]
+    n_targets = 8
+    doms = _FLEET_DOMAINS[n_targets]
 
     def flush(c):
         for t in c.cluster.targets:
@@ -517,7 +573,7 @@ def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
                     d.writeback()
 
     def run(**kw):
-        c = ROS2Client(mode="host", transport="rdma", n_targets=4,
+        c = ROS2Client(mode="host", transport="rdma", n_targets=n_targets,
                        domains=doms, scrub_interval_s=None, **kw)
         fd = c.open("/ec", create=True)
         walls = []
@@ -551,17 +607,45 @@ def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
             "fleet_write_GiBps": pipeline_bw / share / amp / (1 << 30),
         }
 
-    cec, fd, ec = run(ec=(2, 1))
+    cec, fd, ec = run(ec=(4, 2))
     crep, _, rep = run(replication=3)
     crep.close()
     if ec["fleet_write_GiBps"] < rep["fleet_write_GiBps"]:
-        gates.append(f"ec(2,1) fleet seq-write {ec['fleet_write_GiBps']:.1f}"
+        gates.append(f"ec(4,2) fleet seq-write {ec['fleet_write_GiBps']:.1f}"
                      f" GiB/s < replication-3 {rep['fleet_write_GiBps']:.1f}"
                      f" GiB/s")
     if ec["write_amplification"] > 0.6 * rep["write_amplification"]:
         gates.append(f"ec write amplification "
                      f"{ec['write_amplification']:.2f}x not <= 0.6 * "
                      f"replication-3 {rep['write_amplification']:.2f}x")
+
+    # -- delta-parity RMW: one-cell overwrite wire economics -------------
+    k, p, cs = cec.io._ec
+    before_ctr = _flat(cec.io.data_path_counters())   # drains stragglers
+    cell_new = rng.integers(0, 256, cs, dtype=np.uint8).tobytes()
+    cec.pwrite(fd, cell_new, 0)
+    delta_ctr = _delta(before_ctr, _flat(cec.io.data_path_counters()))
+    data = cell_new + data[cs:]
+    wire = delta_ctr["transport.bytes_moved"]
+    budget = (2 + p) * cs + cs // 8       # new cell + old fetch + p deltas
+    delta = {"overwrite_bytes": cs,
+             "wire_bytes_moved": wire,
+             "wire_budget": budget,
+             "full_path_stripe_read_bytes": k * cs,
+             "delta_writes": delta_ctr["ec.delta_writes"],
+             "delta_bytes_saved": delta_ctr["ec.delta_bytes_saved"]}
+    if delta_ctr["ec.delta_writes"] < 1:
+        gates.append("ec one-cell overwrite did not take the delta-parity "
+                     "path (ec.delta_writes == 0)")
+    if wire > budget:
+        gates.append(f"ec delta overwrite moved {wire} wire bytes > "
+                     f"(1 new + 1 old + {p} parity) cells + eps = {budget}")
+    if delta_ctr["ec.delta_bytes_saved"] < (k - 1) * cs:
+        gates.append(f"ec delta path saved "
+                     f"{delta_ctr['ec.delta_bytes_saved']} stripe-read "
+                     f"bytes < the k-1 unread cells ({(k - 1) * cs})")
+    if cec.pread(fd, total, 0) != data:
+        gates.append("ec delta overwrite readback not bit-exact")
 
     # degraded read: one target down, every stripe reconstructs in place
     cec.cluster.fail_target(2)
@@ -610,8 +694,79 @@ def _bench_ec(total: int = 16 * MiB, chunk: int = 4 * MiB,
     if ctr["ec"]["degraded_reads"] != degraded_reads:
         gates.append("ec post-rebuild read still reconstructing (rebuild "
                      "left cells unhealed)")
-    out = {"k": k, "p": p, "io_bytes": total, "n_targets": 4,
+
+    # -- delta RMW under the PR-6 injector: bit-exact, counted fallback --
+    from repro.core.faults import Fault, FaultInjector
+    inj = FaultInjector([
+        ("transport.write_sg", Fault("error"), lambda m: m % 13 == 3),
+        ("transport.place_sg", Fault("partial"), lambda m: m % 11 == 4),
+        ("media.write", Fault("error",
+                              exc=lambda: IOError("injected media write")),
+         lambda m: m % 41 == 7),
+        ("media.read", Fault("error",
+                             exc=lambda: IOError("injected media read")),
+         lambda m: m % 29 == 5),
+    ], seed=77)
+    cdf = ROS2Client(mode="host", transport="rdma", n_targets=n_targets,
+                     domains=doms, ec=(4, 2), scrub_interval_s=None,
+                     fault_injector=inj)
+    fdd = cdf.open("/ec-delta", create=True)
+    k2, p2, cs2 = cdf.io._ec
+    span = 4 * BLOCK
+    shadow = bytearray(rng.integers(0, 256, span,
+                                    dtype=np.uint8).tobytes())
+    cdf.pwrite(fdd, bytes(shadow), 0)
+    for i in range(8):                 # clean delta RMWs under injection
+        off = (i % 4) * BLOCK + (i % k2) * cs2
+        pay = rng.integers(0, 256, cs2, dtype=np.uint8).tobytes()
+        cdf.pwrite(fdd, pay, off)
+        shadow[off:off + cs2] = pay
+    ctr_d = cdf.io.data_path_counters()
+    if ctr_d["ec"]["delta_writes"] < 1:
+        gates.append("ec faulted delta leg: no overwrite took the delta "
+                     "path under injection")
+    # a parity target down must degrade the delta write to the counted
+    # full re-encode, then rebuild heals going home
+    oid = sorted({o for cont in cdf.ccontainer._per_target.values()
+                  for o in cont._objects})[0]
+    ptid = cdf.io._ec_order(oid, 0)[k2]   # block 0's first parity home
+    cdf.cluster.fail_target(ptid)
+    fb0 = cdf.io.data_path_counters()["ec"]["delta_fallbacks"]
+    pay = rng.integers(0, 256, cs2, dtype=np.uint8).tobytes()
+    cdf.pwrite(fdd, pay, 0)
+    shadow[0:cs2] = pay
+    if cdf.io.data_path_counters()["ec"]["delta_fallbacks"] <= fb0:
+        gates.append("ec delta write with a parity target down did not "
+                     "count a fallback to full re-encode")
+    if inj.counters()["recovered"].get("ec.delta_fallback", 0) < 1:
+        gates.append("ec.delta_fallback recovery path never recorded")
+    cdf.cluster.recover_target(ptid)
+    if cdf.pread(fdd, span, 0) != bytes(shadow):
+        gates.append("ec faulted delta leg not bit-exact")
+    dsessions = list(cdf.io.sessions.values())
+    deadline = time.perf_counter() + 5.0
+    while (any(s.ring.donated_slots() for s in dsessions)
+           and time.perf_counter() < deadline):
+        flush(cdf)
+        time.sleep(0.01)
+    if any(s.ring.donated_slots() for s in dsessions):
+        gates.append("ec faulted delta leg leaked donated staging leases")
+    for s in dsessions:
+        with s.ring._cv:
+            if sorted(s.ring._free) != list(range(s.ring.n_slots)):
+                gates.append("ec faulted delta leg leaked staging slots")
+                break
+    fdc = inj.counters()
+    ctr_d = cdf.io.data_path_counters()
+    delta_faulted = {"injected": fdc["total_injected"],
+                     "recovered": fdc["recovered"],
+                     "delta_writes": ctr_d["ec"]["delta_writes"],
+                     "delta_fallbacks": ctr_d["ec"]["delta_fallbacks"]}
+    cdf.close()
+
+    out = {"k": k, "p": p, "io_bytes": total, "n_targets": n_targets,
            "domains": doms, "ec": ec, "replication3": rep,
+           "delta": delta, "delta_faulted": delta_faulted,
            "fleet_write_speedup": round(ec["fleet_write_GiBps"]
                                         / rep["fleet_write_GiBps"], 2),
            "media_ratio": round(ec["write_amplification"]
@@ -869,8 +1024,10 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="host/rdma only (all three paths)")
     ap.add_argument("--smoke", action="store_true",
-                    help="~30s gate: host/rdma sg vs zero_copy, fails if "
-                         "zero_copy regresses below sg")
+                    help="~45s gate on the 8-target map: host/rdma sg vs "
+                         "zero_copy plus the scaling + delta-RMW gates, "
+                         "fails if zero_copy regresses below sg or any "
+                         "fleet gate trips")
     args = ap.parse_args(argv)
 
     combos = [("host", "rdma"), ("host", "tcp"), ("dpu", "rdma"),
@@ -885,10 +1042,10 @@ def main(argv=None) -> int:
     if args.smoke:
         paths = ["sg", "zero_copy"]
         passes = 4
-        # every existing gate re-proves on a routed 4-target map spread
-        # over two fault domains — the same fleet the EC section rides
-        n_targets = 4
-        domains = ["a", "a", "b", "b"]
+        # every existing gate re-proves on a routed 8-target map spread
+        # over four fault domains — the same fleet the EC section rides
+        n_targets = 8
+        domains = _FLEET_DOMAINS[8]
 
     runs = []
     for mode, transport in combos:
@@ -911,20 +1068,32 @@ def main(argv=None) -> int:
           f"({quorum['p50_speedup']:.1f}x, "
           f"{quorum['quorum']['quorum_acks']} acks / "
           f"{quorum['quorum']['background_commits']} bg commits)")
-    cluster = _bench_cluster()
+    # smoke trims cluster/EC pass counts (never gates) to hold ~45 s; the
+    # full bench also runs the 16-target leg of the scaling gate
+    cluster = _bench_cluster(passes=2 if args.smoke else 4,
+                             ns=(1, 2, 8) if args.smoke else (1, 2, 8, 16))
     shares = [round(s, 2) for s in
               cluster["2_target"]["placement_shares"].values()]
     print(f"cluster striped read: 1-target "
           f"{cluster['1_target']['striped_read_GiBps']:.1f} GiB/s -> "
           f"2-target {cluster['2_target']['striped_read_GiBps']:.1f} GiB/s "
           f"({cluster['read_speedup']:.2f}x, shares {shares})")
+    for n in cluster["n_targets"]:
+        if n >= 8:
+            wide = cluster[f"{n}_target"]
+            print(f"cluster {n}-target scaling: "
+                  f"{wide['population_striped_read_GiBps']:.1f} GiB/s = "
+                  f"{wide['scaling_efficiency']:.2f}x linear "
+                  f"(population max share "
+                  f"{wide['population_share_max']:.3f}, "
+                  f"{wide['placement_cache_hits']} placement cache hits)")
     faulted = _bench_faults()
     ff = faulted["faults"]
     print(f"faulted striped run: {faulted['io_bytes'] // MiB} MiB in "
           f"{faulted['wall_s']:.2f} s under {ff['total_injected']} "
           f"injections ({ff['injected_by_kind']}), recoveries "
           f"{ff['recovered']}, retried runs {faulted['retried_runs']}")
-    ec_bench = _bench_ec()
+    ec_bench = _bench_ec(passes=2 if args.smoke else 4)
     print(f"ec({ec_bench['k']},{ec_bench['p']}) fleet seq write "
           f"{ec_bench['ec']['fleet_write_GiBps']:.1f} GiB/s vs rep3 "
           f"{ec_bench['replication3']['fleet_write_GiBps']:.1f} GiB/s "
@@ -934,6 +1103,15 @@ def main(argv=None) -> int:
           f"({ec_bench['reconstructions']} cells reconstructed), rebuilt "
           f"{ec_bench['rebuilt_cells']}/{ec_bench['lost_cells']} lost "
           f"cells through {ec_bench['heal_deferrals']} heal deferrals")
+    d = ec_bench["delta"]
+    print(f"ec delta-RMW: one-cell overwrite moved "
+          f"{d['wire_bytes_moved'] / MiB:.2f} MiB wire bytes "
+          f"(budget {d['wire_budget'] / MiB:.2f}, full-path stripe read "
+          f"{d['full_path_stripe_read_bytes'] / MiB:.2f}), saved "
+          f"{d['delta_bytes_saved'] / MiB:.2f} MiB; faulted leg "
+          f"{ec_bench['delta_faulted']['delta_writes']} delta writes / "
+          f"{ec_bench['delta_faulted']['delta_fallbacks']} fallbacks "
+          f"under {ec_bench['delta_faulted']['injected']} injections")
     device_direct = _bench_device_direct()
     for m in ("host", "dpu"):
         dd = device_direct[m]

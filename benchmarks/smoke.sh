@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
-# ~30-second data-path regression gate: runs the sg vs zero_copy pair of
-# the data-path bench (host/rdma) — ON A 4-TARGET, TWO-DOMAIN POOL MAP
-# (PR 7 grew it from 2 so ec(2,1) and domain-spread placement are
-# exercisable), so cluster routing regressions fail here too — and fails
-# if the zero-copy path
+# ~45-second data-path regression gate: runs the sg vs zero_copy pair of
+# the data-path bench (host/rdma) — ON AN 8-TARGET, FOUR-DOMAIN POOL MAP
+# (PR 10 grew it from 4 so wide EC geometries and the fleet scaling gate
+# are exercisable), so cluster routing regressions fail here too — and
+# fails if the zero-copy path
 # regresses below the PR-1 scatter-gather path, OR if the control path
 # regresses above the compound+lease baseline (open→pwrite×3→close cycle
 # > 2 RPCs, warm-cache open > 0 RPCs, control bytes ≥ 1% of data-plane
@@ -12,18 +12,23 @@
 # quorum-ack write p50 must beat full-fan-out p50 under a straggler
 # replica, and batched device-direct read_tensors must meet the per-tensor
 # baseline (dpu/rdma). The PR-5 cluster section then gates striped reads:
-# bit-exact roundtrip, both targets serving placements, and 2-target
-# striped read capacity >= 1.6x the 1-target run (calibrated pipeline x
-# measured placement spread). The PR-6 fault section re-runs the striped
+# bit-exact roundtrip, every target serving placements, 2-target striped
+# read capacity >= 1.6x the 1-target run (calibrated pipeline x measured
+# placement spread), and — PR 10 — the 8-target leg's population-spread
+# capacity >= 0.8x linear. The PR-6 fault section re-runs the striped
 # workload under a seeded FaultInjector (wire errors, partial SG
 # transfers, media I/O faults) and fails unless the run stays bit-exact,
 # records transport retransmits AND media-level recoveries, and leaks
-# zero staging slots or donated leases. The PR-7 EC section gates
-# erasure coding: ec(2,1) fleet seq-write capacity >= replication-3 at
-# <= 0.6x the measured media bytes, degraded read bit-exact with
-# reconstructions counted, and marker-driven rebuild regenerating ONLY
-# the cells homed on the failed target through the idle-aware heal
-# budget. Wired into `make bench-smoke` / `make check`.
+# zero staging slots or donated leases. The EC section (PR 7 + PR 10)
+# gates erasure coding on ec(4,2)@8: fleet seq-write capacity >=
+# replication-3 at <= 0.6x the measured media bytes, a one-cell
+# overwrite riding the delta-parity RMW path at <= (1 new + 1 old +
+# p parity) cells of wire bytes with ec.delta_writes counted, degraded
+# read bit-exact with reconstructions counted, marker-driven rebuild
+# regenerating ONLY the cells homed on the failed target through the
+# idle-aware heal budget, and the delta path re-proven bit-exact and
+# leak-free under the PR-6 injector (parity-target-down degrades to the
+# counted full re-encode). Wired into `make bench-smoke` / `make check`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

@@ -411,6 +411,7 @@ class CompletionHandle:
         with cq._cv:
             first = not self._reaped
             self._reaped = True
+            cq._done.pop(self, None)
             state, err, res = self._state, self._error, self._result
         if first:
             cq._note_reap()
@@ -433,6 +434,10 @@ class _CompletionQueue:
         self.timeouts = timeouts
         self._cv = threading.Condition()
         self._inflight: set = set()
+        # settled-but-unreaped handles in completion order — the poll()
+        # list. Ordered-set shape (OrderedDict keys) so a wait()-side reap
+        # retires its handle in O(1) instead of scanning a deque.
+        self._done: "OrderedDict[CompletionHandle, None]" = OrderedDict()
         self.submitted = 0
         self.completed = 0
         self.cancelled = 0
@@ -458,6 +463,7 @@ class _CompletionQueue:
                 h._state = "error" if error is not None else "done"
                 self.completed += 1
             self._inflight.discard(h)
+            self._done[h] = None
             self._cv.notify_all()
 
     def _note_reap(self) -> None:
@@ -475,6 +481,48 @@ class _CompletionQueue:
                     "inflight_peak": self.inflight_peak,
                     "reap_batches": self.reap_batches,
                     "cancelled": self.cancelled}
+
+    def poll(self, n: Optional[int] = None) -> List[CompletionHandle]:
+        """Non-blocking CQ poll: pop up to `n` settled-but-unreaped handles
+        (all of them when `n` is None) in COMPLETION order — the hardware
+        polling idiom, so callers reap out of submission order. Returned
+        handles are settled: `wait()` on each returns (or re-raises) without
+        blocking. A handle already reaped via wait()/result() never appears;
+        popping here does not mark the handle reaped (the caller's wait()
+        still owns result/error delivery and the reap-batch count)."""
+        out: List[CompletionHandle] = []
+        with self._cv:
+            while self._done and (n is None or len(out) < n):
+                h, _ = self._done.popitem(last=False)
+                out.append(h)
+        return out
+
+    def wait_any(self, handles: Sequence[CompletionHandle],
+                 timeout: Optional[float] = None) -> List[CompletionHandle]:
+        """Block until AT LEAST one of `handles` settles; return every
+        settled one, completion-order agnostic and WITHOUT reaping (callers
+        wait() each returned handle to consume its result or error). The
+        out-of-order window primitive: a striped reader holding `depth`
+        outstanding reads retires whichever finished first instead of
+        head-of-line blocking on submission order. Timeout defaults to the
+        injectable op deadline; expiry raises OpTimeout without cancelling
+        anything."""
+        if not handles:
+            return []
+        budget = timeout if timeout is not None else self.timeouts.op_deadline_s
+        deadline = time.monotonic() + budget
+        with self._cv:
+            while True:
+                done = [h for h in handles
+                        if h._state not in ("pending", "running")]
+                if done:
+                    return done
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise OpTimeout("cq.wait_any", elapsed_s=budget,
+                                    detail=f"none of {len(handles)} handles "
+                                           "settled before deadline")
+                self._cv.wait(remaining)
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every in-flight handle settles (close path)."""
@@ -1333,6 +1381,48 @@ class _ServerIO(_SubmitReap):
         finally:
             self.creg.deregister(mr)
 
+    def xor_apply(self, oid: int, block: int, cell_off: int,
+                  delta) -> None:
+        """Ship one parity DELTA and apply it target-side — the delta-
+        parity RMW wire op. Same admission, staging-ring and transport-SG
+        discipline as `update_cell`, but the payload is a GF(256) parity
+        delta (`C[:, touched] x (old XOR new)` rows), not a cell image:
+        the engine's `DAOSObject.xor_apply` reads the stored base under
+        its RMW lock and commits base XOR delta in one epoch, so a
+        partial-stripe write costs ONE delta transfer per parity target
+        instead of a full-stripe read + re-encoded parity writes. No slot
+        donation — the staged delta is consumed inside the engine call
+        (the committed extent is the XOR result, not the staged bytes)."""
+        self._admit()
+        arr = delta if isinstance(delta, np.ndarray) \
+            else np.frombuffer(bytes(delta), np.uint8)
+        ln = int(arr.size)
+        if ln == 0:
+            return
+        obj = self.container.object(oid)
+        mr = self.creg.register(np.ascontiguousarray(arr), self.tenant)
+        epoch = self.container.next_epoch()
+        try:
+            slots = self.ring.acquire(1)
+            try:
+                s = slots[0]
+                iov = [(self.ring.offset(s), mr, 0, ln)]
+                if self.transport_kind == "rdma":
+                    self._maybe_expire_cap()
+                    self._xport_op(lambda: self.xport.write_sg(
+                        self._staging_token(), self.tenant, iov))
+                else:
+                    self._xport_op(
+                        lambda: self.xport.write_sg(self.staging, iov))
+                obj.xor_apply(str(block), AKEY, cell_off,
+                              self.ring.view(s)[:ln], epoch=epoch)
+                with self._gauge_lock:
+                    self.host_copy_bytes += ln
+            finally:
+                self.ring.release(slots)
+        finally:
+            self.creg.deregister(mr)
+
     def fetch_cell(self, oid: int, block: int, cell_off: int,
                    ln: int) -> np.ndarray:
         """Read one EC cell's raw media bytes through the staged transport
@@ -1474,6 +1564,14 @@ class _ServerIO(_SubmitReap):
         return out.tobytes()
 
 
+class _EcDeltaUnavailable(Exception):
+    """The delta-parity RMW path lost a prerequisite BEFORE dispatch (an
+    old-bytes fetch failed persistently): internal signal to fall back to
+    the full re-encode path, counted as `ec.delta_fallbacks`. Never
+    escapes the router — once deltas dispatch, failures are per-cell
+    dirty-marker events exactly like the full path's."""
+
+
 class _ClusterRouter(_SubmitReap):
     """Thin client-side router over per-target data-plane sessions.
 
@@ -1532,6 +1630,13 @@ class _ClusterRouter(_SubmitReap):
         self._crypto = crypto
         self.ec_degraded_reads = 0    # blocks served via reconstruction
         self.ec_reconstructions = 0   # cells decoded from survivors
+        self.ec_delta_writes = 0      # partial-stripe writes that took the
+        # delta-parity RMW path (old-bytes fetch + p xor_apply deltas)
+        self.ec_delta_bytes_saved = 0  # stripe-read bytes the delta path
+        # did NOT fetch vs the full k-cell re-encode read
+        self.ec_delta_fallbacks = 0   # partial writes degraded to a full
+        # re-encode (touched/parity target down, or old-bytes fetch lost
+        # its target mid-op)
         self._ec_pending: List = []   # straggler cell writes in flight
         self._sid: Optional[int] = None
         self.cache = None
@@ -1546,6 +1651,12 @@ class _ClusterRouter(_SubmitReap):
         self.target_retries = 0       # retry ROUNDS after a refresh
         self.retried_runs = 0         # per-target runs re-dispatched —
         # surgical: only the FAILED target's fragments, never the whole op
+        # (oid, dkey) -> tuple of target ids in placement order, valid for
+        # the ADOPTED map only (_adopt clears it): striped ops recompute
+        # the jump-hash projection per block per op otherwise
+        self._place_cache: "OrderedDict[Tuple[int, str], Tuple[int, ...]]" \
+            = OrderedDict()
+        self.placement_cache_hits = 0
         self._pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
         # submit/reap state: ONE shared CQ for the whole client plus one
@@ -1592,6 +1703,7 @@ class _ClusterRouter(_SubmitReap):
         ec = red.get("ec") if isinstance(red, dict) else None
         with self._map_lock:
             self._map_version = m["version"]
+            self._place_cache.clear()   # placement keys off the map shape
             self._up = {t["target_id"]: t["up"] for t in m["targets"]}
             self._tids = sorted(self._up)
             by_tid = {t["target_id"]: t.get("domain") for t in m["targets"]}
@@ -1626,14 +1738,43 @@ class _ClusterRouter(_SubmitReap):
         if stale:                     # a stale map is ONE refresh, ever
             self._refresh_map()
 
+    _PLACE_CACHE_CAP = 4096           # ~64 open files x 64 blocks resident
+
+    def _placement(self, oid: int, dkey: str) -> Tuple[int, ...]:
+        """Target ids in the block's deterministic placement order,
+        memoized per (oid, dkey) against the ADOPTED map. placement_order
+        is a jump-hash + domain-spread walk recomputed per BLOCK on every
+        striped op today; this LRU turns the hot re-visit into one dict
+        hit (`cluster.placement_cache_hits`). Keyed off the map implicitly:
+        `_adopt` clears the cache whenever a new map version lands, so a
+        cached order can never outlive the membership/domain layout it was
+        computed from (up/down flips do NOT reshuffle placement — liveness
+        is applied by the callers on top of the cached order)."""
+        key = (oid, dkey)
+        with self._map_lock:
+            hit = self._place_cache.get(key)
+            if hit is not None:
+                self._place_cache.move_to_end(key)
+                self.placement_cache_hits += 1
+                return hit
+            tids, doms = list(self._tids), self._domains
+        order = tuple(tids[i] for i in
+                      placement_order(len(tids), oid, dkey, doms))
+        with self._map_lock:
+            # cache only against the map we computed from (racing _adopt)
+            if tids == self._tids and doms == self._domains:
+                self._place_cache[key] = order
+                while len(self._place_cache) > self._PLACE_CACHE_CAP:
+                    self._place_cache.popitem(last=False)
+        return order
+
     def _route_block(self, oid: int, b: int) -> int:
         """First UP target in the block's deterministic placement order
         (domain-aware when the pool map labels fault domains: failover
         prefers a target in a DIFFERENT domain than the primary's)."""
         with self._map_lock:
-            tids, up, doms = self._tids, dict(self._up), self._domains
-        for idx in placement_order(len(tids), oid, str(b), doms):
-            tid = tids[idx]
+            up = dict(self._up)
+        for tid in self._placement(oid, str(b)):
             if up.get(tid):
                 return tid
         raise StorageError("no live targets in pool map")
@@ -1939,10 +2080,8 @@ class _ClusterRouter(_SubmitReap):
 
     def _ec_order(self, oid: int, b: int) -> List[int]:
         with self._map_lock:
-            tids, doms = self._tids, self._domains
             k, p, _cs = self._ec
-        order = [tids[i]
-                 for i in placement_order(len(tids), oid, str(b), doms)]
+        order = list(self._placement(oid, str(b)))
         if len(order) < k + p:
             raise StorageError(
                 f"ec({k},{p}) needs {k + p} targets, pool map has "
@@ -2074,11 +2213,34 @@ class _ClusterRouter(_SubmitReap):
         the new version (the RMW image reconstructs their true content),
         clearing the ledger for everything that lands. After any write,
         the dirty set is exactly {cells on down targets} ∪ {cells that
-        failed THIS write} — bounded by the pre-checks below."""
+        failed THIS write} — bounded by the pre-checks below.
+
+        DELTA-PARITY RMW: a partial write to a CLEAN stripe whose touched
+        data + parity targets are all up takes `_ec_write_block_delta`
+        instead — it never reads the untouched k-|touched| cells. This
+        full path survives as the stripe-covering write, the heal-on-write
+        path, and the counted fallback when the delta path's
+        prerequisites fail (`ec.delta_fallbacks`)."""
         k, p, cs = self._ec
         ln = int(frag.size)
         order = self._ec_order(oid, b)
         pre_dirty = {c for c in self._ec_read_dirty(oid, b) if c < k + p}
+        partial = not (bo == 0 and ln == BLOCK)
+        dtouch = sorted(set(range(bo // cs, (bo + ln - 1) // cs + 1)))
+        if partial and not pre_dirty and len(dtouch) < k:
+            with self._map_lock:
+                up = dict(self._up)
+            if all(up.get(order[c])
+                   for c in dtouch + list(range(k, k + p))):
+                try:
+                    self._ec_write_block_delta(rs, oid, b, bo, frag,
+                                               order, dtouch)
+                    return
+                except _EcDeltaUnavailable:
+                    pass          # prerequisites lost mid-op: re-encode
+            with self._map_lock:
+                self.ec_delta_fallbacks += 1
+            note_recovery(self._faults, "ec.delta_fallback")
         if bo == 0 and ln == BLOCK:
             media = self._ec_media_image(np.ascontiguousarray(frag),
                                          oid, b, 0)
@@ -2164,11 +2326,105 @@ class _ClusterRouter(_SubmitReap):
                 f"ec({k},{p}) write lost {len(set(down) | set(failed))} "
                 f"cells of block {b} — stripe below k clean cells")
 
+    def _ec_write_block_delta(self, rs, oid: int, b: int, bo: int,
+                              frag: np.ndarray, order: Sequence[int],
+                              touched: Sequence[int]) -> None:
+        """Delta-parity RMW: the small-write path that never reads the
+        stripe. GF(256) linearity means P' = P XOR C[:, touched]·Δ with
+        Δ = old XOR new over the media image of exactly the touched data
+        cells — so this fetches ONLY the old bytes under the write (one
+        sub-cell span per touched cell, never the untouched k-|touched|
+        cells), computes the p parity deltas with the same Pallas kernel
+        as the encoder, and ships each as ONE `xor_apply` to its parity
+        target (engine-side read-modify-XOR — no per-parity-cell fetch
+        round-trip). Wire bytes for a one-cell overwrite drop from
+        k-cells-read + p-cells-written to 1 read + p deltas; the saving
+        is accounted in `ec.delta_bytes_saved`.
+
+        Correctness notes: stragglers are drained first (an in-flight
+        ABSOLUTE parity image from a previous write would land over the
+        xor'd extent with a stale base); holes read zeros so a first
+        write to a sparse stripe deltas against P=0 and lands the exact
+        encode; the engine aborts failed commits atomically, so the
+        bounded `_ec_retry` re-reads an unchanged base. Every job runs
+        synchronously — a failed cell is dirty-marked exactly like the
+        full path (parity was applied for the INTENDED new data, so
+        rebuild decodes the marked cell to that content)."""
+        k, p, cs = self._ec
+        ln = int(frag.size)
+        self._ec_drain()
+        # the caller judged the stripe clean BEFORE the drain — a
+        # straggler that failed while draining has just ledgered a cell,
+        # and delta-ing against its stale media bytes would bake the lie
+        # into parity (reads decode-around the mark, so the corruption
+        # would surface as wrong reconstructed bytes). Re-check.
+        if self._ec_read_dirty(oid, b):
+            raise _EcDeltaUnavailable("stripe went dirty during drain")
+        new_media = self._ec_media_image(frag, oid, b, bo)
+        # one shared cell-coordinate window [w0, w1) covers every touched
+        # span: one delta row per touched cell, one xor_apply per parity
+        w0 = min(max(bo, i * cs) - i * cs for i in touched)
+        w1 = max(min(bo + ln, (i + 1) * cs) - i * cs for i in touched)
+        deltas = np.zeros((len(touched), w1 - w0), np.uint8)
+        fetched = 0
+        try:
+            for r, i in enumerate(touched):
+                lo, hi = max(bo, i * cs), min(bo + ln, (i + 1) * cs)
+                old = self._ec_retry(
+                    lambda tid=order[i], lo=lo, hi=hi:
+                    self.sessions[tid].fetch_cell(oid, b, lo, hi - lo))
+                fetched += hi - lo
+                deltas[r, lo - i * cs - w0:hi - i * cs - w0] = \
+                    old ^ new_media[lo - bo:hi - bo]
+        except StorageError as e:
+            raise _EcDeltaUnavailable(str(e)) from e
+        pdeltas = np.asarray(
+            rs.ec_parity_delta(k, p, list(touched), deltas))
+        jobs: List[Tuple[int, Callable[[_ServerIO], None]]] = []
+        for i in touched:
+            lo, hi = max(bo, i * cs), min(bo + ln, (i + 1) * cs)
+            sub = frag[lo - bo:hi - bo]
+            jobs.append((i, lambda s, fo=b * BLOCK + lo, sub=sub:
+                         s.writev(oid, fo, [sub])))
+        for j in range(p):
+            jobs.append((k + j, lambda s, co=(k + j) * cs + w0,
+                         pay=pdeltas[j]: s.xor_apply(oid, b, co, pay)))
+
+        failed: List[int] = []
+        flock = threading.Lock()
+
+        def run(cell: int, fn) -> None:
+            try:
+                self._ec_retry(lambda: fn(self.sessions[order[cell]]))
+            except StorageError:
+                with flock:
+                    failed.append(cell)
+                self._ec_mark_dirty(oid, b, [cell])
+                note_recovery(self._faults, "ec.cell_write_degraded")
+
+        if len(jobs) == 1:
+            run(*jobs[0])
+        else:
+            pool = self._get_pool()
+            for f in [pool.submit(run, cell, fn) for cell, fn in jobs]:
+                f.result()
+        with self._map_lock:
+            self.ec_delta_writes += 1
+            self.ec_delta_bytes_saved += k * cs - fetched
+        if len(set(failed)) > p:
+            raise StorageError(
+                f"ec({k},{p}) delta write lost {len(set(failed))} cells "
+                f"of block {b} — stripe below k clean cells")
+
     def _ec_read_media_block(self, rs, oid: int, b: int) -> np.ndarray:
         """The stripe's full media-domain image (k*cs bytes, holes as
         zeros) for read-modify-write parity: clean up-cells are fetched
-        raw; missing ones reconstruct from survivors."""
+        raw; missing ones reconstruct from survivors. Stragglers from a
+        previous quorum-acked write are joined first — the RMW base must
+        be the FINAL image, or the re-encoded parity bakes in stale
+        cells."""
         k, p, cs = self._ec
+        self._ec_drain()
         out = np.empty(BLOCK, np.uint8)
         got = self._ec_fetch_cells(rs, oid, b, list(range(k)))
         for i in range(k):
@@ -2178,7 +2434,13 @@ class _ClusterRouter(_SubmitReap):
     def _ec_gather_into(self, oid: int, offset: int,
                         dsts: Sequence) -> int:
         from repro.kernels.rs_parity import ops as rs
-        self._ec_reap()
+        # JOIN stragglers, don't just harvest: at wide geometries the
+        # write quorum (k+1) leaves up to p-1 cell writes in flight, and
+        # a read-after-write of exactly those cells must not observe the
+        # pre-write bytes (nor stale parity on a degraded decode).
+        # ec(2,1) never had stragglers — quorum == job count — which is
+        # why the 4-target fleet could run on a reap here.
+        self._ec_drain()
         k, p, cs = self._ec
         spans, g = [], 0
         for mr, moff, sz in dsts:
@@ -2387,6 +2649,7 @@ class _ClusterRouter(_SubmitReap):
                 "map_invalidations": self.map_invalidations,
                 "target_retries": self.target_retries,
                 "retried_runs": self.retried_runs,
+                "placement_cache_hits": self.placement_cache_hits,
             }
             if self._ec is not None:
                 out["ec"] = {
@@ -2396,6 +2659,9 @@ class _ClusterRouter(_SubmitReap):
                     "rebuilt_cells":
                         int(asdict(self._cluster_stats()).get(
                             "ec_rebuilt_cells", 0)),
+                    "delta_writes": self.ec_delta_writes,
+                    "delta_bytes_saved": self.ec_delta_bytes_saved,
+                    "delta_fallbacks": self.ec_delta_fallbacks,
                 }
         return counters_registry.verify(out)
 

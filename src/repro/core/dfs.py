@@ -442,8 +442,10 @@ class DFSClient:
         list arrives in a single SQE; each range is its own direct-splice
         placement. With a submit-capable adapter, up to `io_depth` ranges
         stay in flight as completion handles (default: the adapter's own
-        io_depth) instead of one blocking read at a time; results are
-        reaped in submit order. Returns total bytes read."""
+        io_depth) instead of one blocking read at a time; whichever
+        completion settles FIRST is reaped first (`cq.wait_any`), so one
+        slow range never head-of-line blocks the window the way
+        submit-order reaping did. Returns total bytes read."""
         depth = io_depth if io_depth is not None \
             else getattr(self.io, "io_depth", 1)
         if depth <= 1 or not hasattr(self.io, "submit_read_into"):
@@ -453,17 +455,30 @@ class DFSClient:
                 total += self.io.read_into(h.oid, offset, size, dst_mr,
                                            dst_off)
             return total
+        cq = getattr(self.io, "cq", None)
         total = 0
         window: List[Any] = []
+
+        def reap_some() -> int:
+            # out-of-submission-order reap when the adapter exposes its
+            # CQ; FIFO head otherwise (every settled handle retires, so
+            # the window never re-waits a completed op)
+            done = cq.wait_any(window) if cq is not None else [window[0]]
+            got = 0
+            for d in done:
+                window.remove(d)
+                got += d.wait()
+            return got
+
         try:
             for fd, size, offset, dst_off in descs:
                 h = self._handle(fd)
                 window.append(self.io.submit_read_into(
                     h.oid, offset, size, dst_mr, dst_off))
                 if len(window) >= depth:
-                    total += window.pop(0).wait()
+                    total += reap_some()
             while window:
-                total += window.pop(0).wait()
+                total += reap_some()
         finally:
             for w in window:    # error exit: never-dispatched handles die
                 w.cancel()      # here; running ones drain in background

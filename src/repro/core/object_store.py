@@ -171,6 +171,9 @@ class EngineStats:
     deferred_heal_bytes: int = 0     # healing bytes parked by those waits
     heal_floor_grants: int = 0       # heals forced through at the floor
     ec_rebuilt_cells: int = 0        # lost EC cells regenerated by rebuild
+    scrub_parity_checks: int = 0     # EC stripes decode-checked vs parity
+    scrub_parity_mismatches: int = 0  # torn/corrupt stripes the parity
+    # check caught (parity cells re-marked dirty for rebuild)
 
 
 class VerifiedExtentCache:
@@ -247,11 +250,46 @@ class DAOSObject:
         self.container = container
         self._extents: Dict[Tuple[str, str], List[Extent]] = {}
         self._lock = threading.Lock()
+        # serializes xor_apply read-modify-commit cycles (taken OUTSIDE
+        # _lock; update_many/fetch acquire _lock internally)
+        self._rmw_lock = threading.Lock()
 
     # -- write ---------------------------------------------------------------
     def update(self, dkey: str, akey: str, offset: int, data: bytes,
                epoch: Optional[int] = None) -> int:
         return self.update_many([(dkey, akey, offset, data)], epoch=epoch)
+
+    def xor_apply(self, dkey: str, akey: str, offset: int, delta,
+                  epoch: Optional[int] = None) -> int:
+        """Target-side read-modify-XOR — the delta-parity wire op.
+
+        The EC write path ships each parity target ONE delta
+        (`C[:, touched] x (old XOR new)` rows from the rs_parity delta
+        kernel) instead of a re-encoded cell; this op applies it where
+        the parity lives: fetch the current bytes of
+        [offset, offset+len(delta)) — holes read as zeros, the zero-pad
+        convention parity is computed under, so the first write to a
+        stripe XORs onto an implicit zero cell and still lands the exact
+        encode — XOR the delta in, and commit the result as one normal
+        epoch'd update. No stripe-wide read ever crosses the wire and
+        the client pays no second round-trip per parity cell.
+
+        Failure atomicity matches `update_many`: a failed commit aborts
+        without tearing the stored bytes, so a client retry re-reads an
+        unchanged base and re-applying the same delta is safe. Concurrent
+        xor_applies to this object serialize on `_rmw_lock` (two deltas
+        must compose by XOR, not overwrite each other's base)."""
+        arr = delta if isinstance(delta, np.ndarray) \
+            else np.frombuffer(bytes(delta), np.uint8)
+        n = int(arr.size)
+        if n == 0:
+            return self.container.next_epoch() if epoch is None else epoch
+        with self._rmw_lock:
+            base = np.frombuffer(self.fetch(dkey, akey, offset, n),
+                                 np.uint8)
+            return self.update_many(
+                [(dkey, akey, offset,
+                  np.bitwise_xor(base, arr).tobytes())], epoch=epoch)
 
     def update_many(self, items: Iterable[Tuple[str, str, int, bytes]],
                     epoch: Optional[int] = None,
@@ -1702,7 +1740,14 @@ class StorageCluster:
                 objs = list(cont._objects.items())
             for oid, obj in objs:
                 for dkey in obj.dkeys(EC_DIRTY_AKEY):
-                    marks = obj.fetch(dkey, EC_DIRTY_AKEY, 0, k + p)
+                    try:
+                        marks = attempt(lambda o=obj, d=dkey: o.fetch(
+                            d, EC_DIRTY_AKEY, 0, k + p))
+                    except StorageError:
+                        continue      # unreadable ledger copy: the union
+                        # of the other holders still drives this cycle,
+                        # and a surviving stale mark only re-triggers an
+                        # idempotent rebuild later
                     cells = {i for i, byte in enumerate(marks) if byte}
                     if cells:
                         dirty.setdefault((oid, dkey), set()).update(cells)
@@ -1941,7 +1986,115 @@ class MediaScrubber:
         with self.store._stats_lock:
             self.store.stats.scrub_bytes += scanned
             self.store.stats.scrub_corruptions += revoked
-        return {"scanned_bytes": scanned, "revoked": revoked}
+        par = self.scrub_parity(budget - scanned) if scanned < budget \
+            else {"scanned_bytes": 0, "parity_checks": 0,
+                  "parity_mismatches": 0}
+        return {"scanned_bytes": scanned + par["scanned_bytes"],
+                "revoked": revoked,
+                "parity_checks": par["parity_checks"],
+                "parity_mismatches": par["parity_mismatches"]}
+
+    def scrub_parity(self, budget_bytes: int) -> Dict[str, int]:
+        """Parity-assisted scrub of erasure-coded stripes (the EC leg).
+
+        Replicated containers re-read cached replicas against their
+        Fletcher-64; EC stripes get a STRONGER check for the same budget
+        coin: one decode-check per stripe — re-encode the k data cells
+        through the rs_parity kernel and compare against the p stored
+        parity cells. Per-extent checksums already catch in-place media
+        rot cell by cell; what only the parity equation can see is a
+        TORN stripe: a cell updated while a sibling's update was lost
+        with no dirty marker (the damage a silent partial-write or a
+        mis-applied delta would leave). A mismatching parity row is
+        re-MARKED dirty in every UP ledger — the data cells carry their
+        own checksums, so parity is the row that must re-derive — which
+        makes the next resync re-encode it from the data cells and makes
+        degraded reads stop trusting it immediately.
+
+        Stripes that are legitimately inconsistent are skipped: any
+        dirty marker set (a rebuild is already owed) or any home target
+        down (the stripe cannot be fully read). Budget is charged at
+        (k+p)*cell_bytes per checked stripe, and a rotating cursor
+        spreads coverage across cycles exactly like the vcache leg, so
+        parity verification rides the same idle-aware pacing. Counted in
+        `engine.scrub_parity_checks` / `engine.scrub_parity_mismatches`.
+        No-op when the store is not a cluster (nothing erasure-coded)."""
+        store = self.store
+        pm = getattr(store, "pool_map", None)
+        pools = getattr(store, "pools", None)
+        zero = {"scanned_bytes": 0, "parity_checks": 0,
+                "parity_mismatches": 0}
+        if pm is None or not pools:
+            return zero
+        ccs = [cc for pool in pools.values()
+               for cc in pool.containers.values()
+               if getattr(cc, "ec", None) is not None]
+        if not ccs:
+            return zero
+        from repro.kernels.rs_parity import ops as rs   # lazy: jax is heavy
+        checks = mismatches = scanned = 0
+        n = pm.n_targets()
+        doms = pm.domain_layout()
+        for cc in ccs:
+            if scanned >= budget_bytes:
+                break
+            k, p = int(cc.ec["k"]), int(cc.ec["p"])
+            cs = int(cc.ec["cell_bytes"])
+            stripes: set = set()
+            marked: set = set()
+            for cont in cc.per_target():
+                with cont._lock:
+                    objs = list(cont._objects.items())
+                for oid, obj in objs:
+                    for dk in obj.dkeys(EC_DATA_AKEY):
+                        stripes.add((oid, dk))
+                    for dk in obj.dkeys(EC_DIRTY_AKEY):
+                        if any(obj.fetch(dk, EC_DIRTY_AKEY, 0, k + p)):
+                            marked.add((oid, dk))
+            todo = sorted(stripes)
+            if not todo:
+                continue
+            start = self._cursor.get(id(cc), 0) % len(todo)
+            for i in range(len(todo)):
+                if scanned >= budget_bytes:
+                    break
+                oid, dk = todo[(start + i) % len(todo)]
+                self._cursor[id(cc)] = (start + i + 1) % len(todo)
+                if (oid, dk) in marked:
+                    continue
+                order = placement_order(n, oid, dk, doms)
+                if (len(order) < k + p
+                        or any(not pm.is_up(order[j])
+                               for j in range(k + p))):
+                    continue
+                try:
+                    rows = np.stack([
+                        store._ec_read_cell(cc, order[j], oid, dk, j, cs)
+                        for j in range(k + p)])
+                except StorageError:
+                    continue            # a cell died under us: next cycle
+                scanned += (k + p) * cs
+                checks += 1
+                expect = np.asarray(rs.ec_encode(rows[:k], p))
+                bad = [j for j in range(p)
+                       if not np.array_equal(expect[j], rows[k + j])]
+                if not bad:
+                    continue
+                mismatches += len(bad)
+                for tid in sorted(cc._per_target):
+                    if not pm.is_up(tid):
+                        continue
+                    try:
+                        cc._per_target[tid].object(oid).update_many(
+                            [(dk, EC_DIRTY_AKEY, k + j, b"\x01")
+                             for j in bad])
+                    except StorageError:
+                        continue        # a ledger holder down: union holds
+        with store._stats_lock:
+            store.stats.scrub_parity_checks += checks
+            store.stats.scrub_parity_mismatches += mismatches
+        return {"scanned_bytes": scanned, "parity_checks": checks,
+                "parity_mismatches": mismatches}
 
     def start(self, interval_s: float = 1.0) -> None:
         if self._thread is not None:

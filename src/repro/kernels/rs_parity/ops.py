@@ -68,6 +68,31 @@ def ec_encode(cells, p: int, *, tile: int = K.DEFAULT_TILE,
                      tile=tile, interpret=interpret)
 
 
+def ec_parity_delta(k: int, p: int, cells_idx: Sequence[int], deltas, *,
+                    tile: int = K.DEFAULT_TILE,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Parity deltas for a partial-stripe overwrite (delta-parity RMW).
+
+    GF(256) linearity: P'_j = P_j XOR sum_i C[j][i]*(old_i XOR new_i)
+    over exactly the touched data cells, so a sub-stripe write updates
+    parity without reading the untouched cells. `deltas` is
+    (len(cells_idx), L) u8 rows of old XOR new media bytes; `cells_idx`
+    the touched data-cell stripe indices (< k). Returns (p, L) u8 rows
+    the parity targets XOR onto their stored cells (the engine-side
+    `xor_apply` op) — bit-exact against a full re-encode (property-
+    tested vs the ref.py oracle). Same Pallas tile kernel as `ec_encode`
+    with the Cauchy column submatrix, interpret fallback included."""
+    idx = list(cells_idx)
+    if any(i < 0 or i >= k for i in idx):
+        raise ValueError(f"touched cells {idx} outside data range 0..{k - 1}")
+    deltas = jnp.asarray(deltas, jnp.uint8)
+    if deltas.shape[0] != len(idx):
+        raise ValueError(
+            f"{deltas.shape[0]} delta rows for {len(idx)} touched cells")
+    return gf_matmul(ref.cauchy_matrix(k, p)[:, idx], deltas,
+                     tile=tile, interpret=interpret)
+
+
 def ec_decode(survivors, present: Sequence[int], k: int, p: int,
               missing: Optional[Sequence[int]] = None, *,
               tile: int = K.DEFAULT_TILE,

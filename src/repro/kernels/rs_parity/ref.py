@@ -129,6 +129,27 @@ def rs_encode_np(cells: np.ndarray, p: int) -> np.ndarray:
     return gf_matmul_np(cauchy_matrix(cells.shape[0], p), cells)
 
 
+def rs_parity_delta_np(k: int, p: int, cells_idx: Sequence[int],
+                       deltas: np.ndarray) -> np.ndarray:
+    """Parity DELTAS for a partial-stripe overwrite (delta-parity RMW).
+
+    The code is linear, so P'_j = P_j XOR sum_i C[j][i]*(old_i XOR new_i)
+    over exactly the touched data cells i — a sub-cell overwrite updates
+    parity from the touched cells' XOR deltas without ever reading the
+    untouched k-|touched| cells. `deltas` is (len(cells_idx), L) u8 rows
+    (old XOR new, media domain), `cells_idx` the touched data-cell stripe
+    indices (< k). Returns (p, L) u8 rows to XOR onto the stored parity:
+    XORing them in yields bit-exactly the full re-encode of the new
+    stripe (the property test pins this)."""
+    idx = list(cells_idx)
+    if any(i < 0 or i >= k for i in idx):
+        raise ValueError(f"touched cells {idx} outside data range 0..{k - 1}")
+    if deltas.shape[0] != len(idx):
+        raise ValueError(
+            f"{deltas.shape[0]} delta rows for {len(idx)} touched cells")
+    return gf_matmul_np(cauchy_matrix(k, p)[:, idx], deltas)
+
+
 def rs_decode_np(survivors: np.ndarray, present: Sequence[int], k: int,
                  p: int,
                  missing: Optional[Sequence[int]] = None) -> np.ndarray:

@@ -222,6 +222,80 @@ def test_router_per_target_rings_bound_and_settle():
 
 
 # ---------------------------------------------------------------------------
+# CQ reap API: poll / wait_any
+
+
+def test_poll_pops_settled_handles_and_caps_at_n():
+    """poll(n) is the non-blocking hardware CQ idiom: settled-but-
+    unreaped handles pop out (at most n of them), popped handles never
+    reappear, and a handle reaped via wait() first never shows up at
+    all — so sync callers and pollers share one CQ without double
+    delivery."""
+    c = _host(io_depth=4)
+    fd = c.open("/cq-poll", create=True)
+    data = _payload(64 * 1024, seed=14)
+    c.pwrite(fd, data, 0)
+    assert c.io.cq.poll() == []           # sync ops reap inline: CQ empty
+    hs = [c.submit_pread(fd, 4096, i * 4096) for i in range(4)]
+    c.io.cq.drain()                       # settle WITHOUT reaping
+    first = c.io.cq.poll(2)
+    rest = c.io.cq.poll()
+    assert len(first) == 2 and len(rest) == 2
+    assert set(first + rest) == set(hs)
+    for i, h in enumerate(hs):            # polled, not reaped: wait()
+        assert h.done()                   # still delivers, instantly
+        assert h.wait() == data[i * 4096:(i + 1) * 4096]
+    assert c.io.cq.poll() == []           # nothing reappears
+    h = c.submit_pread(fd, 4096, 0)
+    assert h.wait() == data[:4096]        # reaped via wait() first...
+    assert c.io.cq.poll() == []           # ...never surfaces in poll
+    c.close()
+
+
+def test_poll_order_is_completion_not_submission():
+    c = _host(io_depth=2)
+    fd = c.open("/cq-poll-order", create=True)
+    c.pwrite(fd, _payload(32 * 1024, seed=15), 0)
+    with _SlowReads(c.io) as slow:
+        hs = [c.submit_pread(fd, 4096, 0) for _ in range(3)]
+        assert slow.started.acquire(timeout=10.0)
+        assert slow.started.acquire(timeout=10.0)
+        assert hs[2].cancel()             # settles FIRST while 0/1 block
+        assert c.io.cq.poll() == [hs[2]]  # completion order, out of
+        slow.gate.set()                   # submission order
+        hs[0].wait(), hs[1].wait()
+    with pytest.raises(CancelledError):   # polled handles still deliver
+        hs[2].wait()                      # their (cancelled) outcome
+    c.close()
+
+
+def test_wait_any_returns_settlers_without_reaping_and_times_out():
+    """wait_any is the out-of-order window primitive the striped reader
+    rides: it returns EVERY settled handle of the set the moment one
+    exists, leaves reaping to the caller's wait(), and expiry raises the
+    injectable deadline instead of hanging."""
+    c = _host(io_depth=2)
+    fd = c.open("/cq-wait-any", create=True)
+    data = _payload(32 * 1024, seed=16)
+    c.pwrite(fd, data, 0)
+    assert c.io.cq.wait_any([]) == []
+    with _SlowReads(c.io) as slow:
+        hs = [c.submit_pread(fd, 4096, i * 4096) for i in range(2)]
+        assert slow.started.acquire(timeout=10.0)
+        assert slow.started.acquire(timeout=10.0)
+        with pytest.raises(OpTimeout) as ei:   # nothing settled: bounded
+            c.io.cq.wait_any(hs, timeout=0.05)
+        assert "cq.wait_any" in str(ei.value)
+        slow.gate.set()
+        done = c.io.cq.wait_any(hs)
+        assert done and set(done) <= set(hs)
+    for i, h in enumerate(hs):            # wait_any did NOT reap: every
+        assert h.wait() == data[i * 4096:(i + 1) * 4096]   # result intact
+    assert c.io.cq.inflight() == 0
+    c.close()
+
+
+# ---------------------------------------------------------------------------
 # dpu mode: doorbell batching
 
 

@@ -67,6 +67,33 @@ def test_placement_spreads_blocks():
     assert primaries == {0, 1}
 
 
+def test_router_memoizes_placement_and_invalidates_on_map_change():
+    """The router computes placement_order once per (oid, dkey) and
+    serves repeats from an LRU keyed off the adopted map version: a
+    re-read of the same blocks is all cache hits, and a membership
+    change (target add) drops the cache so every block re-routes against
+    the NEW fleet — the rebalance and correctness proof rides the
+    existing add-target test; here the counter proves the memoization
+    actually fired and the invalidation actually emptied it."""
+    c = ROS2Client(mode="host", transport="rdma", n_targets=2,
+                   scrub_interval_s=None)
+    fd = c.open("/memo", create=True)
+    data = _payload(6 * BLOCK, seed=19)
+    c.pwrite(fd, data, 0)
+    assert c.pread(fd, len(data), 0) == data
+    hits = c.io.placement_cache_hits
+    assert hits >= 6                          # re-read served from cache
+    assert c.io.data_path_counters()["cluster"]["placement_cache_hits"] \
+        == c.io.placement_cache_hits
+    c.add_target()                            # map version bump: the
+    assert c.pread(fd, len(data), 0) == data  # adopt drops the cache and
+    for key, order in c.io._place_cache.items():   # every route is re-
+        assert sorted(order) == [0, 1, 2]     # computed on the NEW fleet
+    assert c.pread(fd, len(data), 0) == data  # ...then hits again
+    assert c.io.placement_cache_hits > hits
+    c.close()
+
+
 # ---------------------------------------------------------------------------
 # Striped data path through the router
 

@@ -289,6 +289,239 @@ def test_ec_rebuild_heals_through_throttle():
     c.close()
 
 
+# ---------------------------------------------------------------------------
+# delta-parity RMW: partial writes move deltas, not stripes
+
+
+def _oid(c):
+    return sorted({o for cont in c.ccontainer._per_target.values()
+                   for o in cont._objects})[0]
+
+
+def test_ec_delta_kernel_matches_full_reencode_sweep():
+    """Deterministic stand-in for the hypothesis property (which skips
+    when hypothesis is absent): across every shipped geometry, xoring
+    ec_parity_delta of the touched cells into the old parity equals a
+    full re-encode, for single-cell, multi-cell and sub-window
+    overwrites."""
+    from repro.kernels.rs_parity import ec_parity_delta
+    from repro.kernels.rs_parity.ref import rs_encode_np
+    rng = np.random.default_rng(0)
+    for k, p in [(2, 1), (4, 2), (8, 3)]:
+        size = 193
+        cells = rng.integers(0, 256, (k, size), dtype=np.uint8)
+        parity = rs_encode_np(cells, p)
+        for touched, lo, hi in [([0], 0, size),           # whole cell
+                                ([k - 1], 17, 40),        # sub-window
+                                (list(range(k))[:max(1, k - 1)], 5, size)]:
+            new = cells.copy()
+            deltas = np.zeros((len(touched), size), np.uint8)
+            for r, i in enumerate(touched):
+                fresh = rng.integers(0, 256, hi - lo, dtype=np.uint8)
+                deltas[r, lo:hi] = new[i, lo:hi] ^ fresh
+                new[i, lo:hi] = fresh
+            pd = np.asarray(ec_parity_delta(k, p, touched, deltas))
+            np.testing.assert_array_equal(parity ^ pd, rs_encode_np(new, p))
+            cells, parity = new, parity ^ pd              # chain updates
+
+
+@pytest.mark.parametrize("inline_encryption", [False, True])
+def test_ec_delta_rmw_partial_write_counted_and_bit_exact(inline_encryption):
+    """A sub-stripe overwrite of a clean stripe rides the delta path:
+    only the touched cells' old bytes are fetched (delta_bytes_saved
+    counts the k*cs - fetched the full-path RMW would have read), the
+    parity targets apply xor deltas in place, and the result is
+    indistinguishable from a full re-encode — including under inline
+    encryption (deltas are computed over the MEDIA image) and under a
+    subsequent degraded read that decodes THROUGH the delta'd parity."""
+    c = _client(n_targets=8, ec=(4, 2),
+                inline_encryption=inline_encryption,
+                domains=["a", "a", "b", "b", "c", "c", "d", "d"])
+    k, p, cs = c.io._ec
+    fd = c.open("/f", create=True)
+    shadow = bytearray(_payload(2 * BLOCK, 81))
+    c.pwrite(fd, bytes(shadow), 0)
+    assert c.io.ec_delta_writes == 0              # full-stripe: full path
+    writes = [(0, cs, 82),                        # one aligned cell
+              (cs - 9, 20, 83),                   # crosses a cell seam
+              (BLOCK + 33, 2 * cs, 84)]           # second stripe, two cells
+    for off, ln, seed in writes:
+        data = _payload(ln, seed)
+        c.pwrite(fd, data, off)
+        shadow[off:off + ln] = data
+    ctr = c.io.data_path_counters()["ec"]
+    assert ctr["delta_writes"] == len(writes)
+    assert ctr["delta_fallbacks"] == 0
+    # the one-cell overwrite alone saves (k-1) cells of old-data fetch
+    assert ctr["delta_bytes_saved"] >= (k - 1) * cs
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    # the delta'd parity must be REAL parity: drop a touched data cell's
+    # target and reconstruct through it
+    order = c.io._ec_order(_oid(c), 0)
+    c.cluster.fail_target(order[0])
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    assert c.io.data_path_counters()["ec"]["reconstructions"] >= 1
+    _assert_rings_whole(c)
+    c.close()
+
+
+def test_ec_delta_falls_back_when_parity_target_down():
+    """The delta path needs every touched-data and parity target UP (it
+    xors in place; there is no quorum to hide behind). With a parity
+    target down the write degrades to the counted full re-encode path:
+    delta_fallbacks bumps, the dirty marker lands, and rebuild heals."""
+    c = _client(n_targets=8, ec=(4, 2),
+                domains=["a", "a", "b", "b", "c", "c", "d", "d"])
+    k, p, cs = c.io._ec
+    fd = c.open("/f", create=True)
+    base = _payload(BLOCK, 91)
+    c.pwrite(fd, base, 0)
+    ptid = c.io._ec_order(_oid(c), 0)[k]          # first parity home
+    c.cluster.fail_target(ptid)
+    patch = _payload(cs, 92)
+    c.pwrite(fd, patch, 0)                        # full path, parity marked
+    shadow = patch + base[cs:]
+    ctr = c.io.data_path_counters()["ec"]
+    assert ctr["delta_writes"] == 0
+    assert ctr["delta_fallbacks"] == 1
+    assert _dirty_union(c, k + p)                 # outage marked the cell
+    c.cluster.recover_target(ptid)
+    assert not _dirty_union(c, k + p)
+    assert c.pread(fd, len(shadow), 0) == shadow
+    # healthy again: the next partial write rides the delta path
+    patch2 = _payload(cs, 93)
+    c.pwrite(fd, patch2, cs)
+    shadow = shadow[:cs] + patch2 + shadow[2 * cs:]
+    assert c.io.data_path_counters()["ec"]["delta_writes"] == 1
+    assert c.pread(fd, len(shadow), 0) == shadow
+    _assert_rings_whole(c)
+    c.close()
+
+
+def test_ec_delta_skips_dirty_stripes_and_data_outages():
+    """A touched DATA cell's target being down forces the counted
+    fallback; a pre-dirty stripe skips the delta path silently (parity
+    on media no longer matches the data, so xor-applying a delta would
+    compound the lie — and heal-on-write reconstructs the image anyway,
+    so a delta was never eligible). Correctness survives the heal."""
+    c = _client()                                 # ec(2,1) @ 4
+    k, p, cs = c.io._ec
+    fd = c.open("/f", create=True)
+    base = _payload(BLOCK, 95)
+    c.pwrite(fd, base, 0)
+    order = c.io._ec_order(_oid(c), 0)
+    c.cluster.fail_target(order[0])               # data home for cell 0
+    patch = _payload(100, 96)
+    c.pwrite(fd, patch, 10)                       # touched-data outage
+    shadow = bytearray(base)
+    shadow[10:110] = patch
+    assert c.io.ec_delta_fallbacks == 1
+    assert c.io.ec_delta_writes == 0
+    patch2 = _payload(50, 97)                     # stripe now pre-dirty:
+    c.pwrite(fd, patch2, cs + 5)                  # heal-on-write, delta
+    shadow[cs + 5:cs + 55] = patch2               # never eligible — NOT
+    assert c.io.ec_delta_fallbacks == 1           # counted as a fallback
+    assert c.io.ec_delta_writes == 0
+    c.cluster.recover_target(order[0])
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    c.close()
+
+
+def test_parity_scrub_catches_torn_stripe_and_resync_reheals():
+    """The scrubber's EC leg decode-checks stripes against their stored
+    parity — the one check that sees a TORN stripe (a parity row that no
+    longer derives from its data cells, with NO dirty marker: the damage
+    a silent partial write or a mis-applied delta would leave). The
+    mismatching row is re-marked dirty, the next resync re-encodes it,
+    and degraded reads decode correctly through the healed parity."""
+    c = _client()
+    k, p, cs = c.io._ec
+    fd = c.open("/f", create=True)
+    data = _payload(2 * BLOCK, 85)
+    c.pwrite(fd, data, 0)
+    c.io._ec_drain()
+    before = c.cluster.stats.scrub_parity_checks
+    out = c.scrubber.scrub_once()
+    assert out["parity_checks"] >= 1              # healthy stripes verify
+    assert out["parity_mismatches"] == 0
+    assert c.cluster.stats.scrub_parity_checks > before
+    # tear stripe 0: clobber its parity cell, leaving NO marker behind
+    oid = _oid(c)
+    order = c.io._ec_order(oid, 0)
+    c.io.sessions[order[k]].update_cell(
+        oid, 0, k * cs, np.zeros(cs, np.uint8))
+    out = c.scrubber.scrub_once()
+    assert out["parity_mismatches"] >= 1
+    assert c.cluster.stats.scrub_parity_mismatches >= 1
+    dirty = _dirty_union(c, k + p)                # parity row re-marked:
+    assert any(k <= i < k + p                     # rebuild is owed
+               for cells in dirty.values() for i in cells)
+    c.cluster.resync()                            # re-encodes the row
+    assert not _dirty_union(c, k + p)
+    assert c.scrubber.scrub_once()["parity_mismatches"] == 0
+    c.cluster.fail_target(order[0])               # decode THROUGH the
+    assert c.pread(fd, len(data), 0) == data      # healed parity
+    assert c.io.data_path_counters()["ec"]["reconstructions"] >= 1
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# wide geometries on the 8-16-target fleet
+
+
+_WIDE = [((4, 2), 8, ["a", "a", "b", "b", "c", "c", "d", "d"]),
+         ((8, 3), 12, ["a", "b", "c", "d"] * 3)]
+
+
+@pytest.mark.parametrize("ec,n,doms", _WIDE,
+                         ids=["ec42_at_8", "ec83_at_12"])
+def test_ec_wide_geometry_roundtrip_degraded_rebuild(ec, n, doms):
+    """ec(4,2)@8 and ec(8,3)@12 end-to-end: bit-exact roundtrip through
+    partial (delta) writes, degraded reads from any k survivors with up
+    to p targets down, and marker-driven rebuild after an outage
+    write."""
+    c = _client(n_targets=n, ec=ec, domains=doms)
+    k, p, cs = c.io._ec
+    assert (k, p) == ec and cs == EC_STRIPE_BYTES // k
+    fd = c.open("/f", create=True)
+    shadow = bytearray(_payload(2 * BLOCK + 12345, 71))
+    c.pwrite(fd, bytes(shadow), 0)
+    patch = _payload(cs + 77, 72)                 # partial: delta path
+    c.pwrite(fd, patch, cs // 2)
+    shadow[cs // 2:cs // 2 + len(patch)] = patch
+    assert c.io.ec_delta_writes >= 1
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    # p concurrent failures among stripe 0's own homes still decode
+    order = c.io._ec_order(_oid(c), 0)
+    for tid in order[:p]:
+        c.cluster.fail_target(tid)
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    ctr = c.io.data_path_counters()["ec"]
+    assert ctr["degraded_reads"] >= 1 and ctr["reconstructions"] >= p
+    # outage write marks the down homes; recovery rebuilds only those
+    fresh = _payload(BLOCK, 73)
+    c.pwrite(fd, fresh, 0)
+    shadow[:len(fresh)] = fresh
+    dirty = _dirty_union(c, k + p)
+    assert dirty
+    for (oid, dk), cells in dirty.items():
+        homes = {placement_order(n, oid, dk, tuple(doms))[i] for i in cells}
+        assert homes <= set(order[:p])
+    for tid in order[:p]:
+        c.cluster.recover_target(tid)
+    assert not _dirty_union(c, k + p)
+    assert c.pread(fd, len(shadow), 0) == bytes(shadow)
+    _assert_rings_whole(c)
+    c.close()
+
+
+def test_ec_wide_geometry_rejects_undersized_fleet():
+    with pytest.raises(ValueError):
+        _client(n_targets=5, ec=(4, 2))           # n < k + p
+    with pytest.raises(ValueError):
+        _client(n_targets=10, ec=(8, 3))
+
+
 def test_ec_add_target_placement_repair_rehomes_cells():
     c = _client()
     fd = c.open("/f", create=True)

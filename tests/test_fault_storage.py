@@ -541,7 +541,8 @@ SOAK_SCHEDULE = [
 
 @pytest.mark.parametrize("transport,redundancy,io_depth",
                          [("rdma", "rep", 1), ("tcp", "rep", 1),
-                          ("rdma", "ec", 1), ("rdma", "rep", 8)])
+                          ("rdma", "ec", 1), ("rdma", "ec8", 1),
+                          ("rdma", "rep", 8)])
 def test_seeded_crash_recovery_soak(transport, redundancy, io_depth):
     """A few hundred mixed striped ops while the injector fires at EVERY
     layer boundary reachable on this transport — wire errors and partial
@@ -558,16 +559,27 @@ def test_seeded_crash_recovery_soak(transport, redundancy, io_depth):
     cell-level media failure degrades (dirty marker + decode-around)
     instead of failing the op, and recovery rebuilds exactly the marked
     cells — degraded reads, reconstructions AND rebuilt cells must all
-    prove they fired."""
+    prove they fired.
+
+    The "ec8" variant widens to ec(4,2) over 8 targets in 4 fault
+    domains — the fleet-scale geometry — and additionally proves the
+    delta-parity RMW path under fire: partial writes to clean stripes
+    ride the delta path (delta_writes), and writes whose touched-data
+    or parity homes fall inside the outage window degrade to the
+    counted full re-encode (delta_fallbacks + the ec.delta_fallback
+    recovery class), all while staying bit-exact and leak-free."""
     inj = FaultInjector(schedule=SOAK_SCHEDULE, seed=1234)
-    ec = redundancy == "ec"
+    ec = redundancy in ("ec", "ec8")
+    wide = redundancy == "ec8"
     c = ROS2Client(mode="host", transport=transport,
-                   n_targets=4 if ec else 2,
+                   n_targets=(8 if wide else 4) if ec else 2,
                    n_devices=4, replication=3, write_quorum=2,
                    scrub_interval_s=None, fault_injector=inj,
                    io_depth=io_depth,
-                   ec=(2, 1) if ec else None,
-                   domains=["a", "a", "b", "b"] if ec else None)
+                   ec=((4, 2) if wide else (2, 1)) if ec else None,
+                   domains=(["a", "a", "b", "b", "c", "c", "d", "d"]
+                            if wide else ["a", "a", "b", "b"])
+                   if ec else None)
     # must-fire singles armed AFTER bring-up so connect/mount stay clean
     inj.arm("engine.crash", Fault("crash"), 4)
     if transport == "rdma":
@@ -577,6 +589,20 @@ def test_seeded_crash_recovery_soak(transport, redundancy, io_depth):
     span = 16 * BLOCK
     shadow = bytearray(span)
     c.pwrite(fd, bytes(shadow), 0)               # materialize the full file
+    vic = 1                                      # mid-soak outage victim
+    if wide:
+        # at 8 targets the jump-hash is lumpy enough that a fixed victim
+        # can turn out to home only parity slots (down-parity degrades
+        # WRITES, not reads) — fail the busiest DATA home instead so the
+        # outage window provably exercises reconstruction and the
+        # delta-path fallback
+        from collections import Counter
+        k_, p_, _cs = c.io._ec
+        oid0 = sorted({o for cont in c.ccontainer._per_target.values()
+                       for o in cont._objects})[0]
+        homes = Counter(tid for b in range(span // BLOCK)
+                        for tid in c.io._ec_order(oid0, b)[:k_])
+        vic = homes.most_common(1)[0][0]
     rng = np.random.default_rng(99)
     n_ops = 240
     for i in range(n_ops):
@@ -584,9 +610,9 @@ def test_seeded_crash_recovery_soak(transport, redundancy, io_depth):
             # membership churn mid-soak: the DOWN recall is lost (injector
             # drops the push), so the next op pays the stale-map trip
             inj.arm("map.push", Fault("drop"), 1)
-            c.cluster.fail_target(1)
+            c.cluster.fail_target(vic)
         elif i == 96:
-            c.cluster.recover_target(1)          # resync heals going home
+            c.cluster.recover_target(vic)        # resync heals going home
         in_outage = 80 <= i < 96
         off = int(rng.integers(0, span - 1))
         ln = int(rng.integers(1, min(int(2.5 * BLOCK), span - off) + 1))
@@ -643,6 +669,14 @@ def test_seeded_crash_recovery_soak(transport, redundancy, io_depth):
         assert counters["ec"]["rebuilt_cells"] >= 1
         assert rec.get("ec.degraded_read", 0) >= 1
         assert rec.get("ec.rebuilt", 0) >= 1
+        if wide:
+            # delta-RMW under fire: clean-stripe partial writes rode the
+            # delta path, outage-window writes fell back (counted both
+            # as a router counter and a recovery class)
+            assert counters["ec"]["delta_writes"] >= 1
+            assert counters["ec"]["delta_bytes_saved"] >= 1
+            assert counters["ec"]["delta_fallbacks"] >= 1
+            assert rec.get("ec.delta_fallback", 0) >= 1
         from repro.core.object_store import EC_DIRTY_AKEY
         c.cluster.resync()                       # drain any late markers
         for cont in c.ccontainer._per_target.values():

@@ -11,9 +11,11 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.kernels.rs_parity import ec_decode, ec_encode  # noqa: E402
+from repro.kernels.rs_parity import (ec_decode, ec_encode,  # noqa: E402
+                                     ec_parity_delta)
 from repro.kernels.rs_parity.ref import (cauchy_matrix, gf_inv,  # noqa: E402
-                                         gf_mul, rs_decode_np, rs_encode_np)
+                                         gf_mul, rs_decode_np, rs_encode_np,
+                                         rs_parity_delta_np)
 
 
 @st.composite
@@ -95,3 +97,47 @@ def test_cauchy_generator_is_mds(k, p):
 @given(st.integers(1, 255))
 def test_gf_inverse(x):
     assert gf_mul(x, gf_inv(x)) == 1
+
+
+@st.composite
+def _delta_case(draw):
+    """A stripe plus an arbitrary partial overwrite: any non-empty subset
+    of the k data cells, each touched over its own sub-window."""
+    k = draw(st.integers(1, 8))
+    p = draw(st.integers(1, 3))
+    size = draw(st.integers(1, 257))
+    n_touch = draw(st.integers(1, k))
+    touched = sorted(draw(st.sets(st.integers(0, k - 1),
+                                  min_size=n_touch, max_size=n_touch)))
+    windows = []
+    for _ in touched:
+        lo = draw(st.integers(0, size - 1))
+        ln = draw(st.integers(1, size - lo))
+        windows.append((lo, ln))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return k, p, size, touched, windows, seed
+
+
+@settings(max_examples=60, deadline=None)
+@given(_delta_case())
+def test_delta_parity_matches_full_reencode(case):
+    """GF(256) linearity, the property the client's delta-RMW write path
+    rides: for ANY sub-cell overwrite of ANY subset of data cells,
+    P' = P xor ec_parity_delta(touched, old xor new) equals the parity of
+    a full re-encode — so updating only the touched cells' deltas is
+    bit-exact across every (k, p) <= (8, 3)."""
+    k, p, size, touched, windows, seed = case
+    rng = np.random.default_rng(seed)
+    cells = rng.integers(0, 256, (k, size), dtype=np.uint8)
+    parity = rs_encode_np(cells, p)
+    new_cells = cells.copy()
+    deltas = np.zeros((len(touched), size), np.uint8)
+    for r, (i, (lo, ln)) in enumerate(zip(touched, windows)):
+        fresh = rng.integers(0, 256, ln, dtype=np.uint8)
+        deltas[r, lo:lo + ln] = new_cells[i, lo:lo + ln] ^ fresh
+        new_cells[i, lo:lo + ln] = fresh
+    pdelta = np.asarray(ec_parity_delta(k, p, touched, deltas))
+    np.testing.assert_array_equal(pdelta,
+                                  rs_parity_delta_np(k, p, touched, deltas))
+    np.testing.assert_array_equal(parity ^ pdelta,
+                                  rs_encode_np(new_cells, p))
